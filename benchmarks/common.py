@@ -1,0 +1,129 @@
+"""Shared benchmark harness utilities (perftest analogues)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import shift as S
+from repro.core import verbs as V
+from repro.core.fabric import build_cluster
+
+
+class BenchEndpoint:
+    def __init__(self, lib, nic="mlx5_0", buf_size=1 << 22, cq_depth=1 << 16):
+        self.lib = lib
+        self.ctx = lib.open_device(nic)
+        self.pd = lib.alloc_pd(self.ctx)
+        self.buf = np.zeros(buf_size, dtype=np.uint8)
+        self.mr = lib.reg_mr(self.pd, self.buf)
+        self.cq = lib.create_cq(self.ctx, cq_depth)
+        self.qp = lib.create_qp(self.pd, V.QPInitAttr(
+            send_cq=self.cq, recv_cq=self.cq,
+            cap=V.QPCap(max_send_wr=8192, max_recv_wr=8192)))
+
+    def poll(self, n=4096):
+        return self.lib.poll_cq(self.cq, n)
+
+
+def make_pair(lib_kind: str, probe_interval=20e-3, **cluster_kw):
+    V.reset_registries()
+    c = build_cluster(n_hosts=2, nics_per_host=2, **cluster_kw)
+    if lib_kind == "shift":
+        cfg = S.ShiftConfig(probe_interval=probe_interval)
+        lib_a = S.ShiftLib(c, "host0", config=cfg)
+        lib_b = S.ShiftLib(c, "host1", kv=lib_a.kv, config=cfg)
+    else:
+        lib_a = S.StandardLib(c, "host0")
+        lib_b = S.StandardLib(c, "host1")
+    a, b = BenchEndpoint(lib_a), BenchEndpoint(lib_b)
+    lib_a.connect(a.qp, *lib_b.route_of(b.qp))
+    lib_b.connect(b.qp, *lib_a.route_of(a.qp))
+    lib_a.settle(0.05)
+    return c, a, b
+
+
+class TrafficPump:
+    """perftest-style traffic generator: keeps `depth` ops outstanding.
+
+    op: "write" (ib_write_bw), "send" (ib_send_bw), "read" (ib_read_bw).
+    Samples completed bytes per `sample_dt` of simulated time.
+    """
+
+    def __init__(self, c, src: BenchEndpoint, dst: BenchEndpoint,
+                 op: str = "write", msg_size: int = 1 << 18, depth: int = 16,
+                 sample_dt: float = 1.0):
+        self.c = c
+        self.src = src
+        self.dst = dst
+        self.op = op
+        self.msg = msg_size
+        self.depth = depth
+        self.sample_dt = sample_dt
+        self.seq = 0
+        self.outstanding = 0
+        self.completed_bytes = 0
+        self.samples = []
+        self.dead = False
+        self._t0 = c.sim.now
+
+    def _post_one(self):
+        i = self.seq
+        self.seq += 1
+        off = (i % 8) * self.msg
+        try:
+            if self.op == "write":
+                self.src.lib.post_send(self.src.qp, V.SendWR(
+                    wr_id=i, opcode=V.Opcode.WRITE,
+                    sge=V.SGE(self.src.mr.addr + off, self.msg,
+                              self.src.mr.lkey),
+                    remote_addr=self.dst.mr.addr + off,
+                    rkey=self.dst.mr.rkey))
+            elif self.op == "read":
+                self.src.lib.post_send(self.src.qp, V.SendWR(
+                    wr_id=i, opcode=V.Opcode.READ,
+                    sge=V.SGE(self.src.mr.addr + off, self.msg,
+                              self.src.mr.lkey),
+                    remote_addr=self.dst.mr.addr + off,
+                    rkey=self.dst.mr.rkey))
+            else:  # send
+                self.dst.lib.post_recv(self.dst.qp, V.RecvWR(
+                    wr_id=i, sge=V.SGE(self.dst.mr.addr + off, self.msg,
+                                       self.dst.mr.lkey)))
+                self.src.lib.post_send(self.src.qp, V.SendWR(
+                    wr_id=i, opcode=V.Opcode.SEND,
+                    sge=V.SGE(self.src.mr.addr + off, self.msg,
+                              self.src.mr.lkey)))
+            self.outstanding += 1
+        except V.VerbsError:
+            self.dead = True
+
+    def _tick(self):
+        # drain completions
+        for wc in self.src.poll():
+            if wc.is_error:
+                self.dead = True
+                self.outstanding -= 1
+                continue
+            if wc.opcode in (V.WCOpcode.RDMA_WRITE, V.WCOpcode.SEND,
+                             V.WCOpcode.RDMA_READ):
+                self.outstanding -= 1
+                self.completed_bytes += self.msg
+        self.dst.poll()
+        while not self.dead and self.outstanding < self.depth:
+            self._post_one()
+        if self.dead and self.outstanding == 0:
+            return
+        self.c.sim.schedule(50e-6, self._tick)
+
+    def run(self, duration: float):
+        self._tick()
+        t_end = self.c.sim.now + duration
+        next_sample = self.c.sim.now + self.sample_dt
+        while self.c.sim.now < t_end:
+            upto = min(next_sample, t_end)
+            self.c.sim.run(until=upto)
+            if self.c.sim.now >= next_sample - 1e-9:
+                self.samples.append(self.completed_bytes)
+                self.completed_bytes = 0
+                next_sample += self.sample_dt
+        return self.samples

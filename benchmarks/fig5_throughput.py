@@ -1,0 +1,62 @@
+"""Fig. 5: throughput timelines under failure injection.
+
+perftest analogues (ib_send_bw / ib_write_bw / ib_read_bw) with a failure
+injected at t=5s and recovered at t=10s, for three failure scenarios x
+{standard, SHIFT}. Standard RDMA terminates on failure; SHIFT falls back
+to the backup RNIC and reverts on recovery.
+"""
+
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import TrafficPump, make_pair  # noqa: E402
+
+
+SCENARIOS = {
+    "initiator_nic": ("host0/mlx5_0", "nic"),
+    "responder_nic": ("host1/mlx5_0", "nic"),
+    "switch_port": ("host0/mlx5_0", "port"),
+}
+
+
+def run_one(lib_kind: str, op: str, scenario: str,
+            duration: float = 15.0, msg_size: int = 1 << 18):
+    c, a, b = make_pair(lib_kind, probe_interval=50e-3)
+    victim, kind = SCENARIOS[scenario]
+    t0 = c.sim.now
+    if kind == "nic":
+        c.sim.at(t0 + 5.0, c.fail_nic, victim)
+        c.sim.at(t0 + 10.0, c.recover_nic, victim)
+    else:
+        c.sim.at(t0 + 5.0, c.fail_switch_port, victim)
+        c.sim.at(t0 + 10.0, c.recover_switch_port, victim)
+    pump = TrafficPump(c, a, b, op=op, msg_size=msg_size)
+    samples = pump.run(duration)
+    gbps = [s * 8 / 1e9 for s in samples]
+    return gbps
+
+
+def main(quick: bool = False):
+    ops = ["write"] if quick else ["send", "write", "read"]
+    scenarios = ["initiator_nic"] if quick else list(SCENARIOS)
+    rows = []
+    for op in ops:
+        for sc in scenarios:
+            for lib in ("standard", "shift"):
+                gbps = run_one(lib, op, sc, duration=15.0)
+                # derived: pre-failure bw, during-failure bw, post-recovery
+                pre = sum(gbps[1:4]) / 3
+                dur = sum(gbps[6:9]) / 3
+                post = sum(gbps[11:14]) / 3
+                rows.append((f"fig5/{op}/{sc}/{lib}", pre, dur, post, gbps))
+                print(f"{op:5s} {sc:14s} {lib:8s}  "
+                      f"pre={pre:6.1f} Gb/s  during={dur:6.1f}  "
+                      f"post={post:6.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

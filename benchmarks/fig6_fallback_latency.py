@@ -1,0 +1,43 @@
+"""Fig. 6(b): fallback latency — interval between polling the first failed
+WC and the first successful WC after falling back to the backup RNIC."""
+
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import TrafficPump, make_pair  # noqa: E402
+
+
+def run_one(scenario: str, op: str = "write"):
+    c, a, b = make_pair("shift")
+    t0 = c.sim.now
+    if scenario == "initiator_nic":
+        c.sim.at(t0 + 0.5, c.fail_nic, "host0/mlx5_0")
+    elif scenario == "responder_nic":
+        c.sim.at(t0 + 0.5, c.fail_nic, "host1/mlx5_0")
+    else:
+        c.sim.at(t0 + 0.5, c.fail_switch_port, "host0/mlx5_0")
+    pump = TrafficPump(c, a, b, op=op, msg_size=1 << 16, sample_dt=0.5)
+    pump.run(2.0)
+    lats = (a.lib.stats.fallback_latencies +
+            b.lib.stats.fallback_latencies)
+    return lats
+
+
+def main(quick: bool = False):
+    out = []
+    for sc in ("initiator_nic", "responder_nic", "switch_port"):
+        for op in (("write",) if quick else ("write", "send", "read")):
+            lats = run_one(sc, op)
+            ms = [l * 1e3 for l in lats]
+            val = min(ms) if ms else float("nan")
+            out.append((f"fig6b/{sc}/{op}", val))
+            print(f"{sc:14s} {op:5s}  fallback latency = {val:.2f} ms "
+                  f"(n={len(ms)})")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""Fig. 8: distributed training progress under network anomalies.
+
+Five settings on DDP training with JCCL gradient sync (the paper's §5.2
+PyTorch experiment as a JAX system; GPT-2-family model, reduced by default
+so the benchmark runs in seconds — pass full=True for the 124M config):
+
+  (1) no failure                         (upper bound)
+  (2) fatal failure, checkpoint-restart  (baseline: crash + reschedule +
+                                          retrain from last checkpoint)
+  (3) fatal failure, SHIFT + busy backup (continue until next checkpoint,
+                                          graceful stop + reschedule)
+  (4) fatal failure, SHIFT + idle backup (continue, no interference)
+  (5) NIC flapping, SHIFT + busy backup  (fallback + automatic recovery)
+"""
+
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from repro import configs as C  # noqa: E402
+from repro.collectives import JcclWorld  # noqa: E402
+from repro.core import shift as S  # noqa: E402
+from repro.core import verbs as V  # noqa: E402
+from repro.core.fabric import build_cluster  # noqa: E402
+from repro.train.trainer import (DDPTrainer, RestartNeeded, TrainerConfig,
+                                 resume_training)  # noqa: E402
+
+
+def build_world(lib_kind: str, n_ranks: int = 2, busy_backup: bool = False):
+    V.reset_registries()
+    c = build_cluster(n_hosts=n_ranks, nics_per_host=2)
+    if lib_kind == "shift":
+        cfg = S.ShiftConfig(probe_interval=20e-3)
+        kv = None
+        libs = []
+        for r in range(n_ranks):
+            lib = S.ShiftLib(c, f"host{r}", kv=kv, config=cfg)
+            kv = lib.kv
+            libs.append(lib)
+    else:
+        libs = [S.StandardLib(c, f"host{r}") for r in range(n_ranks)]
+    if busy_backup:
+        for h in range(n_ranks):
+            c.nic_by_gid[f"host{h}/mlx5_1"].background_flows = 2
+    world = JcclWorld(c, libs, max_chunk_bytes=1 << 20)
+    return c, libs, world
+
+
+def run_scenario(name: str, lib_kind: str, fail_step: int, steps: int,
+                 flap: bool = False, busy_backup: bool = False,
+                 stop_at_ckpt: bool = False, full: bool = False,
+                 ckpt_dir: str = "/tmp/repro-fig8"):
+    model_cfg = (C.get_config("gpt2-124m") if full
+                 else C.smoke_config("gpt2-124m", n_layers=4, d_model=256,
+                                     n_heads=8, n_kv_heads=8, d_ff=1024,
+                                     vocab=2048))
+    c, libs, world = build_world(lib_kind, busy_backup=busy_backup)
+    tcfg = TrainerConfig(steps=steps, ckpt_every=max(steps // 4, 5),
+                         ckpt_dir=f"{ckpt_dir}-{name}",
+                         stop_at_next_ckpt_after_fallback=stop_at_ckpt)
+    import shutil
+    shutil.rmtree(tcfg.ckpt_dir, ignore_errors=True)
+    trainer = DDPTrainer(c, libs, model_cfg, tcfg,
+                         batch_per_rank=2 if not full else 4,
+                         seq_len=64 if not full else 512)
+
+    fail_done = [False]
+
+    def on_step(step, t, loss):
+        if fail_step and step == fail_step and not fail_done[0]:
+            fail_done[0] = True
+            c.fail_nic("host1/mlx5_0")
+            if flap:
+                # interface flap: the default NIC comes back after ~200ms
+                # of network time (the sim clock only advances inside
+                # collectives, so keep this short relative to the run)
+                c.sim.at(c.sim.now + 0.2, c.recover_nic, "host1/mlx5_0")
+
+    try:
+        run = trainer.train(world, on_step=on_step)
+    except RestartNeeded as rn:
+        # harness recovers the NIC (anomaly resolution / migration), then
+        # the job is rescheduled and resumed from the last checkpoint
+        c.recover_nic("host1/mlx5_0")
+        c2, libs2, world2 = build_world(lib_kind)
+        trainer.cluster = c2
+        trainer.libs = libs2
+        run = resume_training(trainer, world2, rn, on_step=None)
+    return run
+
+
+def main(quick: bool = False, full: bool = False):
+    steps = 24 if quick else 60
+    fail_at = steps // 3
+    rows = []
+    scenarios = [
+        ("no_failure", dict(lib_kind="shift", fail_step=0)),
+        ("ckpt_restart", dict(lib_kind="standard", fail_step=fail_at)),
+        ("shift_busy", dict(lib_kind="shift", fail_step=fail_at,
+                            busy_backup=True, stop_at_ckpt=True)),
+        ("shift_idle", dict(lib_kind="shift", fail_step=fail_at)),
+        ("shift_flapping", dict(lib_kind="shift", fail_step=fail_at,
+                                flap=True, busy_backup=True)),
+    ]
+    print(f"{'scenario':16s} {'steps':>6s} {'final t(s)':>10s} "
+          f"{'restarts':>8s} {'fallbk':>6s} {'recov':>6s} "
+          f"{'resched(s)':>10s} {'retrain(s)':>10s} {'loss':>8s}")
+    base_t = None
+    for name, kw in scenarios:
+        run = run_scenario(name, steps=steps, full=full, **kw)
+        t_final = run.timeline[-1][0] if run.timeline else float("nan")
+        loss = run.timeline[-1][2] if run.timeline else float("nan")
+        if name == "no_failure":
+            base_t = t_final
+        slowdown = t_final - base_t if base_t else 0.0
+        rows.append((f"fig8/{name}", t_final, run.restarts,
+                     run.fallbacks, run.recoveries,
+                     run.slowdown_reschedule, run.slowdown_retrain, loss))
+        print(f"{name:16s} {run.final_step:6d} {t_final:10.2f} "
+              f"{run.restarts:8d} {run.fallbacks:6d} {run.recoveries:6d} "
+              f"{run.slowdown_reschedule:10.1f} "
+              f"{run.slowdown_retrain:10.1f} {loss:8.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(quick="--quick" in sys.argv, full="--full" in sys.argv)

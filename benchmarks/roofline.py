@@ -1,0 +1,74 @@
+"""Render the §Dry-run / §Roofline tables for EXPERIMENTS.md from the
+dry-run sweep JSONs (results/dryrun_pod.json, results/dryrun_multipod.json).
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+from typing import List
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def render(pod_path: str, multipod_path: str = None) -> str:
+    rows = json.load(open(pod_path))
+    mp = {}
+    if multipod_path:
+        try:
+            for r in json.load(open(multipod_path)):
+                mp[(r.get("arch"), r.get("shape"))] = r
+        except FileNotFoundError:
+            pass
+    out: List[str] = []
+    out.append("| arch | shape | fits (pod) | bytes/dev | mp compile "
+               "| t_comp | t_mem | t_coll | bottleneck | 6ND/HLO "
+               "| roofline frac |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP | - | - | - | "
+                       f"- | - | {r['reason'][:40]}... | - | - |")
+            continue
+        if r.get("error"):
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | "
+                       f"{r['error'][:50]} | | | | | | | |")
+            continue
+        m = mp.get((r["arch"], r["shape"]))
+        mp_ok = ("ok" if m and not m.get("error") and not m.get("skipped")
+                 else ("skip" if m and m.get("skipped") else
+                       ("ERR" if m else "?")))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{'Y' if r.get('fits_16gb_hbm') else 'N'} | "
+            f"{fmt_bytes(r.get('bytes_per_device'))} | {mp_ok} | "
+            f"{fmt_s(r.get('t_compute_s'))} | {fmt_s(r.get('t_memory_s'))} | "
+            f"{fmt_s(r.get('t_collective_s'))} | "
+            f"{r.get('bottleneck', '-')} | "
+            f"{r.get('useful_flops_ratio', 0):.2f} | "
+            f"{r.get('roofline_fraction', 0):.3f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    pod = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_pod.json"
+    mpp = sys.argv[2] if len(sys.argv) > 2 else "results/dryrun_multipod.json"
+    print(render(pod, mpp))

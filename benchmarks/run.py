@@ -1,0 +1,78 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (quick-mode defaults so the
+full suite completes in minutes; each module's ``main()`` runs the full
+configuration standalone)."""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import numpy as np  # noqa: E402
+
+
+def fig5_throughput_rows():
+    from benchmarks import fig5_throughput
+    rows = fig5_throughput.main(quick=True)
+    out = []
+    for name, pre, dur, post, _ in rows:
+        out.append((name, float("nan"),
+                    f"pre={pre:.1f}Gbps|during={dur:.1f}|post={post:.1f}"))
+    return out
+
+
+def fig6_fallback_rows():
+    from benchmarks import fig6_fallback_latency
+    rows = fig6_fallback_latency.main(quick=True)
+    return [(name, ms * 1e3, f"{ms:.3f}ms") for name, ms in rows]
+
+
+def fig7_verbs_rows():
+    from benchmarks import fig7_verb_overhead
+    rows = fig7_verb_overhead.main(quick=True)
+    return [(name, sh, f"std={std:.2f}us|ratio={ratio:.2f}")
+            for name, std, sh, ratio in rows]
+
+
+def table2_latency_rows():
+    from benchmarks import table2_write_latency
+    rows = table2_write_latency.main(quick=True)
+    return [(name, m, f"std={s:.2f}") for name, m, s in rows]
+
+
+def fig8_training_rows():
+    from benchmarks import fig8_training
+    rows = fig8_training.main(quick=True)
+    out = []
+    for (name, t_final, restarts, fallbacks, recoveries,
+         resched, retrain, loss) in rows:
+        out.append((name, t_final * 1e6,
+                    f"restarts={restarts}|fallbacks={fallbacks}|"
+                    f"recov={recoveries}|slowdown={resched + retrain:.1f}s|"
+                    f"loss={loss:.3f}"))
+    return out
+
+
+def main() -> None:
+    sections = [
+        ("fig7 (verb overhead)", fig7_verbs_rows),
+        ("table2 (write latency)", table2_latency_rows),
+        ("fig6b (fallback latency)", fig6_fallback_rows),
+        ("fig5 (throughput failover)", fig5_throughput_rows),
+        ("fig8 (training progress)", fig8_training_rows),
+    ]
+    print("name,us_per_call,derived")
+    for title, fn in sections:
+        print(f"# --- {title} ---", flush=True)
+        for name, us, derived in fn():
+            us_s = f"{us:.3f}" if np.isfinite(us) else ""
+            print(f"{name},{us_s},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

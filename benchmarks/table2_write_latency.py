@@ -1,0 +1,69 @@
+"""Table 2: end-to-end small-message write latency (simulated network time),
+standard vs SHIFT vs standard + 1000 idle QPs (the QP-cache-pressure test).
+
+SHIFT's datapath adds no simulated network time by construction (the
+zero-copy claim); the 1000-idle-QP column validates that idle backup QPs
+cost nothing (the paper's §5.1.2 result — idle QPs don't occupy the NIC
+cache in our model either)."""
+
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np  # noqa: E402
+
+from benchmarks.common import make_pair, BenchEndpoint  # noqa: E402
+from repro.core import verbs as V  # noqa: E402
+
+
+def measure_latency(c, a, b, sizes=(1, 2, 4, 8, 16), reps=200):
+    out = {}
+    for size in sizes:
+        lats = []
+        for i in range(reps):
+            t0 = c.sim.now
+            a.lib.post_send(a.qp, V.SendWR(
+                wr_id=i, opcode=V.Opcode.WRITE,
+                sge=V.SGE(a.mr.addr, size, a.mr.lkey),
+                remote_addr=b.mr.addr, rkey=b.mr.rkey))
+            # run until the completion arrives
+            while True:
+                wcs = a.poll(4)
+                if wcs:
+                    break
+                if not c.sim.step():
+                    break
+            lats.append((c.sim.now - t0) * 1e6)
+        out[size] = (float(np.mean(lats)), float(np.std(lats)))
+    return out
+
+
+def main(quick: bool = False):
+    reps = 50 if quick else 500
+    rows = []
+    results = {}
+    for kind in ("standard", "shift"):
+        c, a, b = make_pair(kind)
+        results[kind] = measure_latency(c, a, b, reps=reps)
+    # standard + 1000 idle QPs
+    c, a, b = make_pair("standard")
+    for _ in range(1000):
+        V.ibv_create_qp(a.pd, V.QPInitAttr(send_cq=a.cq, recv_cq=a.cq))
+    results["standard_1000qp"] = measure_latency(c, a, b, reps=reps)
+
+    print(f"{'bytes':>6s} {'standard':>16s} {'SHIFT':>16s} "
+          f"{'std w/ 1000 QP':>16s}")
+    for size in (1, 2, 4, 8, 16):
+        line = [f"{size:6d}"]
+        for kind in ("standard", "shift", "standard_1000qp"):
+            m, s = results[kind][size]
+            line.append(f"{m:8.2f}+-{s:5.2f}")
+            rows.append((f"table2/{kind}/{size}B", m, s))
+        print(" ".join(line))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

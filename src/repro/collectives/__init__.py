@@ -1,0 +1,10 @@
+"""JCCL — an NCCL-like collective library over SHIFT-protected RDMA.
+
+Implements the paper's Table-1 'NCCL (Simple)' protocol: bulk RDMA Writes
+followed by a Write-with-Imm notification, which is exactly the traffic
+class SHIFT can fail over safely. See DESIGN.md §2 for how this maps the
+paper's GPU/NCCL placement onto a JAX training system (cross-host gradient
+sync / DCN-side traffic).
+"""
+
+from .world import JcclWorld, CollectiveError, RankEndpoint  # noqa: F401

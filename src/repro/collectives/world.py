@@ -1,0 +1,595 @@
+"""JCCL communicator world: rank endpoints, QP mesh, staging buffers, and
+the event-driven collective engine (ring/direct algorithms).
+
+Everything runs as actors on the cluster's deterministic event loop, so
+failures can be injected at ANY point inside a collective and the result
+is still reproducible. With ``ShiftLib`` endpoints, NIC/link failures are
+masked (the collective completes, possibly slower); with ``StandardLib``
+endpoints the collective aborts with ``CollectiveError`` — the paper's
+crash-stop baseline.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import verbs as V
+from repro.core.fabric import Cluster
+from repro.core.shift import ShiftLib, StandardLib, ShiftCQ
+
+
+class CollectiveError(RuntimeError):
+    pass
+
+
+class _ListenedCQ:
+    """StandardLib CQ with a completion-channel push listener (the ShiftCQ
+    equivalent of app_listener for the baseline library)."""
+
+    def __init__(self, ctx: V.Context, depth: int):
+        self.channel = V.ibv_create_comp_channel(ctx)
+        self.cq = V.ibv_create_cq(ctx, depth, self.channel)
+        self.channel.on_event(self._on_event)
+        V.ibv_req_notify_cq(self.cq)
+        self.app_listener: Optional[Callable[[List[V.WC]], None]] = None
+
+    def _on_event(self, cq: V.CQ) -> None:
+        V.ibv_req_notify_cq(cq)
+        self.drain()
+
+    def drain(self) -> None:
+        out = []
+        while True:
+            wcs = self.cq.poll(64)
+            if not wcs:
+                break
+            out.extend(wcs)
+        if out and self.app_listener is not None:
+            self.app_listener(out)
+
+
+class RankEndpoint:
+    """One collective rank: device/PD/MRs/CQ + a QP per peer."""
+
+    def __init__(self, world: "JcclWorld", rank: int, lib, nic: str):
+        self.world = world
+        self.rank = rank
+        self.lib = lib
+        self.nic = nic
+        self.ctx = lib.open_device(nic)
+        self.pd = lib.alloc_pd(self.ctx)
+        n = world.n_ranks
+        slot = world.max_chunk_bytes
+        # staging: per peer, double-buffered inbound slots
+        self.staging = np.zeros(n * 2 * slot, dtype=np.uint8)
+        self.staging_mr = lib.reg_mr(self.pd, self.staging)
+        # Outbound FIFO: per peer, K slots. A slot may only be reused once
+        # the send that references it has COMPLETED (ACKed or synthesized):
+        # payloads are DMA-read at (re)transmit time, so reusing the slot
+        # of an unACKed send would corrupt a post-failover retransmission.
+        # This mirrors NCCL's completion-gated FIFO reuse.
+        self.K = world.src_slots
+        self.src = np.zeros(n * self.K * slot, dtype=np.uint8)
+        self.src_mr = lib.reg_mr(self.pd, self.src)
+        self.send_completed: Dict[int, int] = {}
+        self.pending_sends: Dict[int, List] = {}
+        if isinstance(lib, ShiftLib):
+            self.cq: ShiftCQ = lib.create_cq(self.ctx, world.cq_depth)
+            self._listened = None
+        else:
+            self._listened = _ListenedCQ(self.ctx, world.cq_depth)
+            self.cq = self._listened.cq
+        self.qps: Dict[int, object] = {}       # peer rank -> QP
+        self.qp_of_qpn: Dict[int, int] = {}    # qpn -> peer rank
+        self.send_seq: Dict[int, int] = {}
+        self.recv_seq: Dict[int, int] = {}
+        self.errors: List[V.WC] = []
+        self._handlers: Dict[int, object] = {}  # active collective
+
+    # -- wiring ---------------------------------------------------------
+    def make_qp(self, peer: int):
+        if isinstance(self.lib, ShiftLib):
+            qp = self.lib.create_qp(self.pd, V.QPInitAttr(
+                send_cq=self.cq, recv_cq=self.cq,
+                cap=V.QPCap(self.world.qp_depth, self.world.qp_depth)))
+        else:
+            qp = self.lib.create_qp(self.pd, V.QPInitAttr(
+                send_cq=self.cq, recv_cq=self.cq,
+                cap=V.QPCap(self.world.qp_depth, self.world.qp_depth)))
+        self.qps[peer] = qp
+        self.qp_of_qpn[qp.qpn] = peer
+        self.send_seq[peer] = 0
+        self.recv_seq[peer] = 0
+        self.send_completed[peer] = 0
+        self.pending_sends[peer] = []
+        return qp
+
+    def attach_listener(self, fn: Callable[[List[V.WC]], None]) -> None:
+        if isinstance(self.lib, ShiftLib):
+            self.cq.app_listener = fn
+        else:
+            self._listened.app_listener = fn
+
+    # -- staging layout ---------------------------------------------------
+    def staging_slot_addr(self, peer: int, parity: int) -> int:
+        slot = self.world.max_chunk_bytes
+        off = (peer * 2 + parity) * slot
+        return self.staging_mr.addr + off
+
+    def staging_slot_view(self, peer: int, parity: int, nbytes: int) -> np.ndarray:
+        slot = self.world.max_chunk_bytes
+        off = (peer * 2 + parity) * slot
+        return self.staging[off:off + nbytes]
+
+    # -- data-plane helpers -------------------------------------------------
+    def post_recv_notify(self, peer: int) -> None:
+        self.lib.post_recv(self.qps[peer], V.RecvWR(wr_id=peer))
+
+    def send_chunk(self, peer: int, payload: np.ndarray, parity: int) -> None:
+        """NCCL-Simple message: bulk WRITE (unsignaled) into the peer's
+        staging slot + WRITE_IMM notification (signaled). If all outbound
+        FIFO slots for this peer are in flight, the payload is held until
+        a completion frees one (completion-gated reuse)."""
+        if self.send_seq[peer] - self.send_completed[peer] >= self.K:
+            self.pending_sends[peer].append(
+                (payload.view(np.uint8).ravel().copy(), parity))
+            return
+        self._post_chunk(peer, payload.view(np.uint8).ravel(), parity)
+
+    def _post_chunk(self, peer: int, raw: np.ndarray, parity: int) -> None:
+        nbytes = raw.nbytes
+        seq = self.send_seq[peer]
+        self.send_seq[peer] = seq + 1
+        src_off = (peer * self.K + seq % self.K) * self.world.max_chunk_bytes
+        self.src[src_off:src_off + nbytes] = raw
+        remote = self.world.endpoints[peer]
+        remote_addr = remote.staging_slot_addr(self.rank, parity)
+        qp = self.qps[peer]
+        if nbytes:
+            self.lib.post_send(qp, V.SendWR(
+                wr_id=seq, opcode=V.Opcode.WRITE,
+                sge=V.SGE(self.src_mr.addr + src_off, nbytes, self.src_mr.lkey),
+                remote_addr=remote_addr, rkey=remote.staging_mr.rkey,
+                send_flags=0))
+        self.lib.post_send(qp, V.SendWR(
+            wr_id=seq, opcode=V.Opcode.WRITE_IMM, sge=None,
+            remote_addr=0, rkey=remote.staging_mr.rkey,
+            imm_data=seq & 0x0FFFFFFF,
+            send_flags=V.SEND_FLAG_SIGNALED))
+
+    def on_send_complete(self, peer: int) -> None:
+        self.send_completed[peer] += 1
+        if self.pending_sends[peer] and (
+                self.send_seq[peer] - self.send_completed[peer] < self.K):
+            raw, parity = self.pending_sends[peer].pop(0)
+            self._post_chunk(peer, raw, parity)
+
+
+class JcclWorld:
+    """All ranks of one communicator + the collective engine."""
+
+    def __init__(self, cluster: Cluster, libs: Sequence, nic: str = "mlx5_0",
+                 max_chunk_bytes: int = 1 << 22, qp_depth: int = 8192,
+                 cq_depth: int = 1 << 17, recv_prepost: int = 64,
+                 src_slots: int = 4):
+        self.cluster = cluster
+        self.sim = cluster.sim
+        self.n_ranks = len(libs)
+        self.max_chunk_bytes = max_chunk_bytes
+        self.qp_depth = qp_depth
+        self.cq_depth = cq_depth
+        self.recv_prepost = recv_prepost
+        self.src_slots = src_slots
+        self.endpoints: List[RankEndpoint] = [
+            RankEndpoint(self, r, lib, nic) for r, lib in enumerate(libs)]
+        # full QP mesh + app-level OOB route exchange
+        for i, j in itertools.combinations(range(self.n_ranks), 2):
+            qi, qj = self.endpoints[i].make_qp(j), self.endpoints[j].make_qp(i)
+            gi, ni = self.endpoints[i].lib.route_of(qi)
+            gj, nj = self.endpoints[j].lib.route_of(qj)
+            self.endpoints[i].lib.connect(qi, gj, nj)
+            self.endpoints[j].lib.connect(qj, gi, ni)
+        for ep in self.endpoints:
+            ep.attach_listener(lambda wcs, ep=ep: self._on_wcs(ep, wcs))
+            for peer in ep.qps:
+                for _ in range(recv_prepost):
+                    ep.post_recv_notify(peer)
+        # settle shadow control verbs (no-op for StandardLib worlds)
+        self.sim.run(until=self.sim.now + 0.05)
+        self._active: Optional["_Collective"] = None
+        self.failed = False
+        self.fail_wc: Optional[V.WC] = None
+
+    # ------------------------------------------------------------------
+    # completion routing
+    # ------------------------------------------------------------------
+    def _on_wcs(self, ep: RankEndpoint, wcs: List[V.WC]) -> None:
+        for wc in wcs:
+            if wc.is_error:
+                ep.errors.append(wc)
+                self.failed = True
+                self.fail_wc = wc
+                continue
+            if wc.opcode is V.WCOpcode.RDMA_WRITE:
+                peer = ep.qp_of_qpn.get(wc.qp_num)
+                if peer is not None:
+                    ep.on_send_complete(peer)
+                continue
+            if wc.opcode is V.WCOpcode.RECV_RDMA_WITH_IMM:
+                peer = ep.qp_of_qpn.get(wc.qp_num)
+                if peer is None:
+                    continue
+                seq = ep.recv_seq[peer]
+                ep.recv_seq[peer] = seq + 1
+                # notification-ordering invariant (what SHIFT preserves)
+                assert wc.imm_data == seq & 0x0FFFFFFF, (
+                    f"rank {ep.rank}: notify out of order "
+                    f"({wc.imm_data} != {seq})")
+                ep.post_recv_notify(peer)
+                if self._active is not None:
+                    self._active.on_notify(ep.rank, peer, seq)
+
+    # ------------------------------------------------------------------
+    # collective driver
+    # ------------------------------------------------------------------
+    def _run(self, coll: "_Collective", timeout: float) -> None:
+        if self._active is not None:
+            raise CollectiveError("another collective is in flight")
+        self._active = coll
+        coll.start()
+        deadline = self.sim.now + timeout
+        while not coll.done():
+            if self.failed and not coll.tolerates_failure:
+                self._active = None
+                raise CollectiveError(f"collective aborted: {self.fail_wc}")
+            t = self.sim.peek_time()
+            if t is None or t > deadline:
+                self._active = None
+                if self.failed:
+                    raise CollectiveError(
+                        f"collective dead after failure: {self.fail_wc}")
+                raise CollectiveError("collective timed out")
+            self.sim.step()
+        self._active = None
+
+    @property
+    def any_shift(self) -> bool:
+        return any(isinstance(ep.lib, ShiftLib) for ep in self.endpoints)
+
+    # -- public API -------------------------------------------------------
+    def allreduce(self, arrays: List[np.ndarray], op: str = "sum",
+                  timeout: float = 120.0) -> List[np.ndarray]:
+        coll = _RingAllReduce(self, arrays, op)
+        self._run(coll, timeout)
+        return arrays
+
+    def reduce_scatter(self, arrays: List[np.ndarray], op: str = "sum",
+                       timeout: float = 120.0) -> List[np.ndarray]:
+        """After ring reduce-scatter, rank r owns chunk (r+1) % n of each
+        bucket; returns each rank's owned (fully reduced) elements."""
+        coll = _RingAllReduce(self, arrays, op, phases=("rs",))
+        self._run(coll, timeout)
+        n = self.n_ranks
+        out = []
+        for r in range(n):
+            own = (r + 1) % n
+            flat = arrays[r].reshape(-1)
+            parts = [flat[c0:c1] for c0, c1 in
+                     (coll._chunk_bounds(b, own)
+                      for b in range(coll.n_buckets))]
+            out.append(np.concatenate(parts) if parts else flat[:0])
+        return out
+
+    def all_gather(self, shards: List[np.ndarray],
+                   timeout: float = 120.0) -> List[np.ndarray]:
+        full = [np.concatenate([np.zeros_like(s) for s in shards])
+                for _ in range(self.n_ranks)]
+        for r, s in enumerate(shards):
+            off = sum(x.size for x in shards[:r])
+            full[r][off:off + s.size] = s
+        coll = _RingAllGather(self, full, [s.size for s in shards])
+        self._run(coll, timeout)
+        return full
+
+    def broadcast(self, array: np.ndarray, root: int = 0,
+                  timeout: float = 120.0) -> List[np.ndarray]:
+        outs = [array.copy() if r == root else np.zeros_like(array)
+                for r in range(self.n_ranks)]
+        coll = _PipelineBroadcast(self, outs, root)
+        self._run(coll, timeout)
+        return outs
+
+    def all_to_all(self, mats: List[np.ndarray],
+                   timeout: float = 120.0) -> List[np.ndarray]:
+        """mats[r] has shape (n_ranks, k): row j goes to rank j."""
+        outs = [np.zeros_like(m) for m in mats]
+        coll = _AllToAll(self, mats, outs)
+        self._run(coll, timeout)
+        return outs
+
+    def barrier(self, timeout: float = 60.0) -> None:
+        self.allreduce([np.zeros(self.n_ranks, dtype=np.float32)
+                        for _ in range(self.n_ranks)], timeout=timeout)
+
+
+# ---------------------------------------------------------------------------
+# collective algorithms (event-driven actors)
+# ---------------------------------------------------------------------------
+
+
+def _reduce(dst: np.ndarray, src: np.ndarray, op: str) -> None:
+    if op == "sum":
+        np.add(dst, src, out=dst)
+    elif op == "max":
+        np.maximum(dst, src, out=dst)
+    else:
+        raise ValueError(op)
+
+
+class _Collective:
+    tolerates_failure = False
+
+    def __init__(self, world: JcclWorld):
+        self.world = world
+        self.tolerates_failure = world.any_shift
+
+    def start(self) -> None:
+        raise NotImplementedError
+
+    def on_notify(self, rank: int, peer: int, seq: int) -> None:
+        raise NotImplementedError
+
+    def done(self) -> bool:
+        raise NotImplementedError
+
+
+class _RingAllReduce(_Collective):
+    """Chunked, bucketed ring all-reduce (reduce-scatter + all-gather)."""
+
+    def __init__(self, world: JcclWorld, arrays: List[np.ndarray],
+                 op: str = "sum", phases: Tuple[str, ...] = ("rs", "ag")):
+        super().__init__(world)
+        n = world.n_ranks
+        assert len(arrays) == n
+        self.op = op
+        self.phases = phases
+        self.arrays = arrays
+        self.flat = [a.reshape(-1) for a in arrays]
+        self.dtype = self.flat[0].dtype
+        self.itemsize = self.dtype.itemsize
+        total = self.flat[0].size
+        # bucket so one chunk fits the staging slot
+        max_chunk_elems = world.max_chunk_bytes // self.itemsize
+        self.bucket_elems = min(total, max_chunk_elems * n)
+        self.n_buckets = (total + self.bucket_elems - 1) // self.bucket_elems
+        # per-rank progress
+        self.recv_step = [0] * n          # notifications processed
+        self.total_steps = self.n_buckets * len(phases) * max(n - 1, 0)
+        self.done_ranks = 0
+        self._completed = [False] * n
+
+    # -- index helpers ------------------------------------------------------
+    def _chunk_bounds(self, bucket: int, chunk: int) -> Tuple[int, int]:
+        n = self.world.n_ranks
+        b0 = bucket * self.bucket_elems
+        b1 = min(b0 + self.bucket_elems, self.flat[0].size)
+        size = b1 - b0
+        per = (size + n - 1) // n
+        c0 = b0 + chunk * per
+        c1 = min(b0 + (chunk + 1) * per, b1)
+        return c0, max(c0, c1)
+
+    def _decode(self, step: int) -> Tuple[int, str, int]:
+        n1 = max(self.world.n_ranks - 1, 1)
+        per_bucket = len(self.phases) * n1
+        bucket = step // per_bucket
+        rem = step % per_bucket
+        phase = self.phases[rem // n1]
+        s = rem % n1
+        return bucket, phase, s
+
+    def _send_for_step(self, rank: int, step: int) -> None:
+        if step >= self.total_steps:
+            if not self._completed[rank]:
+                self._completed[rank] = True
+                self.done_ranks += 1
+            return
+        n = self.world.n_ranks
+        bucket, phase, s = self._decode(step)
+        if phase == "rs":
+            chunk = (rank - s) % n
+        else:
+            chunk = (rank + 1 - s) % n
+        c0, c1 = self._chunk_bounds(bucket, chunk)
+        payload = self.flat[rank][c0:c1]
+        right = (rank + 1) % n
+        self.world.endpoints[rank].send_chunk(right, payload, parity=step % 2)
+
+    def start(self) -> None:
+        n = self.world.n_ranks
+        if n == 1 or self.total_steps == 0:
+            self.done_ranks = n
+            for i in range(n):
+                self._completed[i] = True
+            return
+        for r in range(n):
+            self._send_for_step(r, 0)
+
+    def on_notify(self, rank: int, peer: int, seq: int) -> None:
+        n = self.world.n_ranks
+        left = (rank - 1) % n
+        if peer != left:
+            return
+        step = self.recv_step[rank]
+        self.recv_step[rank] = step + 1
+        bucket, phase, s = self._decode(step)
+        if phase == "rs":
+            chunk = (rank - s - 1) % n
+        else:
+            chunk = (rank - s) % n
+        c0, c1 = self._chunk_bounds(bucket, chunk)
+        nbytes = (c1 - c0) * self.itemsize
+        ep = self.world.endpoints[rank]
+        stage = ep.staging_slot_view(left, step % 2, nbytes).view(self.dtype)
+        if phase == "rs":
+            _reduce(self.flat[rank][c0:c1], stage, self.op)
+        else:
+            self.flat[rank][c0:c1] = stage
+        self._send_for_step(rank, step + 1)
+
+    def done(self) -> bool:
+        return self.done_ranks == self.world.n_ranks
+
+
+class _RingAllGather(_Collective):
+    """Ring all-gather over variable-size shards."""
+
+    def __init__(self, world: JcclWorld, full: List[np.ndarray],
+                 sizes: List[int]):
+        super().__init__(world)
+        self.full = [f.reshape(-1) for f in full]
+        self.sizes = sizes
+        self.offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(int)
+        self.dtype = self.full[0].dtype
+        self.itemsize = self.dtype.itemsize
+        n = world.n_ranks
+        self.total_steps = n - 1
+        self.recv_step = [0] * n
+        self.done_ranks = 0
+        self._completed = [False] * n
+
+    def _send(self, rank: int, step: int) -> None:
+        n = self.world.n_ranks
+        if step >= self.total_steps:
+            if not self._completed[rank]:
+                self._completed[rank] = True
+                self.done_ranks += 1
+            return
+        shard = (rank - step) % n
+        o0, o1 = self.offsets[shard], self.offsets[shard + 1]
+        self.world.endpoints[rank].send_chunk(
+            (rank + 1) % n, self.full[rank][o0:o1], parity=step % 2)
+
+    def start(self) -> None:
+        n = self.world.n_ranks
+        if n == 1:
+            self.done_ranks = 1
+            return
+        for r in range(n):
+            self._send(r, 0)
+
+    def on_notify(self, rank: int, peer: int, seq: int) -> None:
+        n = self.world.n_ranks
+        if peer != (rank - 1) % n:
+            return
+        step = self.recv_step[rank]
+        self.recv_step[rank] = step + 1
+        shard = (rank - 1 - step) % n
+        o0, o1 = self.offsets[shard], self.offsets[shard + 1]
+        ep = self.world.endpoints[rank]
+        stage = ep.staging_slot_view(peer, step % 2,
+                                     (o1 - o0) * self.itemsize).view(self.dtype)
+        self.full[rank][o0:o1] = stage
+        self._send(rank, step + 1)
+
+    def done(self) -> bool:
+        return self.done_ranks == self.world.n_ranks
+
+
+class _PipelineBroadcast(_Collective):
+    """Chain broadcast root -> root+1 -> ... in pipelined chunks."""
+
+    def __init__(self, world: JcclWorld, outs: List[np.ndarray], root: int):
+        super().__init__(world)
+        self.outs = [o.reshape(-1) for o in outs]
+        self.root = root
+        self.dtype = self.outs[0].dtype
+        self.itemsize = self.dtype.itemsize
+        per = world.max_chunk_bytes // self.itemsize
+        total = self.outs[0].size
+        self.chunks = [(i, min(i + per, total))
+                       for i in range(0, total, per)] or [(0, 0)]
+        n = world.n_ranks
+        self.recv_step = [0] * n
+        self.sent = [0] * n
+        self.done_ranks = 1  # root is trivially done receiving
+
+    def _order(self, rank: int) -> int:
+        return (rank - self.root) % self.world.n_ranks
+
+    def _forward(self, rank: int, step: int) -> None:
+        n = self.world.n_ranks
+        nxt = (rank + 1) % n
+        if self._order(nxt) == 0:  # wrapped back to root
+            return
+        if step >= len(self.chunks):
+            return
+        c0, c1 = self.chunks[step]
+        self.world.endpoints[rank].send_chunk(
+            nxt, self.outs[rank][c0:c1], parity=step % 2)
+        self.sent[rank] = step + 1
+
+    def start(self) -> None:
+        if self.world.n_ranks == 1:
+            return
+        for step in range(min(2, len(self.chunks))):  # pipeline depth 2
+            self._forward(self.root, step)
+
+    def on_notify(self, rank: int, peer: int, seq: int) -> None:
+        if peer != (rank - 1) % self.world.n_ranks:
+            return
+        step = self.recv_step[rank]
+        self.recv_step[rank] = step + 1
+        c0, c1 = self.chunks[step]
+        ep = self.world.endpoints[rank]
+        stage = ep.staging_slot_view(peer, step % 2,
+                                     (c1 - c0) * self.itemsize).view(self.dtype)
+        self.outs[rank][c0:c1] = stage
+        self._forward(rank, step)
+        if step + 1 == len(self.chunks):
+            self.done_ranks += 1
+        # root keeps the pipeline full
+        if rank == (self.root + 1) % self.world.n_ranks and \
+                self.sent[self.root] < len(self.chunks):
+            self._forward(self.root, self.sent[self.root])
+
+    def done(self) -> bool:
+        return self.done_ranks == self.world.n_ranks
+
+
+class _AllToAll(_Collective):
+    """Direct-write all-to-all (MoE dispatch traffic pattern)."""
+
+    def __init__(self, world: JcclWorld, mats: List[np.ndarray],
+                 outs: List[np.ndarray]):
+        super().__init__(world)
+        self.mats = mats
+        self.outs = outs
+        n = world.n_ranks
+        self.expected = [n - 1] * n
+        self.received = [0] * n
+        self.dtype = mats[0].dtype
+        self.rowbytes = mats[0][0].nbytes
+
+    def start(self) -> None:
+        n = self.world.n_ranks
+        for r in range(n):
+            self.outs[r][r] = self.mats[r][r]  # local row
+            for peer in range(n):
+                if peer == r:
+                    continue
+                self.world.endpoints[r].send_chunk(
+                    peer, self.mats[r][peer], parity=0)
+
+    def on_notify(self, rank: int, peer: int, seq: int) -> None:
+        ep = self.world.endpoints[rank]
+        stage = ep.staging_slot_view(peer, 0, self.rowbytes).view(self.dtype)
+        self.outs[rank][peer] = stage.reshape(self.outs[rank][peer].shape)
+        self.received[rank] += 1
+
+    def done(self) -> bool:
+        return all(r >= e for r, e in zip(self.received, self.expected))

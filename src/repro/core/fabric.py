@@ -1,0 +1,342 @@
+"""Discrete-event simulated RDMA fabric.
+
+This module provides the deterministic substrate under ``repro.core.verbs``:
+hosts, RNICs, rail-optimized switches, links with bandwidth/latency models,
+PCIe contention, and failure injection (NIC down/up, switch-port down/up,
+link flapping).
+
+Design notes (see DESIGN.md §2):
+
+* Virtual clock + event heap keyed ``(time, seq)`` -> fully deterministic.
+* "Threads" in the paper (SHIFT background control / CQ-event threads) are
+  actors: callbacks scheduled on this loop.
+* Failure timing naturally produces both *packet-lost* and *ACK-lost*
+  traces — the two indistinguishable traces of the paper's Lemma 3.1 —
+  because data delivery and ACK delivery are separate events.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Simulator core
+# ---------------------------------------------------------------------------
+
+
+class Event:
+    """A cancellable scheduled callback."""
+
+    __slots__ = ("time", "seq", "fn", "args", "cancelled")
+
+    def __init__(self, time: float, seq: int, fn: Callable, args: tuple):
+        self.time = time
+        self.seq = seq
+        self.fn = fn
+        self.args = args
+        self.cancelled = False
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+    def __lt__(self, other: "Event") -> bool:  # heap ordering
+        return (self.time, self.seq) < (other.time, other.seq)
+
+
+class Simulator:
+    """Deterministic discrete-event loop with a virtual clock (seconds)."""
+
+    def __init__(self) -> None:
+        self.now: float = 0.0
+        self._heap: List[Event] = []
+        self._seq = itertools.count()
+        self._executed: int = 0
+
+    def schedule(self, delay: float, fn: Callable, *args) -> Event:
+        if delay < 0:
+            raise ValueError(f"negative delay {delay}")
+        ev = Event(self.now + delay, next(self._seq), fn, args)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def at(self, time: float, fn: Callable, *args) -> Event:
+        return self.schedule(max(0.0, time - self.now), fn, *args)
+
+    def peek_time(self) -> Optional[float]:
+        while self._heap and self._heap[0].cancelled:
+            heapq.heappop(self._heap)
+        return self._heap[0].time if self._heap else None
+
+    def step(self) -> bool:
+        """Execute the next pending event. Returns False if none left."""
+        while self._heap:
+            ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
+            self.now = ev.time
+            self._executed += 1
+            ev.fn(*ev.args)
+            return True
+        return False
+
+    def run(self, until: Optional[float] = None, max_events: int = 50_000_000) -> None:
+        """Run events until the heap drains or virtual time passes ``until``."""
+        n = 0
+        while self._heap:
+            t = self.peek_time()
+            if t is None:
+                break
+            if until is not None and t > until:
+                self.now = until
+                return
+            if not self.step():
+                break
+            n += 1
+            if n > max_events:
+                raise RuntimeError("simulator exceeded max_events — livelock?")
+        if until is not None and self.now < until:
+            self.now = until
+
+    def run_until_idle(self, max_events: int = 50_000_000) -> None:
+        self.run(until=None, max_events=max_events)
+
+
+# ---------------------------------------------------------------------------
+# Network components
+# ---------------------------------------------------------------------------
+
+GBPS = 1e9 / 8.0  # bytes/sec per Gbit/s
+
+
+@dataclass
+class Link:
+    """Point-to-point cable NIC <-> switch port."""
+
+    name: str
+    bandwidth: float = 100 * GBPS  # bytes/sec
+    latency: float = 2e-6  # seconds, one-way propagation
+    up: bool = True
+
+
+@dataclass
+class SwitchPort:
+    index: int
+    up: bool = True
+    link: Optional[Link] = None
+    peer_nic: Optional["RNIC"] = None
+
+
+class Switch:
+    """A ToR/rail switch. Ports connect NICs; the switching core is assumed
+    loss-free (in-network rerouting covers fabric-internal failures, per the
+    paper's Figure 1 layering)."""
+
+    def __init__(self, name: str, n_ports: int = 64):
+        self.name = name
+        self.up = True
+        self.ports: List[SwitchPort] = [SwitchPort(i) for i in range(n_ports)]
+        self._next_port = 0
+
+    def attach(self, nic: "RNIC", link: Link) -> SwitchPort:
+        port = self.ports[self._next_port]
+        self._next_port += 1
+        port.link = link
+        port.peer_nic = nic
+        nic.switch = self
+        nic.switch_port = port
+        nic.link = link
+        return port
+
+
+class RNIC:
+    """A simulated RDMA NIC endpoint.
+
+    Transport logic (QPs, WQE scheduling, ACK/timeout) lives in
+    ``repro.core.verbs``; this class models physical state + bandwidth share.
+    """
+
+    def __init__(self, name: str, host: "Host", index: int,
+                 pcie_bandwidth: float = 14 * GBPS * 8):  # ~14 GB/s x16 gen3
+        self.name = name
+        self.host = host
+        self.index = index  # rail index
+        self.gid = f"{host.name}/{name}"
+        self.up = True
+        self.switch: Optional[Switch] = None
+        self.switch_port: Optional[SwitchPort] = None
+        self.link: Optional[Link] = None
+        self.pcie_bandwidth = pcie_bandwidth
+        # Flows currently serializing through this NIC (for fair share).
+        self.active_flows: int = 0
+        # Persistent background traffic (the paper's "busy backup RNIC").
+        self.background_flows: int = 0
+        # Callbacks fired on state change (verbs layer hooks in for
+        # fast local error detection).
+        self.state_listeners: List[Callable[[bool], None]] = []
+
+    # -- failure injection ---------------------------------------------------
+    def set_up(self, up: bool) -> None:
+        if self.up == up:
+            return
+        self.up = up
+        for cb in list(self.state_listeners):
+            cb(up)
+
+    # -- bandwidth model -----------------------------------------------------
+    def effective_bandwidth(self) -> float:
+        """Fair-share bandwidth snapshot for a new flow starting now."""
+        base = self.link.bandwidth if self.link else 0.0
+        base = min(base, self.pcie_bandwidth)
+        nflows = 1 + self.active_flows + self.background_flows
+        return base / nflows
+
+    def path_up(self) -> bool:
+        return (
+            self.up
+            and self.link is not None
+            and self.link.up
+            and self.switch is not None
+            and self.switch.up
+            and self.switch_port is not None
+            and self.switch_port.up
+        )
+
+    def __repr__(self) -> str:
+        return f"RNIC({self.gid}, up={self.up})"
+
+
+class Host:
+    """A GPU server with multiple RNICs and a flat registered-memory space."""
+
+    def __init__(self, name: str, cluster: "Cluster"):
+        self.name = name
+        self.cluster = cluster
+        self.nics: List[RNIC] = []
+        # Bump allocator for MR base addresses (per-host address space).
+        self._next_addr = 0x1000
+
+    def add_nic(self, nic: RNIC) -> None:
+        self.nics.append(nic)
+
+    def alloc_addr(self, nbytes: int) -> int:
+        addr = self._next_addr
+        self._next_addr += ((nbytes + 0xFFF) // 0x1000 + 1) * 0x1000
+        return addr
+
+
+# ---------------------------------------------------------------------------
+# Cluster: topology + failure injection helpers
+# ---------------------------------------------------------------------------
+
+
+class Cluster:
+    """Owns the simulator, hosts, switches and the GID registry."""
+
+    def __init__(self, sim: Optional[Simulator] = None):
+        self.sim = sim or Simulator()
+        self.hosts: Dict[str, Host] = {}
+        self.switches: Dict[str, Switch] = {}
+        self.nic_by_gid: Dict[str, RNIC] = {}
+        # transport params (verbs layer reads these)
+        self.ack_timeout: float = 400e-6
+        self.retry_cnt: int = 7
+        self.rnr_timer: float = 100e-6
+        self.rnr_retry: int = 7
+        self.nic_error_detect_latency: float = 20e-6
+
+    # -- construction ---------------------------------------------------------
+    def add_host(self, name: str) -> Host:
+        h = Host(name, self)
+        self.hosts[name] = h
+        return h
+
+    def add_switch(self, name: str, n_ports: int = 64) -> Switch:
+        s = Switch(name, n_ports)
+        self.switches[name] = s
+        return s
+
+    def add_nic(self, host: Host, name: str, switch: Switch,
+                bandwidth: float = 100 * GBPS, latency: float = 2e-6,
+                pcie_bandwidth: Optional[float] = None) -> RNIC:
+        nic = RNIC(name, host, index=len(host.nics),
+                   pcie_bandwidth=pcie_bandwidth or 14 * GBPS * 8)
+        host.add_nic(nic)
+        link = Link(f"{host.name}.{name}<->{switch.name}",
+                    bandwidth=bandwidth, latency=latency)
+        switch.attach(nic, link)
+        self.nic_by_gid[nic.gid] = nic
+        return nic
+
+    # -- path model -----------------------------------------------------------
+    def path_up(self, src: RNIC, dst: RNIC) -> bool:
+        """End-to-end availability src NIC -> (rail/spine) -> dst NIC.
+
+        Inter-switch (spine) connectivity is assumed always available:
+        fabric-internal failures are masked by in-network rerouting
+        (paper Fig. 1 — the layer below the one SHIFT adds).
+        """
+        return src.path_up() and dst.path_up()
+
+    def path_latency(self, src: RNIC, dst: RNIC) -> float:
+        lat = (src.link.latency if src.link else 0.0) + (
+            dst.link.latency if dst.link else 0.0)
+        if src.switch is not dst.switch:
+            lat += 1e-6  # spine hop
+        # switch forwarding delay
+        return lat + 0.5e-6
+
+    # -- failure injection ----------------------------------------------------
+    def fail_nic(self, gid: str) -> None:
+        self.nic_by_gid[gid].set_up(False)
+
+    def recover_nic(self, gid: str) -> None:
+        self.nic_by_gid[gid].set_up(True)
+
+    def fail_switch_port(self, gid: str) -> None:
+        nic = self.nic_by_gid[gid]
+        if nic.switch_port:
+            nic.switch_port.up = False
+
+    def recover_switch_port(self, gid: str) -> None:
+        nic = self.nic_by_gid[gid]
+        if nic.switch_port:
+            nic.switch_port.up = True
+
+    def fail_link(self, gid: str) -> None:
+        nic = self.nic_by_gid[gid]
+        if nic.link:
+            nic.link.up = False
+
+    def recover_link(self, gid: str) -> None:
+        nic = self.nic_by_gid[gid]
+        if nic.link:
+            nic.link.up = True
+
+    def flap_nic(self, gid: str, down_at: float, up_at: float) -> None:
+        """Schedule an interface flap (down then up) in virtual time."""
+        self.sim.at(down_at, self.fail_nic, gid)
+        self.sim.at(up_at, self.recover_nic, gid)
+
+
+def build_cluster(n_hosts: int = 2, nics_per_host: int = 2,
+                  topology: str = "rail",
+                  bandwidth: float = 100 * GBPS,
+                  latency: float = 2e-6) -> Cluster:
+    """Standard testbed: rail-optimized — NIC index k of every host connects
+    to rail switch k (the paper's assumed deployment, §4.4), or a single
+    shared ToR (``topology="single"``, SPOF — used by tests that demonstrate
+    the hardware constraint)."""
+    c = Cluster()
+    if topology == "rail":
+        switches = [c.add_switch(f"rail{k}") for k in range(nics_per_host)]
+    else:
+        switches = [c.add_switch("tor0")] * nics_per_host
+    for i in range(n_hosts):
+        h = c.add_host(f"host{i}")
+        for k in range(nics_per_host):
+            c.add_nic(h, f"mlx5_{k}", switches[k],
+                      bandwidth=bandwidth, latency=latency)
+    return c

@@ -1,0 +1,1115 @@
+"""SHIFT — user-space cross-NIC RDMA fault tolerance (§4 of the paper).
+
+``ShiftLib`` mirrors the verbs API (the paper implements SHIFTLib inside
+rdma-core and swaps it in via LD_LIBRARY_PATH; here applications swap
+``StandardLib`` for ``ShiftLib``). It provides, per the paper:
+
+* **Shadow control verbs** (§4.2): control verbs are recorded and replayed
+  by a background actor on the backup RNIC, best-effort to break cyclic
+  dependencies (App. B.1), with default->backup attribute mappings
+  published through the out-of-band KV store.
+* **WQE copy resubmission** (§4.1/§4.3.2): fallback recovers WQEs from the
+  work-queue rings via ``SendWQE.to_wr()`` — no payload is ever buffered
+  (zero-copy is preserved; tests assert SHIFT holds no payload bytes).
+* **CQ-event-based 2-way handshake** (§4.3.2): NOTIFY/ACK messages carrying
+  receive-WQE counters; retransmission starts from the first failed send WR
+  after the last successfully completed receive WR, and sends that the
+  counters prove delivered (ACK lost) are excluded and their completions
+  synthesized.
+* **Retransmission-safe check**: in-flight atomics ⇒ the error is
+  propagated to the application (the Trilemma's non-idempotent ops).
+* **WR execution fence** (§4.3.3): after the probe succeeds, traffic keeps
+  flowing on the backup QP until the next *signaled* WR (the fence);
+  subsequent WRs are posted to the default QP **with the doorbell
+  withheld** and released only when the fence completes and the peer has
+  re-armed its receive side.
+* Send-queue state machine ``Default -> Fallback -> WaitSignaled ->
+  WaitDrained -> Default``; receive side ``Default <-> Fallback``.
+
+Implementation deviations from the paper (documented in DESIGN.md):
+
+1. Control messages travel on a dedicated small control QP pair on the
+   backup NICs instead of sharing the backup data QP. This keeps app
+   receive rings free of control consumptions across repeated
+   fallback/recovery cycles. The recovery notification therefore carries an
+   explicit RECOVER_ACK instead of relying on same-QP FIFO ordering; the
+   doorbell-withholding fence is unchanged.
+2. Each fallback cycle re-connects the default and backup-data QPs at a
+   per-cycle PSN base so that 'ghost' packets from a previous cycle are
+   rejected as duplicates (the sim makes ghosts real; see verbs._deliver).
+3. Probe WRs are sequence-transparent at the receiver (they validate path
+   liveness without perturbing PSN state); production SHIFT achieves the
+   equivalent via the QP re-connect handshake over the management network.
+"""
+
+from __future__ import annotations
+
+import enum
+import itertools
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from . import verbs as V
+from .fabric import Cluster
+from .kvstore import KVStore
+from .protocols import FailoverClass, classify_wqe_set
+
+# ---------------------------------------------------------------------------
+# Control-plane constants
+# ---------------------------------------------------------------------------
+
+CTRL_WRID_BASE = 1 << 62
+IMM_TYPE_SHIFT = 28
+IMM_COUNTER_MASK = (1 << 28) - 1
+
+CTRL_NOTIFY = 0xE       # fallback notification (carries recv counter)
+CTRL_ACK = 0xD          # fallback acknowledgment (carries recv counter)
+CTRL_RECOVER = 0xC      # recovery notification (sender side recovered)
+CTRL_RECOVER_ACK = 0xB  # receiver re-armed on default QP
+
+_ctrl_seq = itertools.count()
+
+
+def _pack_imm(msg_type: int, counter: int) -> int:
+    return (msg_type << IMM_TYPE_SHIFT) | (counter & IMM_COUNTER_MASK)
+
+
+def _unpack_imm(imm: int) -> Tuple[int, int]:
+    return imm >> IMM_TYPE_SHIFT, imm & IMM_COUNTER_MASK
+
+
+def _wrap_delta(a: int, b: int) -> int:
+    """a - b on the 28-bit counter ring; negative -> 0."""
+    d = (a - b) & IMM_COUNTER_MASK
+    return d if d < (1 << 27) else 0
+
+
+class SendState(enum.Enum):
+    DEFAULT = 1
+    FALLBACK = 2
+    WAIT_SIGNALED = 3
+    WAIT_DRAINED = 4
+    FAILED = 5
+
+
+class RecvState(enum.Enum):
+    DEFAULT = 1
+    FALLBACK = 2
+
+
+@dataclass
+class ShiftConfig:
+    probe_interval: float = 20e-3
+    ctrl_recv_depth: int = 8
+    protect_atomics: bool = True
+    shadow_verb_delay: float = 50e-6   # per-verb background execution cost
+    actor_tick: float = 200e-6
+    cycle_psn_stride: int = 1 << 16
+
+    @staticmethod
+    def backup_index(i: int, n: int) -> int:
+        return (i + 1) % n
+
+
+@dataclass
+class ShiftStats:
+    fallbacks: int = 0
+    recoveries: int = 0
+    probes_sent: int = 0
+    probe_failures: int = 0
+    synthesized_wcs: int = 0
+    resubmitted_sends: int = 0
+    resubmitted_recvs: int = 0
+    errors_propagated: int = 0
+    fallback_latencies: List[float] = field(default_factory=list)
+    # zero-copy audit: SHIFT must never hold payload bytes
+    payload_bytes_held: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Standard (non-SHIFT) library — the baseline the paper compares against
+# ---------------------------------------------------------------------------
+
+
+class StandardLib:
+    """Plain rdma-core semantics, object API shared with ShiftLib."""
+
+    name = "standard"
+
+    def __init__(self, cluster: Cluster, host: str):
+        self.cluster = cluster
+        self.host = host
+
+    def open_device(self, nic: str) -> V.Context:
+        return V.ibv_open_device(self.cluster, self.host, nic)
+
+    def alloc_pd(self, ctx) -> V.PD:
+        return V.ibv_alloc_pd(ctx)
+
+    def reg_mr(self, pd, buf: np.ndarray) -> V.MR:
+        return V.ibv_reg_mr(pd, buf)
+
+    def create_cq(self, ctx, depth: int) -> V.CQ:
+        return V.ibv_create_cq(ctx, depth)
+
+    def create_qp(self, pd, init: V.QPInitAttr) -> V.QP:
+        return V.ibv_create_qp(pd, init)
+
+    def modify_qp(self, qp, attr: V.QPAttr) -> None:
+        V.ibv_modify_qp(qp, attr)
+
+    def query_qp(self, qp) -> V.QPAttr:
+        return V.ibv_query_qp(qp)
+
+    def post_send(self, qp, wr: V.SendWR) -> None:
+        V.ibv_post_send(qp, wr)
+
+    def post_recv(self, qp, wr: V.RecvWR) -> None:
+        V.ibv_post_recv(qp, wr)
+
+    def poll_cq(self, cq, n: int) -> List[V.WC]:
+        return V.ibv_poll_cq(cq, n)
+
+    def route_of(self, qp) -> Tuple[str, int]:
+        return qp.ctx.nic.gid, qp.qpn
+
+    def connect(self, qp, peer_gid: str, peer_qpn: int) -> None:
+        self.modify_qp(qp, V.QPAttr(qp_state=V.QPState.INIT))
+        self.modify_qp(qp, V.QPAttr(qp_state=V.QPState.RTR, dest_gid=peer_gid,
+                                    dest_qp_num=peer_qpn, rq_psn=0))
+        self.modify_qp(qp, V.QPAttr(qp_state=V.QPState.RTS, sq_psn=0))
+
+    def settle(self, duration: float = 0.1) -> None:
+        self.cluster.sim.run(until=self.cluster.sim.now + duration)
+
+
+# ---------------------------------------------------------------------------
+# SHIFT proxies
+# ---------------------------------------------------------------------------
+
+
+class _ControlActor:
+    """Background 'control thread' per backup RNIC: executes recorded shadow
+    control verbs best-effort (skip + retry on unmet dependencies)."""
+
+    def __init__(self, lib: "ShiftLib"):
+        self.lib = lib
+        self.sim = lib.cluster.sim
+        self.tasks: Deque[Callable[[], bool]] = deque()
+        self._scheduled = False
+
+    def submit(self, task: Callable[[], bool]) -> None:
+        self.tasks.append(task)
+        self._kick()
+
+    def _kick(self) -> None:
+        if not self._scheduled:
+            self._scheduled = True
+            self.sim.schedule(self.lib.config.shadow_verb_delay, self._run)
+
+    def _run(self) -> None:
+        self._scheduled = False
+        pending: List[Callable[[], bool]] = []
+        while self.tasks:
+            task = self.tasks.popleft()
+            try:
+                done = task()
+            except Exception:
+                raise
+            if not done:
+                pending.append(task)  # unmet dependency: best-effort skip
+        for t in pending:
+            self.tasks.append(t)
+        if self.tasks:
+            self.sim.schedule(self.lib.config.actor_tick, self._run)
+            self._scheduled = True
+
+
+class ShiftContext:
+    def __init__(self, lib: "ShiftLib", default: V.Context):
+        self.lib = lib
+        self.default = default
+        self.backup: Optional[V.Context] = None
+        # shadow verb: open the backup device in the background
+        nics = default.cluster.hosts[lib.host].nics
+        bidx = ShiftConfig.backup_index(default.nic.index, len(nics))
+        backup_nic = nics[bidx].name
+
+        def _open() -> bool:
+            self.backup = V.ibv_open_device(default.cluster, lib.host,
+                                            backup_nic)
+            return True
+        lib.actor.submit(_open)
+
+
+class ShiftPD:
+    def __init__(self, lib: "ShiftLib", sctx: ShiftContext):
+        self.lib = lib
+        self.sctx = sctx
+        self.default = V.ibv_alloc_pd(sctx.default)
+        self.backup: Optional[V.PD] = None
+
+        def _alloc() -> bool:
+            if self.sctx.backup is None:
+                return False
+            self.backup = V.ibv_alloc_pd(self.sctx.backup)
+            return True
+        lib.actor.submit(_alloc)
+
+
+class ShiftMR:
+    """Registers the same buffer on default and backup NICs; publishes the
+    rkey mapping to the KV store. NOTE: same VA, different keys — SHIFT's
+    resubmission patches keys only."""
+
+    def __init__(self, lib: "ShiftLib", spd: ShiftPD, buf: np.ndarray):
+        self.lib = lib
+        self.default = V.ibv_reg_mr(spd.default, buf)
+        self.backup: Optional[V.MR] = None
+        # app-facing attributes mirror the default MR (opacity)
+        self.addr = self.default.addr
+        self.lkey = self.default.lkey
+        self.rkey = self.default.rkey
+        self.length = self.default.length
+
+        def _reg() -> bool:
+            if spd.backup is None:
+                return False
+            self.backup = V.ibv_reg_mr(spd.backup, buf, addr=self.default.addr)
+            lib.lkey_map[self.default.lkey] = self.backup.lkey
+            lib.backup_lkeys.add(self.backup.lkey)
+            lib.kv.put(f"mr:{lib.host}:{self.default.rkey}", self.backup.rkey)
+            return True
+        lib.actor.submit(_reg)
+
+
+class ShiftCQ:
+    """App-facing CQ: underlying default CQ + shadow backup CQ + the WC
+    buffer of App. B.2. Physical WCs are routed (counters, control,
+    synthesis) before the application sees them."""
+
+    def __init__(self, lib: "ShiftLib", sctx: ShiftContext, depth: int):
+        self.lib = lib
+        self.sctx = sctx
+        self.depth = depth
+        self.channel = V.ibv_create_comp_channel(sctx.default)
+        self.default = V.ibv_create_cq(sctx.default, depth, self.channel)
+        self.channel.on_event(self._on_event)
+        V.ibv_req_notify_cq(self.default)
+        self.backup: Optional[V.CQ] = None
+        self.backup_channel: Optional[V.CompChannel] = None
+        self.app_buffer: List[V.WC] = []
+        # optional push-mode consumer (used by event-driven apps like JCCL)
+        self.app_listener = None
+
+        def _create() -> bool:
+            if sctx.backup is None:
+                return False
+            self.backup_channel = V.ibv_create_comp_channel(sctx.backup)
+            self.backup = V.ibv_create_cq(sctx.backup, depth,
+                                          self.backup_channel)
+            self.backup_channel.on_event(self._on_event)
+            V.ibv_req_notify_cq(self.backup)
+            return True
+        lib.actor.submit(_create)
+
+    # background wake: an error WC (or data on the backup CQ) arrived while
+    # the app was not polling
+    def _on_event(self, cq: V.CQ) -> None:
+        V.ibv_req_notify_cq(cq)
+        self.process_physical()
+
+    def process_physical(self) -> None:
+        for cq in (self.default, self.backup):
+            if cq is None:
+                continue
+            while True:
+                wcs = cq.poll(64)
+                if not wcs:
+                    V.ibv_req_notify_cq(cq)
+                    break
+                for wc in wcs:
+                    self.lib._route_wc(wc, self)
+        if self.app_listener is not None and self.app_buffer:
+            buf, self.app_buffer = self.app_buffer, []
+            self.app_listener(buf)
+
+    def poll(self, n: int) -> List[V.WC]:
+        self.process_physical()
+        out = self.app_buffer[:n]
+        del self.app_buffer[:n]
+        return out
+
+
+class _SendRec:
+    """App-level bookkeeping for one posted send WR (metadata only — the
+    payload stays in the registered MR; the physical WQE lives in a ring)."""
+
+    __slots__ = ("seq", "opcode", "signaled", "two_sided", "completed",
+                 "synthesized", "cur_wqe", "pending_wr")
+
+    def __init__(self, seq: int, wr: V.SendWR):
+        self.seq = seq
+        self.opcode = wr.opcode
+        self.signaled = bool(wr.send_flags & V.SEND_FLAG_SIGNALED)
+        self.two_sided = wr.opcode in V.TWO_SIDED_OPCODES
+        self.completed = False
+        self.synthesized = False
+        self.cur_wqe: Optional[V.SendWQE] = None
+        self.pending_wr: Optional[V.SendWR] = None  # held during handshake
+
+
+class _RecvRec:
+    __slots__ = ("seq", "completed", "cur_rwqe")
+
+    def __init__(self, seq: int):
+        self.seq = seq
+        self.completed = False
+        self.cur_rwqe: Optional[V.RecvWQE] = None
+
+
+class ShiftQP:
+    """The per-QP SHIFT state machine (Fig. 4)."""
+
+    def __init__(self, lib: "ShiftLib", spd: ShiftPD, init: V.QPInitAttr):
+        self.lib = lib
+        self.spd = spd
+        self.send_scq: ShiftCQ = init.send_cq
+        self.recv_scq: ShiftCQ = init.recv_cq
+        self.default = V.ibv_create_qp(
+            spd.default, V.QPInitAttr(send_cq=self.send_scq.default,
+                                      recv_cq=self.recv_scq.default,
+                                      cap=init.cap))
+        self.qpn = self.default.qpn  # app-facing (opacity)
+        self.cap = init.cap
+        self.backup: Optional[V.QP] = None
+        self.ctrl: Optional[V.QP] = None
+        self.ctrl_cq: Optional[V.CQ] = None
+        self.ready = False          # backup path connected
+        self.peer_route: Optional[Tuple[str, int]] = None
+        self.peer_backup: Optional[Tuple[str, int, int]] = None
+        self.send_state = SendState.DEFAULT
+        self.recv_state = RecvState.DEFAULT
+        self.cycle = 0
+        self._awaiting_ack = False
+        self._in_handshake = False
+        self._probing = False
+        self._probe_outstanding = False
+        self._fence_rec: Optional[_SendRec] = None
+        self._withheld: List[_SendRec] = []
+        self._recover_sent = False
+        self._seq = itertools.count()
+        self.send_recs: Deque[_SendRec] = deque()
+        self.recv_fifo: Deque[_RecvRec] = deque()
+        self.n_recv_completed = 0
+        self.n_sent_twosided_completed = 0
+        self._attr_rtr: Optional[V.QPAttr] = None
+        self._attr_rts: Optional[V.QPAttr] = None
+        self._error_t0: Optional[float] = None
+        self._await_first_success = False
+        self.fail_reason: Optional[str] = None
+        lib.qpn_map[self.default.qpn] = self
+        lib.shift_qps.append(self)
+
+        # shadow verbs: backup data QP + control QP on the backup NIC
+        def _create() -> bool:
+            if (spd.backup is None or self.send_scq.backup is None
+                    or self.recv_scq.backup is None):
+                return False
+            self.backup = V.ibv_create_qp(
+                spd.backup, V.QPInitAttr(send_cq=self.send_scq.backup,
+                                         recv_cq=self.recv_scq.backup,
+                                         cap=init.cap))
+            ch = V.ibv_create_comp_channel(spd.backup.ctx)
+            self.ctrl_cq = V.ibv_create_cq(spd.backup.ctx, 64, ch)
+            ch.on_event(self._on_ctrl_event)
+            V.ibv_req_notify_cq(self.ctrl_cq)
+            self.ctrl = V.ibv_create_qp(
+                spd.backup, V.QPInitAttr(send_cq=self.ctrl_cq,
+                                         recv_cq=self.ctrl_cq,
+                                         cap=V.QPCap(64, 64)))
+            lib.qpn_map[self.backup.qpn] = self
+            # publish default->backup route mapping (§4.2)
+            lib.kv.put(f"route:{self.default.ctx.nic.gid}:{self.default.qpn}",
+                       (self.backup.ctx.nic.gid, self.backup.qpn,
+                        self.ctrl.qpn))
+            return True
+        lib.actor.submit(_create)
+
+    # ------------------------------------------------------------------
+    # connection setup
+    # ------------------------------------------------------------------
+    def modify(self, attr: V.QPAttr) -> None:
+        if attr.qp_state is V.QPState.RTR:
+            # the paper measures extra ibv_query_qp cost here (Fig. 7):
+            # SHIFT snapshots attributes to be able to reset after fallback
+            V.ibv_query_qp(self.default)
+            self._attr_rtr = attr
+            self.peer_route = (attr.dest_gid, attr.dest_qp_num)
+        elif attr.qp_state is V.QPState.RTS:
+            V.ibv_query_qp(self.default)
+            self._attr_rts = attr
+        V.ibv_modify_qp(self.default, attr)
+        if attr.qp_state is V.QPState.RTR:
+            self._connect_backup_async()
+
+    def _connect_backup_async(self) -> None:
+        peer_gid, peer_qpn = self.peer_route
+        key = f"route:{peer_gid}:{peer_qpn}"
+
+        def _connect() -> bool:
+            if self.backup is None or self.ctrl is None:
+                return False
+            val = self.lib.kv.get(key)
+            if val is None:
+                return False
+            b_gid, b_qpn, c_qpn = val
+            self.peer_backup = (b_gid, b_qpn, c_qpn)
+            psn = self._cycle_psn()
+            for qp, dq in ((self.backup, b_qpn), (self.ctrl, c_qpn)):
+                V.ibv_modify_qp(qp, V.QPAttr(qp_state=V.QPState.INIT))
+                V.ibv_modify_qp(qp, V.QPAttr(
+                    qp_state=V.QPState.RTR, dest_gid=b_gid,
+                    dest_qp_num=dq if qp is self.backup else c_qpn,
+                    rq_psn=psn if qp is self.backup else 0))
+                V.ibv_modify_qp(qp, V.QPAttr(
+                    qp_state=V.QPState.RTS,
+                    sq_psn=psn if qp is self.backup else 0))
+            for _ in range(self.lib.config.ctrl_recv_depth):
+                self._post_ctrl_recv()
+            self.ready = True
+            return True
+        self.lib.actor.submit(_connect)
+
+    def _cycle_psn(self) -> int:
+        return self.cycle * self.lib.config.cycle_psn_stride
+
+    # ------------------------------------------------------------------
+    # data-path posting
+    # ------------------------------------------------------------------
+    def post_send(self, wr: V.SendWR) -> None:
+        if self.send_state is SendState.FAILED:
+            raise V.VerbsError("SHIFT QP failed (unmaskable error)")
+        rec = _SendRec(next(self._seq), wr)
+        self.send_recs.append(rec)
+        if self._awaiting_ack or self._in_handshake:
+            rec.pending_wr = wr  # metadata only; payload stays in the MR
+            return
+        if self.send_state is SendState.DEFAULT:
+            if self.default.state is V.QPState.ERR:
+                # the NIC already failed but we have not yet polled the
+                # error WC: detection happens at post time (real ibverbs
+                # returns an error here; SHIFT intercepts it)
+                rec.pending_wr = wr
+                self._drain_cqs()  # routes the error WC -> fallback
+                if (self.send_state is SendState.DEFAULT
+                        and not self._in_handshake and not self._awaiting_ack):
+                    # QP errored without surfacing a WC (empty queues)
+                    self._error_t0 = self.lib.cluster.sim.now
+                    self._await_first_success = True
+                    self.initiate_fallback()
+                if self.send_state is SendState.FAILED:
+                    raise V.VerbsError("SHIFT QP failed (unmaskable error)")
+                return
+            wqe = self.default.post_send_wqe(wr, ring=True)
+            self._map_send(rec, wqe)
+        elif self.send_state in (SendState.FALLBACK, SendState.WAIT_SIGNALED):
+            bwr = self._patch_wr(wr)
+            wqe = self.backup.post_send_wqe(bwr, ring=True)
+            self._map_send(rec, wqe)
+            if (self.send_state is SendState.WAIT_SIGNALED and rec.signaled):
+                # the fence WR (§4.3.3 step 1)
+                self._fence_rec = rec
+                self.send_state = SendState.WAIT_DRAINED
+        elif self.send_state is SendState.WAIT_DRAINED:
+            # doorbell withheld: enqueued on the default QP, not executed
+            wqe = self.default.post_send_wqe(wr, ring=False)
+            self._map_send(rec, wqe)
+            self._withheld.append(rec)
+        else:  # pragma: no cover
+            raise V.VerbsError(f"bad state {self.send_state}")
+
+    def post_recv(self, wr: V.RecvWR) -> None:
+        rec = _RecvRec(next(self._seq))
+        self.recv_fifo.append(rec)
+        if self.recv_state is RecvState.DEFAULT:
+            rwqe = self.default.post_recv_wqe(wr, ring=True)
+        else:
+            rwqe = self.backup.post_recv_wqe(self._patch_recv_wr(wr), ring=True)
+        self._map_recv(rec, rwqe)
+
+    def _map_send(self, rec: _SendRec, wqe: V.SendWQE) -> None:
+        if rec.cur_wqe is not None:
+            self.lib.wqe_map.pop(id(rec.cur_wqe), None)
+        rec.cur_wqe = wqe
+        rec.pending_wr = None
+        self.lib.wqe_map[id(wqe)] = (rec, self)
+
+    def _map_recv(self, rec: _RecvRec, rwqe: V.RecvWQE) -> None:
+        if rec.cur_rwqe is not None:
+            self.lib.rwqe_map.pop(id(rec.cur_rwqe), None)
+        rec.cur_rwqe = rwqe
+        self.lib.rwqe_map[id(rwqe)] = (rec, self)
+
+    def _patch_wr(self, wr: V.SendWR) -> V.SendWR:
+        """Patch MR keys default->backup (§4.3.2 'updating their MR keys').
+
+        Idempotent: WQEs recovered from the BACKUP ring on a later fallback
+        cycle already carry backup keys and pass through unchanged."""
+        sge = wr.sge
+        if sge is not None and sge.length and \
+                sge.lkey not in self.lib.backup_lkeys:
+            blkey = self.lib.lkey_map.get(sge.lkey)
+            if blkey is None:
+                raise V.VerbsError("backup MR not ready for lkey patch")
+            sge = V.SGE(sge.addr, sge.length, blkey)
+        rkey = wr.rkey
+        if wr.opcode is not V.Opcode.SEND and wr.rkey and \
+                wr.rkey not in self.lib.backup_rkeys:
+            rkey = self._peer_backup_rkey(wr.rkey)
+        return V.SendWR(wr.wr_id, wr.opcode, sge, wr.remote_addr, rkey,
+                        wr.imm_data, wr.send_flags, wr.compare_add, wr.swap)
+
+    def _patch_recv_wr(self, wr: V.RecvWR) -> V.RecvWR:
+        sge = wr.sge
+        if sge is not None and sge.length and \
+                sge.lkey not in self.lib.backup_lkeys:
+            blkey = self.lib.lkey_map.get(sge.lkey)
+            if blkey is None:
+                raise V.VerbsError("backup MR not ready for lkey patch")
+            sge = V.SGE(sge.addr, sge.length, blkey)
+        return V.RecvWR(wr.wr_id, sge)
+
+    def _peer_backup_rkey(self, rkey: int) -> int:
+        if rkey == 0:
+            return 0
+        cached = self.lib.rkey_cache.get(rkey)
+        if cached is not None:
+            return cached
+        peer_host = self.peer_route[0].split("/")[0]
+        val = self.lib.kv.get(f"mr:{peer_host}:{rkey}")
+        if val is None:
+            raise V.VerbsError(f"no backup rkey mapping for {rkey}")
+        self.lib.rkey_cache[rkey] = val
+        self.lib.backup_rkeys.add(val)
+        return val
+
+    # ------------------------------------------------------------------
+    # proactive failover (beyond-paper: straggler mitigation) ----------
+    # ------------------------------------------------------------------
+    def force_fallback(self) -> bool:
+        """Administratively migrate traffic to the backup NIC while the
+        default path is still alive — straggler mitigation for degraded
+        links (the paper only switches on error WCs; the machinery is
+        identical: same handshake, same counters). Returns False if a
+        cycle is already in progress or the QP can't fall back."""
+        if (self.send_state is not SendState.DEFAULT or self._in_handshake
+                or self._awaiting_ack or not self.ready):
+            return False
+        self._error_t0 = self.lib.cluster.sim.now
+        self._await_first_success = True
+        self.initiate_fallback()
+        return self.send_state is not SendState.FAILED
+
+    # ------------------------------------------------------------------
+    # fallback: State 1 -> State 2  (§4.3.2)
+    # ------------------------------------------------------------------
+    def on_default_error(self, wc: V.WC) -> None:
+        if self.send_state in (SendState.FALLBACK, SendState.FAILED):
+            return  # flush residue of an already-handled failure
+        if self._awaiting_ack or self._in_handshake:
+            return
+        if self.send_state in (SendState.WAIT_SIGNALED, SendState.WAIT_DRAINED):
+            # default path died again mid-recovery: abort recovery, move
+            # withheld WRs back to the backup QP
+            self._abort_recovery()
+            return
+        self._error_t0 = self.lib.cluster.sim.now
+        self._await_first_success = True
+        self.initiate_fallback()
+
+    def initiate_fallback(self) -> None:
+        lib = self.lib
+        if not self.ready:
+            self._propagate_errors("backup resources not ready")
+            return
+        # retransmission-safe check: scan outstanding WQEs for atomics
+        outstanding = [r for r in self.send_recs if not r.completed]
+        if lib.config.protect_atomics and any(
+                r.opcode in V.ATOMIC_OPCODES for r in outstanding):
+            self._propagate_errors("atomic WR in flight (Trilemma §3.1)")
+            return
+        self._in_handshake = True
+        lib.stats.fallbacks += 1
+        self.cycle += 1
+        self._reset_default()
+        self._reset_backup()
+        # Drain before snapshotting counters / reposting: completed-but-
+        # unpolled WCs (App. B.2's WC buffer) must count as progress.
+        self._drain_cqs()
+        self._repost_recvs(self.backup)
+        self.recv_state = RecvState.FALLBACK
+        self._awaiting_ack = True
+        self._send_ctrl(CTRL_NOTIFY, self.n_recv_completed)
+
+    def _on_peer_notify(self, counter: int) -> None:
+        """Side B of the 2-way handshake (or the crossing case)."""
+        if self.send_state is SendState.FAILED:
+            return
+        if self._awaiting_ack:
+            # simultaneous fallback: the peer's NOTIFY doubles as our ACK
+            self._on_peer_ack(counter)
+            return
+        if self.send_state in (SendState.WAIT_SIGNALED, SendState.WAIT_DRAINED):
+            self._abort_recovery(reenter=False)
+        if self.recv_state is RecvState.FALLBACK and self.send_state is SendState.FALLBACK:
+            return  # duplicate notify
+        self._error_t0 = self._error_t0 or self.lib.cluster.sim.now
+        self._await_first_success = True
+        self._in_handshake = True
+        self.lib.stats.fallbacks += 1
+        self.cycle += 1
+        self._reset_default()
+        self._reset_backup()
+        self._drain_cqs()
+        self._repost_recvs(self.backup)
+        self.recv_state = RecvState.FALLBACK
+        self._send_ctrl(CTRL_ACK, self.n_recv_completed)
+        self._resubmit_sends(counter)
+
+    def _on_peer_ack(self, counter: int) -> None:
+        if not self._awaiting_ack:
+            return
+        self._awaiting_ack = False
+        self._resubmit_sends(counter)
+
+    def _resubmit_sends(self, peer_recv_counter: int) -> None:
+        """Exclude sends the peer's counter proves delivered (ACK-lost),
+        synthesize their completions, resubmit the rest to the backup QP."""
+        lib = self.lib
+        self._awaiting_ack = False
+        excess = _wrap_delta(peer_recv_counter, self.n_sent_twosided_completed)
+        outstanding = [r for r in self.send_recs
+                       if not r.completed and r.pending_wr is None]
+        for rec in outstanding:
+            if excess == 0:
+                break
+            # everything up to (and including) the next delivered two-sided
+            # WR has landed in receiver memory — complete it locally
+            rec.completed = True
+            rec.synthesized = True
+            lib.stats.synthesized_wcs += 1
+            if rec.two_sided:
+                self.n_sent_twosided_completed += 1
+                excess -= 1
+            if rec.signaled:
+                self._emit_app_wc(rec, V.WCStatus.SUCCESS)
+        # WQE copy resubmission, in ring order
+        n = 0
+        for rec in self.send_recs:
+            if rec.completed:
+                continue
+            if rec.pending_wr is not None:
+                wr = rec.pending_wr
+            else:
+                wr = rec.cur_wqe.to_wr()
+            wqe = self.backup.post_send_wqe(self._patch_wr(wr), ring=False)
+            self._map_send(rec, wqe)
+            n += 1
+        self.backup.ring_sq_doorbell()
+        lib.stats.resubmitted_sends += n
+        self.send_state = SendState.FALLBACK
+        self._in_handshake = False
+        self._start_probing()
+
+    def _repost_recvs(self, qp: V.QP) -> None:
+        n = 0
+        for rec in self.recv_fifo:
+            if rec.completed:
+                continue
+            wr = rec.cur_rwqe.to_wr()
+            if qp is self.backup:
+                wr = self._patch_recv_wr(wr)
+            rwqe = qp.post_recv_wqe(wr, ring=True)
+            self._map_recv(rec, rwqe)
+            n += 1
+        self.lib.stats.resubmitted_recvs += n
+
+    def _reset_default(self) -> None:
+        psn = self._cycle_psn()
+        qp = self.default
+        V.ibv_modify_qp(qp, V.QPAttr(qp_state=V.QPState.RESET))
+        V.ibv_modify_qp(qp, V.QPAttr(qp_state=V.QPState.INIT))
+        V.ibv_modify_qp(qp, V.QPAttr(
+            qp_state=V.QPState.RTR, dest_gid=self._attr_rtr.dest_gid,
+            dest_qp_num=self._attr_rtr.dest_qp_num, rq_psn=psn))
+        V.ibv_modify_qp(qp, V.QPAttr(qp_state=V.QPState.RTS, sq_psn=psn))
+
+    def _reset_backup(self) -> None:
+        psn = self._cycle_psn()
+        qp = self.backup
+        b_gid, b_qpn, _ = self.peer_backup
+        V.ibv_modify_qp(qp, V.QPAttr(qp_state=V.QPState.RESET))
+        V.ibv_modify_qp(qp, V.QPAttr(qp_state=V.QPState.INIT))
+        V.ibv_modify_qp(qp, V.QPAttr(qp_state=V.QPState.RTR, dest_gid=b_gid,
+                                     dest_qp_num=b_qpn, rq_psn=psn))
+        V.ibv_modify_qp(qp, V.QPAttr(qp_state=V.QPState.RTS, sq_psn=psn))
+
+    def _drain_cqs(self) -> None:
+        self.send_scq.process_physical()
+        if self.recv_scq is not self.send_scq:
+            self.recv_scq.process_physical()
+
+    # ------------------------------------------------------------------
+    # recovery: State 2 -> 3 -> 4 -> 1  (§4.3.3)
+    # ------------------------------------------------------------------
+    def _start_probing(self) -> None:
+        if self._probing:
+            return
+        self._probing = True
+        self.default.ctx._probe_cb[self.default.qpn] = self._on_probe_result
+        self.lib.cluster.sim.schedule(self.lib.config.probe_interval,
+                                      self._probe_tick)
+
+    def _probe_tick(self) -> None:
+        if self.send_state is not SendState.FALLBACK:
+            self._probing = False
+            return
+        if self.default.state is not V.QPState.RTS:
+            self._reset_default()
+        wr = V.SendWR(wr_id=CTRL_WRID_BASE + next(_ctrl_seq),
+                      opcode=V.Opcode.WRITE, sge=None, remote_addr=0, rkey=0,
+                      send_flags=V.SEND_FLAG_SIGNALED)
+        wqe = self.default.post_send_wqe(wr, ring=False)
+        wqe.probe = True
+        self._probe_outstanding = True
+        self.default.ring_sq_doorbell()
+        self.lib.stats.probes_sent += 1
+
+    def _on_probe_result(self, wqe: V.SendWQE, status: V.WCStatus) -> None:
+        if not self._probe_outstanding:
+            return  # flush residue of an already-failed probe
+        self._probe_outstanding = False
+        if self.send_state is not SendState.FALLBACK:
+            self._probing = False
+            return
+        if status is V.WCStatus.SUCCESS:
+            self._probing = False
+            self._begin_recovery()
+        else:
+            self.lib.stats.probe_failures += 1
+            self._reset_default()
+            self.lib.cluster.sim.schedule(self.lib.config.probe_interval,
+                                          self._probe_tick)
+
+    def _begin_recovery(self) -> None:
+        self.send_state = SendState.WAIT_SIGNALED
+        self._recover_sent = False
+        self._fence_rec = None
+        # if the backup queue is already drained there is nothing to fence
+        if not any(not r.completed for r in self.send_recs):
+            self.send_state = SendState.WAIT_DRAINED
+            self._post_recover_ctrl()
+
+    def _on_fence_complete(self) -> None:
+        if self.send_state is SendState.WAIT_DRAINED and not self._recover_sent:
+            self._post_recover_ctrl()
+
+    def _post_recover_ctrl(self) -> None:
+        self._recover_sent = True
+        self._send_ctrl(CTRL_RECOVER, self.n_recv_completed)
+
+    def _on_peer_recover(self, _counter: int) -> None:
+        """Receive side of the switch-back: re-arm receives on the default
+        QP before any post-recovery data can flow (fence semantics)."""
+        if self.recv_state is RecvState.FALLBACK:
+            # The peer's fence WC guarantees all its backup-path data has
+            # been ACKed, i.e. our recv WCs are already in the backup CQ —
+            # drain them so only truly-outstanding receives move back.
+            self._drain_cqs()
+            self._repost_recvs(self.default)
+            self.recv_state = RecvState.DEFAULT
+        self._send_ctrl(CTRL_RECOVER_ACK, self.n_recv_completed)
+
+    def _on_peer_recover_ack(self, _counter: int) -> None:
+        if self.send_state is not SendState.WAIT_DRAINED:
+            return
+        # release the withheld doorbell: State 4 -> State 1
+        self.default.ring_sq_doorbell()
+        self._withheld.clear()
+        self._fence_rec = None
+        self.send_state = SendState.DEFAULT
+        self.lib.stats.recoveries += 1
+
+    def _abort_recovery(self, reenter: bool = True) -> None:
+        """Default path died again mid-recovery: withheld WRs (never
+        doorbelled) move back to the backup QP; state returns to FALLBACK."""
+        moved = self._withheld
+        self._withheld = []
+        self._fence_rec = None
+        for rec in moved:
+            if rec.completed:
+                continue
+            wr = rec.cur_wqe.to_wr()
+            wqe = self.backup.post_send_wqe(self._patch_wr(wr), ring=False)
+            self._map_send(rec, wqe)
+        self.backup.ring_sq_doorbell()
+        self.send_state = SendState.FALLBACK
+        if reenter:
+            self._start_probing()
+
+    # ------------------------------------------------------------------
+    # control channel
+    # ------------------------------------------------------------------
+    def _send_ctrl(self, msg_type: int, counter: int) -> None:
+        if self.ctrl is None or self.ctrl.state is not V.QPState.RTS:
+            self._propagate_errors("control QP unavailable")
+            return
+        wr = V.SendWR(wr_id=CTRL_WRID_BASE + next(_ctrl_seq),
+                      opcode=V.Opcode.WRITE_IMM, sge=None,
+                      remote_addr=0, rkey=0,
+                      imm_data=_pack_imm(msg_type, counter),
+                      send_flags=V.SEND_FLAG_SIGNALED)
+        try:
+            self.ctrl.post_send_wqe(wr, ring=True)
+        except V.VerbsError:
+            self._propagate_errors("control QP post failed")
+
+    def _post_ctrl_recv(self) -> None:
+        self.ctrl.post_recv_wqe(
+            V.RecvWR(wr_id=CTRL_WRID_BASE + next(_ctrl_seq)), ring=True)
+
+    def _on_ctrl_event(self, cq: V.CQ) -> None:
+        V.ibv_req_notify_cq(cq)
+        while True:
+            wcs = cq.poll(16)
+            if not wcs:
+                break
+            for wc in wcs:
+                self._dispatch_ctrl(wc)
+
+    def _dispatch_ctrl(self, wc: V.WC) -> None:
+        if wc.is_error:
+            # control path failure during fallback is unmaskable
+            if self.send_state is not SendState.DEFAULT or \
+                    self.recv_state is not RecvState.DEFAULT:
+                self._propagate_errors("control path failure")
+            return
+        if wc.opcode is V.WCOpcode.RECV_RDMA_WITH_IMM:
+            self._post_ctrl_recv()
+            msg_type, counter = _unpack_imm(wc.imm_data)
+            if msg_type == CTRL_NOTIFY:
+                self._on_peer_notify(counter)
+            elif msg_type == CTRL_ACK:
+                self._on_peer_ack(counter)
+            elif msg_type == CTRL_RECOVER:
+                self._on_peer_recover(counter)
+            elif msg_type == CTRL_RECOVER_ACK:
+                self._on_peer_recover_ack(counter)
+
+    # ------------------------------------------------------------------
+    # WC routing hooks (called by ShiftLib._route_wc)
+    # ------------------------------------------------------------------
+    def on_send_wc(self, rec: _SendRec, wc: V.WC) -> None:
+        if wc.is_error:
+            if wc.qp_num == self.default.qpn:
+                self.on_default_error(wc)
+            else:
+                self._propagate_errors(f"backup path failure: {wc.status}")
+            return
+        if rec.completed:
+            return
+        rec.completed = True
+        while self.send_recs and self.send_recs[0].completed:
+            self.send_recs.popleft()
+        if rec.two_sided:
+            self.n_sent_twosided_completed += 1
+        if self._await_first_success and self.send_state is SendState.FALLBACK:
+            self._await_first_success = False
+            if self._error_t0 is not None:
+                self.lib.stats.fallback_latencies.append(
+                    self.lib.cluster.sim.now - self._error_t0)
+                self._error_t0 = None
+        if rec.signaled:
+            self._emit_app_wc(rec, V.WCStatus.SUCCESS, wc)
+        if rec is self._fence_rec:
+            self._on_fence_complete()
+
+    def on_recv_wc(self, rec: _RecvRec, wc: V.WC) -> None:
+        if wc.is_error:
+            # recv flush errors accompany a send-side error; fallback is
+            # driven from the send side (footnote 3)
+            return
+        if rec.completed:
+            return
+        rec.completed = True
+        self.n_recv_completed += 1
+        while self.recv_fifo and self.recv_fifo[0].completed:
+            self.recv_fifo.popleft()
+        wc.qp_num = self.qpn  # opacity: the app sees its own QP number
+        self.recv_scq.app_buffer.append(wc)
+
+    def _emit_app_wc(self, rec: _SendRec, status: V.WCStatus,
+                     wc: Optional[V.WC] = None) -> None:
+        op = {V.Opcode.WRITE: V.WCOpcode.RDMA_WRITE,
+              V.Opcode.WRITE_IMM: V.WCOpcode.RDMA_WRITE,
+              V.Opcode.SEND: V.WCOpcode.SEND,
+              V.Opcode.READ: V.WCOpcode.RDMA_READ,
+              V.Opcode.FETCH_ADD: V.WCOpcode.FETCH_ADD,
+              V.Opcode.CMP_SWAP: V.WCOpcode.CMP_SWAP}[rec.opcode]
+        out = V.WC(wc.wr_id if wc else (rec.cur_wqe.wr_id if rec.cur_wqe
+                                        else 0),
+                   status, op,
+                   byte_len=wc.byte_len if wc else (
+                       rec.cur_wqe.length if rec.cur_wqe else 0),
+                   qp_num=self.qpn)
+        self.send_scq.app_buffer.append(out)
+
+    # ------------------------------------------------------------------
+    # unmaskable failure
+    # ------------------------------------------------------------------
+    def _propagate_errors(self, reason: str) -> None:
+        if self.send_state is SendState.FAILED:
+            return
+        self.send_state = SendState.FAILED
+        self._in_handshake = False
+        self.lib.stats.errors_propagated += 1
+        self.fail_reason = reason
+        first = True
+        for rec in self.send_recs:
+            if rec.completed:
+                continue
+            rec.completed = True
+            self._emit_app_wc(rec, V.WCStatus.RETRY_EXC_ERR if first
+                              else V.WCStatus.WR_FLUSH_ERR)
+            first = False
+        for rec in self.recv_fifo:
+            if not rec.completed:
+                rec.completed = True
+                wc = V.WC(0, V.WCStatus.WR_FLUSH_ERR, V.WCOpcode.RECV,
+                          qp_num=self.qpn)
+                self.recv_scq.app_buffer.append(wc)
+
+
+# ---------------------------------------------------------------------------
+# ShiftLib — the drop-in library
+# ---------------------------------------------------------------------------
+
+
+class ShiftLib:
+    """Drop-in replacement for StandardLib with SHIFT fault tolerance."""
+
+    name = "shift"
+
+    def __init__(self, cluster: Cluster, host: str,
+                 kv: Optional[KVStore] = None,
+                 config: Optional[ShiftConfig] = None):
+        self.cluster = cluster
+        self.host = host
+        self.kv = kv if kv is not None else _shared_kv(cluster)
+        self.config = config or ShiftConfig()
+        self.stats = ShiftStats()
+        self.actor = _ControlActor(self)
+        self.lkey_map: Dict[int, int] = {}
+        self.rkey_cache: Dict[int, int] = {}
+        self.backup_lkeys: set = set()
+        self.backup_rkeys: set = set()
+        self.wqe_map: Dict[int, Tuple[_SendRec, ShiftQP]] = {}
+        self.rwqe_map: Dict[int, Tuple[_RecvRec, ShiftQP]] = {}
+        self.qpn_map: Dict[int, ShiftQP] = {}
+        self.shift_qps: List[ShiftQP] = []
+
+    # -- control verbs (recorded + shadowed) --------------------------------
+    def open_device(self, nic: str) -> ShiftContext:
+        return ShiftContext(self, V.ibv_open_device(self.cluster, self.host, nic))
+
+    def alloc_pd(self, sctx: ShiftContext) -> ShiftPD:
+        return ShiftPD(self, sctx)
+
+    def reg_mr(self, spd: ShiftPD, buf: np.ndarray) -> ShiftMR:
+        return ShiftMR(self, spd, buf)
+
+    def create_cq(self, sctx: ShiftContext, depth: int) -> ShiftCQ:
+        return ShiftCQ(self, sctx, depth)
+
+    def create_qp(self, spd: ShiftPD, init: V.QPInitAttr) -> ShiftQP:
+        return ShiftQP(self, spd, init)
+
+    def modify_qp(self, sqp: ShiftQP, attr: V.QPAttr) -> None:
+        sqp.modify(attr)
+
+    def query_qp(self, sqp: ShiftQP) -> V.QPAttr:
+        return V.ibv_query_qp(sqp.default)
+
+    # -- data verbs ----------------------------------------------------------
+    def post_send(self, sqp: ShiftQP, wr: V.SendWR) -> None:
+        sqp.post_send(wr)
+
+    def post_recv(self, sqp: ShiftQP, wr: V.RecvWR) -> None:
+        sqp.post_recv(wr)
+
+    def poll_cq(self, scq: ShiftCQ, n: int) -> List[V.WC]:
+        return scq.poll(n)
+
+    def route_of(self, sqp: ShiftQP) -> Tuple[str, int]:
+        return sqp.default.ctx.nic.gid, sqp.default.qpn
+
+    def connect(self, sqp: ShiftQP, peer_gid: str, peer_qpn: int) -> None:
+        self.modify_qp(sqp, V.QPAttr(qp_state=V.QPState.INIT))
+        self.modify_qp(sqp, V.QPAttr(qp_state=V.QPState.RTR,
+                                     dest_gid=peer_gid, dest_qp_num=peer_qpn,
+                                     rq_psn=0))
+        self.modify_qp(sqp, V.QPAttr(qp_state=V.QPState.RTS, sq_psn=0))
+
+    def settle(self, duration: float = 0.1) -> None:
+        self.cluster.sim.run(until=self.cluster.sim.now + duration)
+
+    # -- WC routing ------------------------------------------------------
+    def _route_wc(self, wc: V.WC, scq: ShiftCQ) -> None:
+        rwqe = getattr(wc, "_rwqe", None)
+        if rwqe is not None:
+            entry = self.rwqe_map.pop(id(rwqe), None)
+            if entry is None:
+                return  # stale ring entry from a previous cycle
+            rec, sqp = entry
+            sqp.on_recv_wc(rec, wc)
+            return
+        wqe = getattr(wc, "_wqe", None)
+        if wqe is not None:
+            entry = self.wqe_map.pop(id(wqe), None)
+            if entry is None:
+                if wc.is_error:
+                    sqp = self.qpn_map.get(wc.qp_num)
+                    if sqp is not None:
+                        # error on a WQE we no longer track (e.g. flushed
+                        # twice) still signals path failure
+                        if wc.qp_num == sqp.default.qpn:
+                            sqp.on_default_error(wc)
+                return
+            rec, sqp = entry
+            if wc.is_error:
+                # keep the mapping: the rec is outstanding until resubmitted
+                self.wqe_map[id(wqe)] = (rec, sqp)
+            sqp.on_send_wc(rec, wc)
+            return
+        # WC without refs: synthesized/flush recv errors on an errored QP
+        sqp = self.qpn_map.get(wc.qp_num)
+        if sqp is not None and wc.is_error:
+            if wc.qp_num == sqp.default.qpn:
+                sqp.on_default_error(wc)
+
+
+_cluster_kv: Dict[int, KVStore] = {}
+
+
+def _shared_kv(cluster: Cluster) -> KVStore:
+    """One management-network KV store per cluster (the paper's Redis)."""
+    kv = _cluster_kv.get(id(cluster))
+    if kv is None:
+        kv = KVStore(cluster.sim)
+        _cluster_kv[id(cluster)] = kv
+    return kv

@@ -1,0 +1,870 @@
+"""Simulated ibverbs: the user-space RDMA API surface SHIFT intercepts.
+
+Faithful-to-the-paper details implemented here (not abstracted away):
+
+* WRs are converted into WQEs stored in per-QP work-queue rings that live in
+  host memory — SHIFT recovers these for cross-NIC resubmission (§4.1).
+* Doorbells are explicit: a WQE posted without ringing the doorbell is NOT
+  executed by the NIC — the mechanism behind SHIFT's WR execution fence
+  (§4.3.3).
+* RC transport: per-message PSNs, receiver ``epsn`` duplicate-drop (so the
+  *same* QP gives exactly-once even under ACK loss — losing this state is
+  precisely the cross-NIC hazard of §3.1), ACK timeout + retry_cnt, RNR NAK,
+  error WCs (first real status, then WR_FLUSH_ERR for the rest) and the
+  QP error state.
+* Data and ACK delivery are separate simulator events, so failures produce
+  both packet-lost and ACK-lost traces (Lemma 3.1's indistinguishable pair).
+* Two-sided ops consume receive WQEs (Lemma C.4 non-idempotency is real
+  here); atomics (FETCH_ADD / CMP_SWAP) execute on destination memory.
+
+Wall-clock cost of each verb call is the Python execution itself — that is
+what the Fig. 7 benchmark measures (standard vs SHIFT-wrapped verbs).
+"""
+
+from __future__ import annotations
+
+import enum
+import itertools
+import struct
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .fabric import Cluster, RNIC
+
+
+# ---------------------------------------------------------------------------
+# Enums / constants
+# ---------------------------------------------------------------------------
+
+
+class Opcode(enum.Enum):
+    WRITE = "RDMA_WRITE"
+    WRITE_IMM = "RDMA_WRITE_WITH_IMM"
+    SEND = "SEND"
+    READ = "RDMA_READ"
+    FETCH_ADD = "ATOMIC_FETCH_AND_ADD"
+    CMP_SWAP = "ATOMIC_CMP_AND_SWP"
+
+
+ATOMIC_OPCODES = (Opcode.FETCH_ADD, Opcode.CMP_SWAP)
+TWO_SIDED_OPCODES = (Opcode.SEND, Opcode.WRITE_IMM)
+
+
+class QPState(enum.Enum):
+    RESET = "RESET"
+    INIT = "INIT"
+    RTR = "RTR"
+    RTS = "RTS"
+    ERR = "ERR"
+
+
+class WCStatus(enum.Enum):
+    SUCCESS = "IBV_WC_SUCCESS"
+    RETRY_EXC_ERR = "IBV_WC_RETRY_EXC_ERR"
+    RNR_RETRY_EXC_ERR = "IBV_WC_RNR_RETRY_EXC_ERR"
+    WR_FLUSH_ERR = "IBV_WC_WR_FLUSH_ERR"
+    REM_ACCESS_ERR = "IBV_WC_REM_ACCESS_ERR"
+    LOC_PROT_ERR = "IBV_WC_LOC_PROT_ERR"
+    FATAL_ERR = "IBV_WC_FATAL_ERR"
+
+
+class WCOpcode(enum.Enum):
+    SEND = "IBV_WC_SEND"
+    RDMA_WRITE = "IBV_WC_RDMA_WRITE"
+    RDMA_READ = "IBV_WC_RDMA_READ"
+    FETCH_ADD = "IBV_WC_FETCH_ADD"
+    CMP_SWAP = "IBV_WC_COMP_SWAP"
+    RECV = "IBV_WC_RECV"
+    RECV_RDMA_WITH_IMM = "IBV_WC_RECV_RDMA_WITH_IMM"
+
+
+SEND_FLAG_SIGNALED = 0x1
+SEND_FLAG_FENCE = 0x2
+
+PER_MESSAGE_OVERHEAD = 0.15e-6  # headers/doorbell processing, seconds
+
+
+class VerbsError(RuntimeError):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# WRs / WQEs / WCs
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SGE:
+    addr: int
+    length: int
+    lkey: int
+
+
+@dataclass
+class SendWR:
+    wr_id: int
+    opcode: Opcode
+    sge: Optional[SGE] = None
+    remote_addr: int = 0
+    rkey: int = 0
+    imm_data: int = 0
+    send_flags: int = SEND_FLAG_SIGNALED
+    compare_add: int = 0
+    swap: int = 0
+
+
+@dataclass
+class RecvWR:
+    wr_id: int
+    sge: Optional[SGE] = None
+
+
+@dataclass
+class WC:
+    wr_id: int
+    status: WCStatus
+    opcode: WCOpcode
+    byte_len: int = 0
+    imm_data: Optional[int] = None
+    qp_num: int = 0
+    wc_flags: int = 0
+
+    @property
+    def is_error(self) -> bool:
+        return self.status is not WCStatus.SUCCESS
+
+
+class SendWQE:
+    """Driver-converted send WR, resident in the SQ ring (host memory).
+
+    SHIFT copies these on fallback — they stay valid across NIC failures.
+    """
+
+    __slots__ = ("idx", "wr_id", "opcode", "local_addr", "length", "lkey",
+                 "remote_addr", "rkey", "imm_data", "signaled", "fence",
+                 "compare_add", "swap", "psn", "attempts", "acked",
+                 "completed", "status", "probe", "timeout_ev")
+
+    def __init__(self, idx: int, wr: SendWR):
+        self.idx = idx
+        self.wr_id = wr.wr_id
+        self.opcode = wr.opcode
+        self.local_addr = wr.sge.addr if wr.sge else 0
+        self.length = wr.sge.length if wr.sge else 0
+        self.lkey = wr.sge.lkey if wr.sge else 0
+        self.remote_addr = wr.remote_addr
+        self.rkey = wr.rkey
+        self.imm_data = wr.imm_data
+        self.signaled = bool(wr.send_flags & SEND_FLAG_SIGNALED)
+        self.fence = bool(wr.send_flags & SEND_FLAG_FENCE)
+        self.compare_add = wr.compare_add
+        self.swap = wr.swap
+        self.psn: Optional[int] = None
+        self.attempts = 0
+        self.acked = False
+        self.completed = False
+        self.status: Optional[WCStatus] = None
+        self.probe = False  # sequence-transparent management probe (SHIFT)
+        self.timeout_ev = None
+
+    def to_wr(self) -> SendWR:
+        """Reconstruct a WR from this WQE (SHIFT's 'copying inherent WQEs')."""
+        flags = (SEND_FLAG_SIGNALED if self.signaled else 0) | (
+            SEND_FLAG_FENCE if self.fence else 0)
+        sge = SGE(self.local_addr, self.length, self.lkey) if (
+            self.length or self.lkey) else None
+        return SendWR(self.wr_id, self.opcode, sge, self.remote_addr,
+                      self.rkey, self.imm_data, flags,
+                      self.compare_add, self.swap)
+
+
+class RecvWQE:
+    __slots__ = ("idx", "wr_id", "addr", "length", "lkey", "consumed",
+                 "completed", "status")
+
+    def __init__(self, idx: int, wr: RecvWR):
+        self.idx = idx
+        self.wr_id = wr.wr_id
+        self.addr = wr.sge.addr if wr.sge else 0
+        self.length = wr.sge.length if wr.sge else 0
+        self.lkey = wr.sge.lkey if wr.sge else 0
+        self.consumed = False
+        self.completed = False
+        self.status: Optional[WCStatus] = None
+
+    def to_wr(self) -> RecvWR:
+        sge = SGE(self.addr, self.length, self.lkey) if (
+            self.length or self.lkey) else None
+        return RecvWR(self.wr_id, sge)
+
+
+# ---------------------------------------------------------------------------
+# Resources
+# ---------------------------------------------------------------------------
+
+_mr_keys = itertools.count(0x10)
+_qp_nums = itertools.count(0x100)
+_cq_nums = itertools.count(0x500)
+
+
+class MR:
+    """Registered memory region backed by a numpy uint8 buffer (zero-copy:
+    the transport DMAs directly out of / into this buffer)."""
+
+    def __init__(self, pd: "PD", buf: np.ndarray, addr: Optional[int] = None):
+        if buf.dtype != np.uint8 or buf.ndim != 1:
+            raise VerbsError("MR buffers must be 1-D uint8 views")
+        self.pd = pd
+        self.buf = buf
+        self.length = buf.nbytes
+        # Registering the same buffer on a second (backup) NIC reuses the
+        # same virtual address — only the keys differ (§4.2: SHIFT patches
+        # MR keys on resubmission, not addresses).
+        self.addr = addr if addr is not None else pd.ctx.nic.host.alloc_addr(
+            self.length)
+        self.lkey = next(_mr_keys)
+        self.rkey = next(_mr_keys)
+        pd.ctx.register_mr(self)
+
+    def slice(self, addr: int, length: int) -> np.ndarray:
+        off = addr - self.addr
+        if off < 0 or off + length > self.length:
+            raise VerbsError("MR bounds")
+        return self.buf[off:off + length]
+
+
+class PD:
+    def __init__(self, ctx: "Context"):
+        self.ctx = ctx
+        self.mrs: List[MR] = []
+
+
+class CompChannel:
+    """Completion event channel. In the simulator, 'blocking on the channel
+    in a background thread' is modeled as a registered callback actor."""
+
+    def __init__(self, ctx: "Context"):
+        self.ctx = ctx
+        self.callback: Optional[Callable[["CQ"], None]] = None
+        self.pending: List["CQ"] = []
+
+    def on_event(self, cb: Callable[["CQ"], None]) -> None:
+        self.callback = cb
+
+    def _fire(self, cq: "CQ") -> None:
+        self.pending.append(cq)
+        if self.callback is not None:
+            # wake the "background thread" at current virtual time (+eps)
+            self.ctx.sim.schedule(1e-7, self.callback, cq)
+
+
+class CQ:
+    def __init__(self, ctx: "Context", depth: int,
+                 channel: Optional[CompChannel] = None):
+        self.ctx = ctx
+        self.cqn = next(_cq_nums)
+        self.depth = depth
+        self.entries: List[WC] = []
+        self.channel = channel
+        self.armed = False
+
+    def push(self, wc: WC) -> None:
+        if len(self.entries) >= self.depth:
+            raise VerbsError(f"CQ overflow (depth={self.depth})")
+        self.entries.append(wc)
+        if self.armed and self.channel is not None:
+            self.armed = False  # one event per arm (ibv_req_notify_cq)
+            self.channel._fire(self)
+
+    def poll(self, n: int) -> List[WC]:
+        out = self.entries[:n]
+        del self.entries[:n]
+        return out
+
+
+@dataclass
+class QPCap:
+    max_send_wr: int = 512
+    max_recv_wr: int = 256
+
+
+@dataclass
+class QPInitAttr:
+    send_cq: CQ = None
+    recv_cq: CQ = None
+    cap: QPCap = field(default_factory=QPCap)
+    qp_type: str = "RC"
+
+
+@dataclass
+class QPAttr:
+    """Subset of ibv_qp_attr used by modify_qp."""
+    qp_state: QPState = None
+    dest_gid: str = None
+    dest_qp_num: int = None
+    rq_psn: int = 0
+    sq_psn: int = 0
+    timeout: float = None
+    retry_cnt: int = None
+    rnr_retry: int = None
+
+
+class QP:
+    """An RC queue pair with explicit rings, doorbells and PSN state."""
+
+    def __init__(self, pd: "PD", init: QPInitAttr):
+        self.pd = pd
+        self.ctx = pd.ctx
+        self.qpn = next(_qp_nums)
+        self.send_cq = init.send_cq
+        self.recv_cq = init.recv_cq
+        self.cap = init.cap
+        self.qp_type = init.qp_type
+        self.state = QPState.RESET
+        self.dest_gid: Optional[str] = None
+        self.dest_qpn: Optional[int] = None
+        # --- send queue ring ---
+        self.sq: List[SendWQE] = []
+        self.sq_doorbell = 0       # WQEs [0, doorbell) visible to the NIC
+        self.sq_cursor = 0         # next WQE the NIC engine will serialize
+        self.sq_completed = 0      # in-order completion watermark
+        # --- recv queue ring ---
+        self.rq: List[RecvWQE] = []
+        self.rq_doorbell = 0
+        self.rq_consumed = 0
+        # --- transport state ---
+        self.next_psn = 0
+        self.epsn = 0
+        self.timeout = pd.ctx.cluster.ack_timeout
+        self.retry_cnt = pd.ctx.cluster.retry_cnt
+        self.rnr_retry = pd.ctx.cluster.rnr_retry
+        self._serializing = 0  # count of in-progress serializations
+        # Epoch guards: a QP reset invalidates every in-flight transport
+        # event referencing the old rings (prevents 'ghost' deliveries).
+        self.epoch = 0
+        self.ctx.register_qp(self)
+
+    # ------------------------------------------------------------------
+    # state transitions
+    # ------------------------------------------------------------------
+    def modify(self, attr: QPAttr) -> None:
+        st = attr.qp_state
+        if st is QPState.RESET:
+            self._reset()
+        elif st is QPState.INIT:
+            if self.state is not QPState.RESET:
+                raise VerbsError(f"modify to INIT from {self.state}")
+            self.state = QPState.INIT
+        elif st is QPState.RTR:
+            if self.state is not QPState.INIT:
+                raise VerbsError(f"modify to RTR from {self.state}")
+            if attr.dest_gid is None or attr.dest_qp_num is None:
+                raise VerbsError("RTR requires dest_gid/dest_qp_num")
+            self.dest_gid = attr.dest_gid
+            self.dest_qpn = attr.dest_qp_num
+            self.epsn = attr.rq_psn
+            self.state = QPState.RTR
+        elif st is QPState.RTS:
+            if self.state is not QPState.RTR:
+                raise VerbsError(f"modify to RTS from {self.state}")
+            self.next_psn = attr.sq_psn
+            if attr.timeout is not None:
+                self.timeout = attr.timeout
+            if attr.retry_cnt is not None:
+                self.retry_cnt = attr.retry_cnt
+            if attr.rnr_retry is not None:
+                self.rnr_retry = attr.rnr_retry
+            self.state = QPState.RTS
+            self.ctx.sim.schedule(0.0, self.ctx._engine_kick, self)
+        elif st is QPState.ERR:
+            self._enter_error(WCStatus.FATAL_ERR, None)
+        else:
+            raise VerbsError(f"unsupported transition {st}")
+
+    def query(self) -> QPAttr:
+        """ibv_query_qp — SHIFT calls this at RTR/RTS time to be able to
+        reset the default QP after fallback (the Fig. 7 overhead)."""
+        return QPAttr(qp_state=self.state, dest_gid=self.dest_gid,
+                      dest_qp_num=self.dest_qpn, rq_psn=self.epsn,
+                      sq_psn=self.next_psn, timeout=self.timeout,
+                      retry_cnt=self.retry_cnt, rnr_retry=self.rnr_retry)
+
+    def _reset(self) -> None:
+        for wqe in self.sq:
+            if wqe.timeout_ev is not None:
+                wqe.timeout_ev.cancel()
+        self.sq = []
+        self.rq = []
+        self.sq_doorbell = self.sq_cursor = self.sq_completed = 0
+        self.rq_doorbell = self.rq_consumed = 0
+        self.next_psn = 0
+        self.epsn = 0
+        self._serializing = 0
+        self.epoch += 1
+        self.state = QPState.RESET
+
+    # ------------------------------------------------------------------
+    # posting (driver level: post and doorbell are separable — SHIFT's
+    # execution fence depends on that)
+    # ------------------------------------------------------------------
+    def post_send_wqe(self, wr: SendWR, ring: bool = True) -> SendWQE:
+        if self.state not in (QPState.RTS,):
+            if self.state is QPState.ERR:
+                raise VerbsError("post_send on QP in ERR state")
+            # posting before RTS is allowed at driver level (SHIFT withholds
+            # doorbells on not-yet-active QPs); real NICs require RTS to
+            # *execute*, which the engine enforces.
+        if len(self.sq) - self.sq_completed >= self.cap.max_send_wr:
+            raise VerbsError("send queue full")
+        wqe = SendWQE(len(self.sq), wr)
+        self.sq.append(wqe)
+        if ring:
+            self.ring_sq_doorbell()
+        return wqe
+
+    def ring_sq_doorbell(self, upto: Optional[int] = None) -> None:
+        """Make WQEs visible to the NIC and kick the engine."""
+        self.sq_doorbell = len(self.sq) if upto is None else upto
+        self.ctx._engine_kick(self)
+
+    def post_recv_wqe(self, wr: RecvWR, ring: bool = True) -> RecvWQE:
+        if len(self.rq) - self.rq_consumed >= self.cap.max_recv_wr:
+            raise VerbsError("recv queue full")
+        wqe = RecvWQE(len(self.rq), wr)
+        self.rq.append(wqe)
+        if ring:
+            self.rq_doorbell = len(self.rq)
+        return wqe
+
+    # ------------------------------------------------------------------
+    # error handling
+    # ------------------------------------------------------------------
+    def _enter_error(self, status: WCStatus, first_wqe: Optional[SendWQE]) -> None:
+        """First error gets the real status; everything else flushes."""
+        if self.state is QPState.ERR:
+            return
+        self.state = QPState.ERR
+        if first_wqe is not None and not first_wqe.completed:
+            self._complete_send(first_wqe, status, force_wc=True)
+        for wqe in self.sq[self.sq_completed:]:
+            if not wqe.completed:
+                self._complete_send(wqe, WCStatus.WR_FLUSH_ERR, force_wc=True)
+        for rwqe in self.rq[self.rq_consumed:]:
+            if not rwqe.completed:
+                rwqe.completed = True
+                rwqe.status = WCStatus.WR_FLUSH_ERR
+                wc = WC(rwqe.wr_id, WCStatus.WR_FLUSH_ERR,
+                        WCOpcode.RECV, qp_num=self.qpn)
+                wc._rwqe = rwqe
+                self.recv_cq.push(wc)
+
+    def _complete_send(self, wqe: SendWQE, status: WCStatus,
+                       force_wc: bool = False) -> None:
+        if wqe.completed:
+            return
+        wqe.completed = True
+        wqe.status = status
+        if wqe.timeout_ev is not None:
+            wqe.timeout_ev.cancel()
+            wqe.timeout_ev = None
+        while (self.sq_completed < len(self.sq)
+               and self.sq[self.sq_completed].completed):
+            self.sq_completed += 1
+        if (wqe.signaled or force_wc) and not wqe.probe:
+            op = {Opcode.WRITE: WCOpcode.RDMA_WRITE,
+                  Opcode.WRITE_IMM: WCOpcode.RDMA_WRITE,
+                  Opcode.SEND: WCOpcode.SEND,
+                  Opcode.READ: WCOpcode.RDMA_READ,
+                  Opcode.FETCH_ADD: WCOpcode.FETCH_ADD,
+                  Opcode.CMP_SWAP: WCOpcode.CMP_SWAP}[wqe.opcode]
+            wc = WC(wqe.wr_id, status, op, wqe.length, qp_num=self.qpn)
+            wc._wqe = wqe
+            self.send_cq.push(wc)
+        elif wqe.probe and self.ctx._probe_cb.get(self.qpn):
+            self.ctx._probe_cb[self.qpn](wqe, status)
+
+
+# ---------------------------------------------------------------------------
+# Context: one open device (RNIC) + its transport engine
+# ---------------------------------------------------------------------------
+
+
+class Context:
+    """ibv_context — an opened RNIC. Also hosts the RC transport engine."""
+
+    def __init__(self, cluster: Cluster, nic: RNIC):
+        self.cluster = cluster
+        self.sim = cluster.sim
+        self.nic = nic
+        self.qps: Dict[int, QP] = {}
+        self._probe_cb: Dict[int, Callable] = {}
+        nic.state_listeners.append(self._on_nic_state)
+
+    # -- registries -----------------------------------------------------
+    def register_qp(self, qp: QP) -> None:
+        self.qps[qp.qpn] = qp
+        _qp_registry[(self.nic.gid, qp.qpn)] = qp
+
+    def register_mr(self, mr: MR) -> None:
+        _mr_registry[(self.nic.host.name, mr.rkey)] = mr
+        _mr_registry_lkey[(self.nic.host.name, mr.lkey)] = mr
+
+    def _local_mr(self, lkey: int) -> MR:
+        try:
+            return _mr_registry_lkey[(self.nic.host.name, lkey)]
+        except KeyError:
+            raise VerbsError(f"bad lkey {lkey}")
+
+    # -- NIC state ------------------------------------------------------
+    def _on_nic_state(self, up: bool) -> None:
+        if up:
+            for qp in self.qps.values():
+                self.sim.schedule(0.0, self._engine_kick, qp)
+            return
+        # NIC died: every QP with pending work errors out after the
+        # detection latency (footnote 3: failures manifest as error WCs).
+        for qp in self.qps.values():
+            if qp.state in (QPState.RTS, QPState.RTR) and (
+                    qp.sq_completed < qp.sq_doorbell or qp.rq_consumed < qp.rq_doorbell
+                    or qp.sq_cursor < qp.sq_doorbell):
+                self.sim.schedule(self.cluster.nic_error_detect_latency,
+                                  qp._enter_error, WCStatus.FATAL_ERR, None)
+
+    # ------------------------------------------------------------------
+    # RC transport engine
+    # ------------------------------------------------------------------
+    def _engine_kick(self, qp: QP) -> None:
+        """Start serializing the next doorbell'd WQE if the NIC is free."""
+        if qp.state is not QPState.RTS or qp._serializing > 0:
+            return
+        if qp.sq_cursor >= qp.sq_doorbell:
+            return
+        wqe = qp.sq[qp.sq_cursor]
+        qp.sq_cursor += 1
+        self._transmit(qp, wqe, first_attempt=True)
+
+    def _transmit(self, qp: QP, wqe: SendWQE, first_attempt: bool) -> None:
+        if qp.state is not QPState.RTS or wqe.completed:
+            return
+        if not self.nic.up:
+            self.sim.schedule(self.cluster.nic_error_detect_latency,
+                              qp._enter_error, WCStatus.RETRY_EXC_ERR, wqe)
+            return
+        if first_attempt and wqe.psn is None and not wqe.probe:
+            wqe.psn = qp.next_psn
+            qp.next_psn += 1
+        wqe.attempts += 1
+        # DMA-read the payload out of registered memory at transmit time
+        payload = None
+        if wqe.opcode in (Opcode.WRITE, Opcode.WRITE_IMM, Opcode.SEND) and wqe.length:
+            mr = self._local_mr(wqe.lkey)
+            payload = bytes(mr.slice(wqe.local_addr, wqe.length))
+        # serialization occupies the NIC (compute share before joining)
+        bw = self.nic.effective_bandwidth()
+        qp._serializing += 1
+        self.nic.active_flows += 1
+        ser = PER_MESSAGE_OVERHEAD + (wqe.length / bw if wqe.length else 0.0)
+        self.sim.schedule(ser, self._serialized, qp, wqe, payload, qp.epoch)
+
+    def _serialized(self, qp: QP, wqe: SendWQE, payload: Optional[bytes],
+                    epoch: int) -> None:
+        self.nic.active_flows = max(0, self.nic.active_flows - 1)
+        if epoch != qp.epoch:
+            return  # QP was reset while this WQE was on the wire
+        qp._serializing = max(0, qp._serializing - 1)
+        # pipeline: next WQE can start serializing immediately
+        self._engine_kick(qp)
+        if qp.state is not QPState.RTS:
+            return
+        dst = self.cluster.nic_by_gid.get(_gid_of(qp))
+        # arm the ACK timeout
+        if wqe.timeout_ev is not None:
+            wqe.timeout_ev.cancel()
+        wqe.timeout_ev = self.sim.schedule(qp.timeout, self._ack_timeout,
+                                           qp, wqe, epoch)
+        if dst is None or not self.cluster.path_up(self.nic, dst):
+            return  # packet lost on the wire
+        lat = self.cluster.path_latency(self.nic, dst)
+        self.sim.schedule(lat, self._deliver, qp, wqe, payload, dst, epoch)
+
+    # -- receiver side ----------------------------------------------------
+    def _deliver(self, src_qp: QP, wqe: SendWQE, payload: Optional[bytes],
+                 dst_nic: RNIC, epoch: int) -> None:
+        # NB: receiver-side execution proceeds even if the *sender* QP was
+        # reset meanwhile — the packet is physically on the wire (this is
+        # exactly the 'Ghost' of Theorem 3.4). Only sender completion is
+        # epoch-guarded.
+        if not self.cluster.path_up(src_qp.pd.ctx.nic, dst_nic):
+            return  # dropped in flight
+        dqp = _qp_registry.get((dst_nic.gid, src_qp.dest_qpn))
+        if dqp is None or dqp.state not in (QPState.RTR, QPState.RTS):
+            return  # receiver QP not ready: silent drop -> sender timeout
+        if wqe.probe:
+            # Sequence-transparent management probe (see shift.py): ACK if
+            # the receiver QP is alive, never touches epsn or memory.
+            self._send_ack(src_qp, wqe, dst_nic, rnr=False, epoch=epoch)
+            return
+        if wqe.psn < dqp.epsn:
+            # duplicate (ACK was lost): hardware drops and re-ACKs —
+            # same-QP exactly-once. This state is what dies with the NIC.
+            self._send_ack(src_qp, wqe, dst_nic, rnr=False, epoch=epoch)
+            return
+        if wqe.psn > dqp.epsn:
+            return  # gap: drop, let the sender retransmit in order
+        # psn == epsn: execute
+        result = self._execute_at_receiver(dqp, wqe, payload, dst_nic)
+        if result == "rnr":
+            self._send_ack(src_qp, wqe, dst_nic, rnr=True, epoch=epoch)
+            return
+        if result == "acc_err":
+            self._send_nak_access(src_qp, wqe, dst_nic, epoch)
+            return
+        dqp.epsn += 1
+        self._send_ack(src_qp, wqe, dst_nic, rnr=False, read_data=result,
+                       epoch=epoch)
+
+    def _execute_at_receiver(self, dqp: QP, wqe: SendWQE,
+                             payload: Optional[bytes], dst_nic: RNIC):
+        host = dst_nic.host.name
+        if wqe.opcode in (Opcode.WRITE, Opcode.WRITE_IMM):
+            if wqe.length:
+                mr = _find_mr(host, wqe.rkey, wqe.remote_addr, wqe.length)
+                if mr is None:
+                    return "acc_err"
+                mr.slice(wqe.remote_addr, wqe.length)[:] = np.frombuffer(
+                    payload, dtype=np.uint8)
+            if wqe.opcode is Opcode.WRITE_IMM:
+                rwqe = _consume_recv(dqp)
+                if rwqe is None:
+                    return "rnr"
+                wc = WC(rwqe.wr_id, WCStatus.SUCCESS,
+                        WCOpcode.RECV_RDMA_WITH_IMM,
+                        byte_len=wqe.length, imm_data=wqe.imm_data,
+                        qp_num=dqp.qpn)
+                wc._rwqe = rwqe
+                dqp.recv_cq.push(wc)
+            return None
+        if wqe.opcode is Opcode.SEND:
+            rwqe = _consume_recv(dqp)
+            if rwqe is None:
+                return "rnr"
+            if wqe.length:
+                if wqe.length > rwqe.length:
+                    return "acc_err"
+                mr = _mr_registry_lkey.get((host, rwqe.lkey))
+                if mr is None:
+                    return "acc_err"
+                mr.slice(rwqe.addr, wqe.length)[:] = np.frombuffer(
+                    payload, dtype=np.uint8)
+            wc = WC(rwqe.wr_id, WCStatus.SUCCESS, WCOpcode.RECV,
+                    byte_len=wqe.length, imm_data=None, qp_num=dqp.qpn)
+            wc._rwqe = rwqe
+            dqp.recv_cq.push(wc)
+            return None
+        if wqe.opcode is Opcode.READ:
+            mr = _find_mr(host, wqe.rkey, wqe.remote_addr, wqe.length)
+            if mr is None:
+                return "acc_err"
+            return bytes(mr.slice(wqe.remote_addr, wqe.length))
+        if wqe.opcode in ATOMIC_OPCODES:
+            mr = _find_mr(host, wqe.rkey, wqe.remote_addr, 8)
+            if mr is None:
+                return "acc_err"
+            cell = mr.slice(wqe.remote_addr, 8)
+            old = struct.unpack("<q", bytes(cell))[0]
+            if wqe.opcode is Opcode.FETCH_ADD:
+                cell[:] = np.frombuffer(
+                    struct.pack("<q", old + wqe.compare_add), dtype=np.uint8)
+            else:  # CMP_SWAP
+                if old == wqe.compare_add:
+                    cell[:] = np.frombuffer(
+                        struct.pack("<q", wqe.swap), dtype=np.uint8)
+            return struct.pack("<q", old)
+        raise VerbsError(f"unhandled opcode {wqe.opcode}")
+
+    # -- ACK path -----------------------------------------------------------
+    def _send_ack(self, src_qp: QP, wqe: SendWQE, dst_nic: RNIC,
+                  rnr: bool, read_data: Optional[bytes] = None,
+                  epoch: int = 0) -> None:
+        src_nic = src_qp.pd.ctx.nic
+        lat = self.cluster.path_latency(dst_nic, src_nic)
+        if isinstance(read_data, (bytes, bytearray)) and wqe.opcode is Opcode.READ:
+            # response carries data: serialize at the responder NIC
+            lat += len(read_data) / max(dst_nic.effective_bandwidth(), 1.0)
+        self.sim.schedule(lat, self._ack_arrive, src_qp, wqe, dst_nic, rnr,
+                          read_data, epoch)
+
+    def _ack_arrive(self, qp: QP, wqe: SendWQE, dst_nic: RNIC, rnr: bool,
+                    read_data, epoch: int) -> None:
+        src_nic = qp.pd.ctx.nic
+        if not self.cluster.path_up(dst_nic, src_nic):
+            return  # ACK lost — Lemma 3.1 trace T2
+        if epoch != qp.epoch:
+            return  # stale: the sender QP was reset since this was sent
+        if qp.state is not QPState.RTS or wqe.completed:
+            return
+        if rnr:
+            if wqe.timeout_ev is not None:
+                wqe.timeout_ev.cancel()
+            if wqe.attempts > qp.rnr_retry:
+                qp._enter_error(WCStatus.RNR_RETRY_EXC_ERR, wqe)
+                return
+            self.sim.schedule(self.cluster.rnr_timer, self._retransmit,
+                              qp, wqe, epoch)
+            return
+        wqe.acked = True
+        if isinstance(read_data, (bytes, bytearray)) and wqe.opcode in (
+                Opcode.READ, *ATOMIC_OPCODES):
+            n = wqe.length if wqe.opcode is Opcode.READ else 8
+            mr = self._local_mr(wqe.lkey)
+            mr.slice(wqe.local_addr, n)[:] = np.frombuffer(
+                bytes(read_data[:n]), dtype=np.uint8)
+        qp._complete_send(wqe, WCStatus.SUCCESS)
+
+    def _send_nak_access(self, src_qp: QP, wqe: SendWQE, dst_nic: RNIC,
+                         epoch: int) -> None:
+        src_nic = src_qp.pd.ctx.nic
+        lat = self.cluster.path_latency(dst_nic, src_nic)
+
+        def _nak():
+            if epoch != src_qp.epoch:
+                return
+            if src_qp.state is QPState.RTS and not wqe.completed:
+                src_qp._enter_error(WCStatus.REM_ACCESS_ERR, wqe)
+        self.sim.schedule(lat, _nak)
+
+    def _ack_timeout(self, qp: QP, wqe: SendWQE, epoch: int) -> None:
+        if epoch != qp.epoch:
+            return
+        if wqe.acked or wqe.completed or qp.state is not QPState.RTS:
+            return
+        if wqe.attempts > qp.retry_cnt:
+            qp._enter_error(WCStatus.RETRY_EXC_ERR, wqe)
+            return
+        self._retransmit(qp, wqe, epoch)
+
+    def _retransmit(self, qp: QP, wqe: SendWQE, epoch: int) -> None:
+        if epoch != qp.epoch:
+            return
+        if qp.state is not QPState.RTS or wqe.completed:
+            return
+        self._transmit(qp, wqe, first_attempt=False)
+
+
+def _gid_of(qp: QP) -> str:
+    return qp.dest_gid
+
+
+def _consume_recv(dqp: QP) -> Optional[RecvWQE]:
+    if dqp.rq_consumed >= dqp.rq_doorbell:
+        return None
+    rwqe = dqp.rq[dqp.rq_consumed]
+    dqp.rq_consumed += 1
+    rwqe.consumed = True
+    rwqe.completed = True
+    rwqe.status = WCStatus.SUCCESS
+    return rwqe
+
+
+def _find_mr(host: str, rkey: int, addr: int, length: int) -> Optional[MR]:
+    mr = _mr_registry.get((host, rkey))
+    if mr is None:
+        return None
+    if addr < mr.addr or addr + length > mr.addr + mr.length:
+        return None
+    return mr
+
+
+# global registries (the 'wire' knows how to find remote QPs/MRs)
+_qp_registry: Dict[Tuple[str, int], QP] = {}
+_mr_registry: Dict[Tuple[str, int], MR] = {}
+_mr_registry_lkey: Dict[Tuple[str, int], MR] = {}
+
+
+def reset_registries() -> None:
+    """Test isolation helper."""
+    _qp_registry.clear()
+    _mr_registry.clear()
+    _mr_registry_lkey.clear()
+
+
+# ---------------------------------------------------------------------------
+# libibverbs-style API surface (what applications call; what SHIFT wraps)
+# ---------------------------------------------------------------------------
+
+
+def ibv_get_device_list(cluster: Cluster, host: str) -> List[str]:
+    return [nic.name for nic in cluster.hosts[host].nics]
+
+
+def ibv_open_device(cluster: Cluster, host: str, nic_name: str) -> Context:
+    for nic in cluster.hosts[host].nics:
+        if nic.name == nic_name:
+            return Context(cluster, nic)
+    raise VerbsError(f"no device {nic_name} on {host}")
+
+
+def ibv_alloc_pd(ctx: Context) -> PD:
+    return PD(ctx)
+
+
+def ibv_reg_mr(pd: PD, buf: np.ndarray, addr: Optional[int] = None) -> MR:
+    return MR(pd, buf, addr=addr)
+
+
+def ibv_create_comp_channel(ctx: Context) -> CompChannel:
+    return CompChannel(ctx)
+
+
+def ibv_create_cq(ctx: Context, depth: int,
+                  channel: Optional[CompChannel] = None) -> CQ:
+    return CQ(ctx, depth, channel)
+
+
+def ibv_req_notify_cq(cq: CQ) -> None:
+    cq.armed = True
+
+
+def ibv_create_qp(pd: PD, init: QPInitAttr) -> QP:
+    return QP(pd, init)
+
+
+def ibv_modify_qp(qp: QP, attr: QPAttr) -> None:
+    qp.modify(attr)
+
+
+def ibv_query_qp(qp: QP) -> QPAttr:
+    return qp.query()
+
+
+def ibv_post_send(qp: QP, wr: SendWR) -> SendWQE:
+    return qp.post_send_wqe(wr, ring=True)
+
+
+def ibv_post_recv(qp: QP, wr: RecvWR) -> RecvWQE:
+    return qp.post_recv_wqe(wr, ring=True)
+
+
+def ibv_poll_cq(cq: CQ, n: int) -> List[WC]:
+    return cq.poll(n)
+
+
+# ---------------------------------------------------------------------------
+# convenience for tests / benchmarks
+# ---------------------------------------------------------------------------
+
+
+def connect_qps(qp_a: QP, qp_b: QP, psn_a: int = 0, psn_b: int = 0) -> None:
+    """Perform the RESET->INIT->RTR->RTS dance on both sides."""
+    for qp in (qp_a, qp_b):
+        if qp.state is not QPState.RESET:
+            qp.modify(QPAttr(qp_state=QPState.RESET))
+        qp.modify(QPAttr(qp_state=QPState.INIT))
+    qp_a.modify(QPAttr(qp_state=QPState.RTR, dest_gid=qp_b.ctx.nic.gid,
+                       dest_qp_num=qp_b.qpn, rq_psn=psn_b))
+    qp_b.modify(QPAttr(qp_state=QPState.RTR, dest_gid=qp_a.ctx.nic.gid,
+                       dest_qp_num=qp_a.qpn, rq_psn=psn_a))
+    qp_a.modify(QPAttr(qp_state=QPState.RTS, sq_psn=psn_a))
+    qp_b.modify(QPAttr(qp_state=QPState.RTS, sq_psn=psn_b))

@@ -1,0 +1,8 @@
+"""jit'd wrapper for the decode-attention kernel."""
+
+import jax
+
+from . import kernel as K
+
+decode_attention = jax.jit(K.decode_attention,
+                           static_argnames=("scale", "bk", "interpret"))

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for single-token decode attention."""
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len, *, scale=None):
+    B, H, hd = q.shape
+    KV, S = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = hd ** -0.5 if scale is None else scale
+    kr = jnp.repeat(k_cache, G, axis=1)
+    vr = jnp.repeat(v_cache, G, axis=1)
+    s = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32) * scale,
+                   kr.astype(jnp.float32))
+    valid = jnp.arange(S)[None, None, :] < cache_len
+    s = jnp.where(valid, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhs,bhsd->bhd", p, vr.astype(jnp.float32))
+    return o.astype(q.dtype)

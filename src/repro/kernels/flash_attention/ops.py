@@ -1,0 +1,31 @@
+"""jit'd public wrapper: flash attention with custom VJP (Pallas fwd+bwd)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel as K
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, causal: bool = True, block: int = 128):
+    o, _ = K.flash_fwd(q, k, v, causal=causal, bq=block, bk=block)
+    return o
+
+
+def _fwd(q, k, v, causal, block):
+    o, lse = K.flash_fwd(q, k, v, causal=causal, bq=block, bk=block)
+    return o, (q, k, v, o, lse)
+
+
+def _bwd(causal, block, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = K.flash_bwd(q, k, v, o, lse, do, causal=causal,
+                             bq=block, bk=block)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fwd, _bwd)

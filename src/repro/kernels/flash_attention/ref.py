@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for flash attention (naive full-matrix softmax)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale=None):
+    """q: (B,H,Sq,hd); k,v: (B,KV,Sk,hd). Returns (B,H,Sq,hd) fp32 math."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5 if scale is None else scale
+    kr = jnp.repeat(k, G, axis=1)
+    vr = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   kr.astype(jnp.float32))
+    if causal:
+        mask = jnp.arange(Sk)[None, :] > jnp.arange(Sq)[:, None]
+        s = jnp.where(mask, -jnp.inf, s)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, vr.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def lse_ref(q, k, *, causal: bool = True, scale=None):
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5 if scale is None else scale
+    kr = jnp.repeat(k, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   kr.astype(jnp.float32))
+    if causal:
+        mask = jnp.arange(Sk)[None, :] > jnp.arange(Sq)[:, None]
+        s = jnp.where(mask, -jnp.inf, s)
+    return jax.nn.logsumexp(s, axis=-1)

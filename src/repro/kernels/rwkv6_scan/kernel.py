@@ -1,0 +1,81 @@
+"""Pallas TPU RWKV6 (Finch) recurrence: chunked time scan.
+
+State S[h] is an (N, N) matrix per head; the time axis is the innermost
+grid dimension and the state persists in VMEM scratch across chunks —
+adapting the GPU's sequential wkv CUDA kernel to the TPU model: each chunk
+is dense (N,N)-matrix work for the MXU, the carried state never leaves
+VMEM (HBM traffic is only r/k/v/w streaming).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scr,
+                 *, bt: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0, 0].astype(jnp.float32)     # (bt, N)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)        # (N,)
+
+    def step(t, carry):
+        S, out = carry
+        kv = k[t][:, None] * v[t][None, :]              # (N, N)
+        y = jax.lax.dot_general(
+            (r[t])[None, :], S + u[:, None] * kv,
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)         # (1, N)
+        out = jax.lax.dynamic_update_slice(out, y, (t, 0))
+        S = w[t][:, None] * S + kv
+        return S, out
+
+    S0 = s_scr[...]
+    out0 = jnp.zeros((bt, v.shape[1]), jnp.float32)
+    S, out = jax.lax.fori_loop(0, bt, step, (S0, out0))
+    s_scr[...] = S
+    o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def rwkv6_scan(r, k, v, w, u, *, bt: int = 64, interpret: bool = True):
+    """r,k,v,w: (B,T,H,N); u: (H,N). Returns (B,T,H,N) float32."""
+    B, T0, H, N = r.shape
+    bt = min(bt, T0)
+    pad = (-T0) % bt
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v, w = (jnp.pad(x, widths) for x in (r, k, v, w))
+    T = r.shape[1]
+    nt = pl.cdiv(T, bt)
+    # layout: (B,H,T,N) so the time axis tiles cleanly
+    rt, kt, vt, wt = (jnp.moveaxis(x, 1, 2) for x in (r, k, v, w))
+    out = pl.pallas_call(
+        functools.partial(_rwkv_kernel, bt=bt),
+        grid=(B, H, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1, bt, N), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, bt, N), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, bt, N), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, bt, N), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, N), lambda b, h, t: (h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bt, N), lambda b, h, t: (b, h, t, 0)),
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        out_shape=jax.ShapeDtypeStruct((B, H, T, N), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(rt, kt, vt, wt, u)
+    return jnp.moveaxis(out, 2, 1)[:, :T0]  # (B,T,H,N)

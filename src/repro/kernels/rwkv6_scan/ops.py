@@ -1,0 +1,31 @@
+"""jit'd wrapper: RWKV6 scan kernel fwd + autodiff-of-reference bwd.
+
+The backward pass differentiates the reference recurrence (checkpointed):
+correct by construction, with the forward's performance win retained for
+inference/prefill; a fused bwd kernel is a possible follow-up (noted in
+EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+
+from . import kernel as K
+from .ref import rwkv6_scan_ref
+
+
+@jax.custom_vjp
+def rwkv6_scan(r, k, v, w, u):
+    return K.rwkv6_scan(r, k, v, w, u)
+
+
+def _fwd(r, k, v, w, u):
+    return K.rwkv6_scan(r, k, v, w, u), (r, k, v, w, u)
+
+
+def _bwd(res, g):
+    _, vjp = jax.vjp(rwkv6_scan_ref, *res)
+    return vjp(g)
+
+
+rwkv6_scan.defvjp(_fwd, _bwd)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the RWKV6 recurrence (sequential scan)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, w, u):
+    """r,k,v,w: (B,T,H,N); u: (H,N) -> (B,T,H,N) float32."""
+    B, T, H, N = r.shape
+
+    def step(S, inputs):
+        r_t, k_t, v_t, w_t = inputs
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        out = jnp.einsum("bhn,bhnm->bhm", r_t, S + u[None, :, :, None] * kv)
+        return w_t[..., :, None] * S + kv, out
+
+    S0 = jnp.zeros((B, H, N, N), jnp.float32)
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+               for t in (r, k, v, w))
+    _, outs = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(outs, 0, 1)

@@ -1,0 +1,23 @@
+"""jit'd wrapper: SSD scan kernel fwd + autodiff-of-reference bwd."""
+
+import jax
+
+from . import kernel as K
+from .ref import ssd_scan_ref
+
+
+@jax.custom_vjp
+def ssd_scan(xh, dt, A, Bm, Cm):
+    return K.ssd_scan(xh, dt, A, Bm, Cm)
+
+
+def _fwd(xh, dt, A, Bm, Cm):
+    return K.ssd_scan(xh, dt, A, Bm, Cm), (xh, dt, A, Bm, Cm)
+
+
+def _bwd(res, g):
+    _, vjp = jax.vjp(ssd_scan_ref, *res)
+    return vjp(g)
+
+
+ssd_scan.defvjp(_fwd, _bwd)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the Mamba2 SSD recurrence (sequential scan)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(xh, dt, A, Bm, Cm):
+    """xh: (B,T,H,P); dt: (B,T,H); A: (H,); Bm,Cm: (B,T,N) -> (B,T,H,P)."""
+    B, T, H, P = xh.shape
+    N = Bm.shape[-1]
+
+    def step(h, inputs):
+        x_t, dt_t, b_t, c_t = inputs
+        da = jnp.exp(dt_t * A[None, :])
+        dBx = (dt_t[..., None, None] * x_t[..., :, None] *
+               b_t[:, None, None, :])
+        h_new = da[..., None, None] * h + dBx
+        y = jnp.einsum("bhpn,bn->bhp", h_new, c_t)
+        return h_new, y
+
+    h0 = jnp.zeros((B, H, P, N), jnp.float32)
+    xs = (jnp.moveaxis(xh.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Cm.astype(jnp.float32), 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1)

@@ -1,0 +1,215 @@
+"""Sharding rules: parameter, optimizer, batch and cache PartitionSpecs.
+
+Strategy (see DESIGN.md §4):
+  * DP over ('pod','data') for batch dims,
+  * FSDP parameter sharding over 'data' (the d_model-ish axis),
+  * TP over 'model' (attention heads / ffn / vocab / experts),
+  * EP: expert dim over 'model',
+  * SP: decode KV caches shard the sequence axis over 'model'
+    (long-context serving),
+  * divisibility-checked: a rule only applies if the dim divides evenly,
+    otherwise that dim is replicated (e.g. 4 KV heads on a 16-way model
+    axis -> heads replicated, hd sharded instead where possible).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+from .mesh import axis_size, dp_axes
+
+# base rules keyed by parameter leaf name: spec for the TRAILING dims
+# (leading stacked layer/group dims are padded with None automatically)
+_RULES: Dict[str, Tuple] = {
+    # embeddings / head. Embed shards d_model over 'model', NOT vocab:
+    # a vocab-sharded table turns the token gather into an involuntary
+    # full rematerialization under GSPMD (§Perf hillclimb #3 iter. C:
+    # 50.5 -> 9.2 GB/dev and 2.3x lower HBM traffic on starcoder2-15b
+    # train_4k multipod).
+    "embed": (None, "model"),              # (V, D)
+    "lm_head": ("data", "model"),          # (D, V)
+    "final_norm": (None,),
+    # attention
+    "wq": ("data", "model", None),         # (D, H, hd)
+    "wk": ("data", "model", None),         # (D, KV, hd)
+    "wv": ("data", "model", None),
+    "wo": ("model", None, "data"),         # (H, hd, D)
+    # dense mlp
+    "w_gate": ("data", "model"),           # (D, F)
+    "w_up": ("data", "model"),
+    "w_down": ("model", "data"),           # (F, D)
+    # moe (experts over model = EP; FSDP over data on d_model)
+    "router": ("data", None),              # (D, E)
+    # rwkv6
+    "wr": ("data", "model", None),
+    "wg": ("data", "model", None),
+    "ww": ("data", "model", None),
+    "w0": (None, None),
+    "u": (None, None),
+    "ln_x": (None,),
+    "w_k": ("data", "model"),
+    "w_v": ("model", "data"),
+    "w_r": ("data", "model"),
+    # mamba2
+    "w_in": ("data", "model"),             # (D, E)
+    "w_out": ("model", "data"),            # (d_in, D)
+    "w_conv": (None, "model"),             # (4, d_in)
+    "dt_bias": (None,),
+    "a_log": (None,),
+    "d_skip": ("model",),
+    "gate": (None,),
+    # norms
+    "ln": (None,), "ln1": (None,), "ln2": (None,),
+    # misc vectors
+    "mu_r": (None,), "mu_k": (None,), "mu_v": (None,), "mu_g": (None,),
+    "mu_w": (None,), "mu_ck": (None,), "mu_cr": (None,),
+}
+
+# MoE expert tensors get EP over 'model' on the expert dim instead of the
+# dense-mlp rule (they are rank-3: (E, D, F) / (E, F, D))
+_MOE_RULES = {
+    "w_gate": ("model", "data", None),
+    "w_up": ("model", "data", None),
+    "w_down": ("model", None, "data"),
+}
+
+
+# FSDP placement knob (§Perf hillclimb #3): "data" = pod-local FSDP
+# (params replicated across pods; only gradients cross the DCN), or
+# ("pod", "data") = global FSDP (halves param memory, adds cross-pod
+# all-gathers). Measured trade-off recorded in EXPERIMENTS.md.
+FSDP_AXES: Tuple = ("data",)
+
+
+def _fit(spec: Tuple, shape: Tuple[int, ...], mesh) -> P:
+    """Pad leading Nones for stacked dims; drop axes that don't divide."""
+    spec = (None,) * (len(shape) - len(spec)) + tuple(spec)
+    fixed = []
+    for dim, ax in zip(shape, spec):
+        if ax == "data":
+            ax = FSDP_AXES if len(FSDP_AXES) > 1 else FSDP_AXES[0]
+        if ax is None:
+            fixed.append(None)
+        elif dim % axis_size(mesh, ax) == 0:
+            fixed.append(ax)
+        else:
+            fixed.append(None)  # replicate non-divisible dims
+    return P(*fixed)
+
+
+def param_specs(cfg: ModelConfig, params_shape, mesh):
+    """PartitionSpec tree matching a params (shape) pytree."""
+
+    def rule(path, leaf):
+        name = None
+        moe = False
+        for k in path:
+            key = getattr(k, "key", None)
+            if key == "moe":
+                moe = True
+            if key is not None:
+                name = key
+        spec = (_MOE_RULES if moe and name in _MOE_RULES else _RULES).get(
+            name)
+        if spec is None:
+            spec = (None,) * len(leaf.shape)
+        return _fit(spec, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shape)
+
+
+def opt_specs(cfg: ModelConfig, opt_shape, params_spec, mesh):
+    """Optimizer moments inherit the parameter shardings."""
+
+    def rule(path, leaf):
+        top = getattr(path[0], "key", None)
+        if top == "step":
+            return P()
+        # strip the leading {"mu"/"nu"} key and look up the param spec
+        sub = params_spec
+        for k in path[1:]:
+            key = getattr(k, "key", None)
+            if key is not None:
+                sub = sub[key]
+            else:
+                sub = sub[k.idx]
+        return sub
+
+    return jax.tree_util.tree_map_with_path(rule, opt_shape)
+
+
+def batch_specs(cfg: ModelConfig, mesh, batch_size: int) -> Dict[str, P]:
+    dp = dp_axes(mesh)
+    dp = dp if batch_size % axis_size(mesh, dp) == 0 else ()
+    specs = {"tokens": P(dp or None, None)}
+    if cfg.family == "vlm":
+        specs["image_embeds"] = P(dp or None, None, None)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, cache_shape, mesh, batch_size: int):
+    """Decode-cache shardings: batch over DP axes; the cache SEQUENCE axis
+    shards over 'model' (sequence-parallel KV for long context)."""
+    dp = dp_axes(mesh)
+    dp_ok = batch_size % axis_size(mesh, dp) == 0 and batch_size > 1
+    bspec = dp if dp_ok else None
+
+    def rule(path, leaf):
+        name = None
+        for k in path:
+            key = getattr(k, "key", None)
+            if key is not None:
+                name = key
+        shape = leaf.shape
+        if name == "len":
+            return P()
+        if name in ("k", "v", "attn_k", "attn_v"):
+            # (..., B, S, KV, hd): S over model
+            spec = [None] * len(shape)
+            spec[-4] = bspec
+            if shape[-3] % axis_size(mesh, "model") == 0:
+                spec[-3] = "model"
+            return P(*spec)
+        if name in ("img_k", "img_v"):
+            spec = [None] * len(shape)
+            spec[-4] = bspec
+            return P(*spec)
+        if name == "wkv":
+            # (L, B, H, N, N): heads over model if divisible
+            spec = [None] * len(shape)
+            spec[-4] = bspec
+            if shape[-3] % axis_size(mesh, "model") == 0:
+                spec[-3] = "model"
+            return P(*spec)
+        if name in ("ssm", "rem_ssm"):
+            # (..., B, H, P, N)
+            spec = [None] * len(shape)
+            spec[-4] = bspec
+            if shape[-3] % axis_size(mesh, "model") == 0:
+                spec[-3] = "model"
+            return P(*spec)
+        if name in ("conv", "rem_conv"):
+            # (..., B, K-1, d_in)
+            spec = [None] * len(shape)
+            spec[-3] = bspec
+            if shape[-1] % axis_size(mesh, "model") == 0:
+                spec[-1] = "model"
+            return P(*spec)
+        if name in ("shift", "shift_ffn"):
+            spec = [None] * len(shape)
+            spec[-2] = bspec
+            return P(*spec)
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shape)
+
+
+def to_named(tree_specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

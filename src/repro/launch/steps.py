@@ -1,0 +1,34 @@
+"""Step-function builders shared by the dry-run, trainer and benches."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import LM
+from repro.optim import AdamWConfig, adamw_update
+
+
+def make_train_step(model: LM, opt_cfg: AdamWConfig):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        new_params, new_state, metrics = adamw_update(
+            params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss)
+        return new_params, new_state, metrics
+    return train_step
+
+
+def make_prefill_step(model: LM):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch["tokens"],
+                             img_embeds=batch.get("image_embeds"))
+    return prefill_step
+
+
+def make_decode_step(model: LM):
+    def serve_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+    return serve_step

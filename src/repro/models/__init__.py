@@ -1,0 +1,4 @@
+"""Model zoo: unified decoder LM across all assigned architecture families."""
+
+from .common import ModelConfig  # noqa: F401
+from .lm import LM, build_model  # noqa: F401

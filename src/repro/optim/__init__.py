@@ -1,0 +1,2 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm  # noqa
+from .compress import int8_compress, int8_decompress  # noqa

@@ -1,0 +1,27 @@
+"""Int8 gradient compression with error feedback — the distributed-
+optimization trick for cross-pod (DCN) gradient sync: 4x fewer bytes on
+the slowest links, with the quantization error fed back into the next
+step's gradient so convergence is preserved."""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def int8_compress(x: np.ndarray, error: np.ndarray = None
+                  ) -> Tuple[np.ndarray, np.float32, np.ndarray]:
+    """Returns (q, scale, new_error). x + error is quantized to int8."""
+    x = np.asarray(x, dtype=np.float32)
+    if error is not None:
+        x = x + error
+    amax = float(np.max(np.abs(x))) or 1.0
+    scale = np.float32(amax / 127.0)
+    q = np.clip(np.rint(x / scale), -127, 127).astype(np.int8)
+    new_error = x - q.astype(np.float32) * scale
+    return q, scale, new_error
+
+
+def int8_decompress(q: np.ndarray, scale: np.float32) -> np.ndarray:
+    return q.astype(np.float32) * scale

@@ -1,0 +1,41 @@
+"""Batched serving: prefill + decode loop over the model's KV cache."""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import LM
+
+
+class ServeEngine:
+    def __init__(self, model: LM, params, max_len: int = 256):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, t: model.prefill(p, t, max_len=max_len))
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+
+    def generate(self, prompts: np.ndarray, n_tokens: int,
+                 greedy: bool = True, seed: int = 0) -> np.ndarray:
+        """prompts: (B, S) int32 -> (B, S + n_tokens) generations."""
+        B, S = prompts.shape
+        assert S + n_tokens <= self.max_len
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts))
+        out = [np.asarray(prompts)]
+        key = jax.random.PRNGKey(seed)
+        nxt = None
+        for i in range(n_tokens):
+            if greedy:
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            else:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits[:, -1]).astype(
+                    jnp.int32)
+            out.append(np.asarray(nxt)[:, None])
+            logits, cache = self._decode(self.params, cache, nxt[:, None])
+        return np.concatenate(out, axis=1)

@@ -1,0 +1,1 @@
+from .trainer import DDPTrainer, TrainerConfig, TrainRun  # noqa: F401

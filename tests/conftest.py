@@ -1,0 +1,18 @@
+import os
+import sys
+
+# Make src/ importable regardless of how pytest is invoked.
+_SRC = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _reset_verbs_registries():
+    """Isolate the global (gid,qpn)/(host,rkey) registries between tests."""
+    from repro.core import verbs
+    verbs.reset_registries()
+    yield
+    verbs.reset_registries()

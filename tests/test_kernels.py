@@ -1,0 +1,191 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes and dtypes (assignment requirement)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import kernel as FK
+from repro.kernels.flash_attention import ops as FO
+from repro.kernels.flash_attention import ref as FR
+from repro.kernels.decode_attention import kernel as DK
+from repro.kernels.decode_attention import ref as DR
+from repro.kernels.rwkv6_scan import kernel as RK
+from repro.kernels.rwkv6_scan import ops as RO
+from repro.kernels.rwkv6_scan import ref as RR
+from repro.kernels.ssm_scan import kernel as SK
+from repro.kernels.ssm_scan import ops as SO
+from repro.kernels.ssm_scan import ref as SR
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape,
+                             dtype=jnp.float32).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-3, atol=2e-3),
+       jnp.bfloat16: dict(rtol=5e-2, atol=5e-2)}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+FLASH_SHAPES = [
+    # (B, H, KV, Sq, Sk, hd, causal)
+    (1, 2, 2, 32, 32, 16, True),
+    (2, 4, 2, 33, 33, 16, True),    # GQA + ragged
+    (1, 4, 1, 48, 48, 32, True),    # MQA
+    (1, 2, 2, 16, 64, 16, False),   # cross-shaped, non-causal
+    (2, 2, 2, 64, 64, 8, True),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", FLASH_SHAPES)
+def test_flash_fwd_matches_ref(shape, dtype):
+    B, H, KV, Sq, Sk, hd, causal = shape
+    q = rand(0, (B, H, Sq, hd), dtype)
+    k = rand(1, (B, KV, Sk, hd), dtype)
+    v = rand(2, (B, KV, Sk, hd), dtype)
+    out, lse = FK.flash_fwd(q, k, v, causal=causal, bq=16, bk=16)
+    ref = FR.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+    lref = FR.lse_ref(q, k, causal=causal)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(lref),
+                               rtol=1e-2, atol=1e-2)
+
+
+@pytest.mark.parametrize("shape", [(1, 2, 2, 32, 32, 16, True),
+                                   (2, 4, 2, 33, 33, 16, True)])
+def test_flash_bwd_matches_autodiff_of_ref(shape):
+    B, H, KV, Sq, Sk, hd, causal = shape
+    q = rand(3, (B, H, Sq, hd), jnp.float32)
+    k = rand(4, (B, KV, Sk, hd), jnp.float32)
+    v = rand(5, (B, KV, Sk, hd), jnp.float32)
+
+    def f_kernel(q, k, v):
+        return (FO.flash_attention(q, k, v, causal, 16) ** 2).sum()
+
+    def f_ref(q, k, v):
+        return (FR.attention_ref(q, k, v, causal=causal) ** 2).sum()
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b, name in zip(gk, gr, "qkv"):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-2, atol=2e-2,
+                                   err_msg=f"d{name}")
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+DECODE_SHAPES = [
+    # (B, H, KV, S, hd, cache_len)
+    (2, 4, 2, 64, 16, 64),
+    (1, 4, 4, 96, 32, 50),    # partial cache
+    (3, 8, 2, 128, 16, 128),
+    (1, 2, 1, 40, 8, 7),
+]
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", DECODE_SHAPES)
+def test_decode_attention_matches_ref(shape, dtype):
+    B, H, KV, S, hd, clen = shape
+    q = rand(6, (B, H, hd), dtype)
+    kc = rand(7, (B, KV, S, hd), dtype)
+    vc = rand(8, (B, KV, S, hd), dtype)
+    out = DK.decode_attention(q, kc, vc, clen, bk=32)
+    ref = DR.decode_attention_ref(q, kc, vc, clen)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 scan
+# ---------------------------------------------------------------------------
+
+RWKV_SHAPES = [
+    # (B, T, H, N, bt)
+    (1, 32, 2, 16, 8),
+    (2, 33, 1, 16, 16),   # ragged T... padded below
+    (1, 64, 4, 8, 32),
+]
+
+
+@pytest.mark.parametrize("shape", RWKV_SHAPES)
+def test_rwkv6_scan_matches_ref(shape):
+    B, T, H, N, bt = shape
+    T = (T // bt) * bt or bt  # kernel requires whole chunks
+    r = rand(10, (B, T, H, N), jnp.float32)
+    k = rand(11, (B, T, H, N), jnp.float32)
+    v = rand(12, (B, T, H, N), jnp.float32)
+    w = jax.nn.sigmoid(rand(13, (B, T, H, N), jnp.float32)) * 0.5 + 0.45
+    u = rand(14, (H, N), jnp.float32) * 0.1
+    out = RK.rwkv6_scan(r, k, v, w, u, bt=bt)
+    ref = RR.rwkv6_scan_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rwkv6_custom_vjp_grads():
+    B, T, H, N = 1, 16, 2, 8
+    r = rand(20, (B, T, H, N), jnp.float32)
+    k = rand(21, (B, T, H, N), jnp.float32)
+    v = rand(22, (B, T, H, N), jnp.float32)
+    w = jax.nn.sigmoid(rand(23, (B, T, H, N), jnp.float32)) * 0.5 + 0.45
+    u = rand(24, (H, N), jnp.float32) * 0.1
+    g1 = jax.grad(lambda *a: (RO.rwkv6_scan(*a) ** 2).sum(),
+                  argnums=(0, 1, 2))(r, k, v, w, u)
+    g2 = jax.grad(lambda *a: (RR.rwkv6_scan_ref(*a) ** 2).sum(),
+                  argnums=(0, 1, 2))(r, k, v, w, u)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# mamba2 SSD scan (chunked algebra vs sequential reference)
+# ---------------------------------------------------------------------------
+
+SSD_SHAPES = [
+    # (B, T, H, P, N, bt)
+    (1, 32, 2, 16, 8, 8),
+    (2, 64, 1, 8, 16, 16),
+    (1, 48, 4, 16, 4, 16),
+]
+
+
+@pytest.mark.parametrize("shape", SSD_SHAPES)
+def test_ssd_scan_matches_ref(shape):
+    B, T, H, P, N, bt = shape
+    xh = rand(30, (B, T, H, P), jnp.float32)
+    dt = jax.nn.softplus(rand(31, (B, T, H), jnp.float32))
+    A = -jnp.exp(rand(32, (H,), jnp.float32) * 0.3)
+    Bm = rand(33, (B, T, N), jnp.float32)
+    Cm = rand(34, (B, T, N), jnp.float32)
+    out = SK.ssd_scan(xh, dt, A, Bm, Cm, bt=bt)
+    ref = SR.ssd_scan_ref(xh, dt, A, Bm, Cm)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_ssd_custom_vjp_grads():
+    B, T, H, P, N = 1, 16, 2, 8, 4
+    xh = rand(40, (B, T, H, P), jnp.float32)
+    dt = jax.nn.softplus(rand(41, (B, T, H), jnp.float32))
+    A = -jnp.exp(rand(42, (H,), jnp.float32) * 0.3)
+    Bm = rand(43, (B, T, N), jnp.float32)
+    Cm = rand(44, (B, T, N), jnp.float32)
+    g1 = jax.grad(lambda *a: (SO.ssd_scan(*a) ** 2).sum(),
+                  argnums=(0, 3, 4))(xh, dt, A, Bm, Cm)
+    g2 = jax.grad(lambda *a: (SR.ssd_scan_ref(*a) ** 2).sum(),
+                  argnums=(0, 3, 4))(xh, dt, A, Bm, Cm)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)

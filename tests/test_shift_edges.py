@@ -1,0 +1,153 @@
+"""SHIFT edge cases: double failures, repeated flapping, SPOF topology,
+KV-store usage, recovery-abort path."""
+
+import numpy as np
+import pytest
+
+from repro.core import shift as S
+from repro.core import verbs as V
+from repro.core.fabric import build_cluster
+
+from test_shift import Endpoint, make_shift_pair, simple_step, drain
+
+
+def test_double_failure_propagates_error():
+    """Both NICs on the sender host die: unmaskable, app must see it."""
+    c, a, b = make_shift_pair()
+    next_seq = [0]
+
+    def pump():
+        if next_seq[0] < 20:
+            try:
+                simple_step(a, b, next_seq[0], 4096)
+            except V.VerbsError:
+                return  # app observes the unmaskable failure and stops
+            next_seq[0] += 1
+            c.sim.schedule(200e-6, pump)
+        a.poll(); b.poll()
+
+    pump()
+    t0 = c.sim.now
+    c.sim.at(t0 + 1e-3, c.fail_nic, "host0/mlx5_0")
+    c.sim.at(t0 + 3e-3, c.fail_nic, "host0/mlx5_1")  # backup dies too
+    c.sim.run(until=t0 + 2.0)
+    wcs = a.poll()
+    assert a.lib.stats.errors_propagated >= 1
+    assert a.qp.send_state is S.SendState.FAILED
+    # posting after an unmaskable failure raises, like standard RDMA
+    with pytest.raises(V.VerbsError):
+        for i in range(200):
+            a.lib.post_send(a.qp, V.SendWR(
+                wr_id=900 + i, opcode=V.Opcode.WRITE,
+                sge=V.SGE(a.mr.addr, 64, a.mr.lkey),
+                remote_addr=b.mr.addr, rkey=b.mr.rkey))
+
+
+def test_repeated_flapping_cycles():
+    """Three fallback/recovery cycles; ordering must hold throughout."""
+    c, a, b = make_shift_pair(probe_interval=2e-3)
+    recv_wcs = []
+    n_msgs = 120
+    next_seq = [0]
+
+    def pump():
+        if next_seq[0] < n_msgs:
+            simple_step(a, b, next_seq[0], 2048)
+            next_seq[0] += 1
+            c.sim.schedule(400e-6, pump)
+        drain(b, recv_wcs)
+        a.poll()
+
+    pump()
+    t0 = c.sim.now
+    for i in range(3):
+        base = t0 + 4e-3 + i * 16e-3
+        c.flap_nic("host0/mlx5_0", down_at=base, up_at=base + 6e-3)
+    c.sim.run(until=t0 + 2.0)
+    drain(b, recv_wcs)
+    a.poll()
+    imms = [w.imm_data for w in recv_wcs
+            if w.opcode is V.WCOpcode.RECV_RDMA_WITH_IMM and not w.is_error]
+    assert imms == list(range(n_msgs))
+    assert a.lib.stats.fallbacks >= 2
+    assert a.lib.stats.recoveries >= 2
+
+
+def test_single_tor_spof_documented_constraint():
+    """§4.4 hardware constraint: with a single ToR, a switch-wide failure
+    cannot be bypassed (both rails share the SPOF)."""
+    V.reset_registries()
+    c = build_cluster(n_hosts=2, nics_per_host=2, topology="single")
+    lib_a = S.ShiftLib(c, "host0")
+    lib_b = S.ShiftLib(c, "host1", kv=lib_a.kv)
+    a, b = Endpoint(lib_a), Endpoint(lib_b)
+    lib_a.connect(a.qp, *lib_b.route_of(b.qp))
+    lib_b.connect(b.qp, *lib_a.route_of(a.qp))
+    lib_a.settle(0.05)
+    # kill the whole ToR
+    c.switches["tor0"].up = False
+    for seq in range(5):
+        simple_step(a, b, seq, 1024)
+    c.sim.run(until=c.sim.now + 2.0)
+    a.poll()
+    assert lib_a.stats.errors_propagated >= 1  # SHIFT cannot mask a SPOF
+
+
+def test_kv_store_holds_backup_mappings():
+    c, a, b = make_shift_pair()
+    kv = a.lib.kv
+    assert kv.n_puts >= 4  # 2 QP routes + 2 MR mappings at minimum
+    gid, qpn = a.lib.route_of(a.qp)
+    route = kv.get(f"route:{gid}:{qpn}")
+    assert route is not None and route[0].endswith("mlx5_1")
+    assert kv.get(f"mr:host0:{a.mr.rkey}") is not None
+
+
+def test_recovery_abort_on_reflap():
+    """Default path dies again mid-recovery: withheld WRs move back to the
+    backup QP (the _abort_recovery path) and nothing is lost."""
+    c, a, b = make_shift_pair(probe_interval=1e-3)
+    recv_wcs = []
+    n_msgs = 80
+    next_seq = [0]
+
+    def pump():
+        if next_seq[0] < n_msgs:
+            simple_step(a, b, next_seq[0], 2048)
+            next_seq[0] += 1
+            c.sim.schedule(300e-6, pump)
+        drain(b, recv_wcs)
+        a.poll()
+
+    pump()
+    t0 = c.sim.now
+    # rapid double flap: recovery begins, then the path dies again
+    c.flap_nic("host0/mlx5_0", down_at=t0 + 2e-3, up_at=t0 + 6e-3)
+    c.flap_nic("host0/mlx5_0", down_at=t0 + 7.5e-3, up_at=t0 + 20e-3)
+    c.sim.run(until=t0 + 2.0)
+    drain(b, recv_wcs)
+    a.poll()
+    imms = [w.imm_data for w in recv_wcs
+            if w.opcode is V.WCOpcode.RECV_RDMA_WITH_IMM and not w.is_error]
+    assert imms == list(range(n_msgs))
+
+
+def test_stats_zero_copy_and_synthesis_counters():
+    c, a, b = make_shift_pair()
+    next_seq = [0]
+
+    def pump():
+        if next_seq[0] < 40:
+            simple_step(a, b, next_seq[0], 4096)
+            next_seq[0] += 1
+            c.sim.schedule(100e-6, pump)
+        a.poll(); b.poll()
+
+    pump()
+    t0 = c.sim.now
+    c.sim.at(t0 + 1.5e-3, c.fail_switch_port, "host0/mlx5_0")
+    c.sim.run(until=t0 + 1.0)
+    st = a.lib.stats
+    assert st.payload_bytes_held == 0
+    assert st.fallbacks >= 1
+    assert st.resubmitted_sends >= 1

@@ -1,0 +1,114 @@
+"""Training-substrate tests: data determinism, checkpoint atomic restore,
+optimizer math, gradient compression, end-to-end DDP training with failure
+injection (loss continuity across a masked failure)."""
+
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.checkpoint import CheckpointStore
+from repro.collectives import JcclWorld
+from repro.core import shift as S
+from repro.core import verbs as V
+from repro.core.fabric import build_cluster
+from repro.data import SyntheticDataset
+from repro.optim import AdamWConfig, adamw_init, adamw_update, global_norm
+from repro.optim.compress import int8_compress, int8_decompress
+from repro.train.trainer import DDPTrainer, TrainerConfig
+
+
+def test_dataset_deterministic_and_sharded():
+    d0 = SyntheticDataset(1024, 32, 4, rank=0, world=2, seed=7)
+    d1 = SyntheticDataset(1024, 32, 4, rank=1, world=2, seed=7)
+    b0a, b0b = d0.batch_at(5), d0.batch_at(5)
+    np.testing.assert_array_equal(b0a, b0b)  # stateless determinism
+    assert not np.array_equal(d0.batch_at(5), d1.batch_at(5))  # sharded
+    assert not np.array_equal(d0.batch_at(5), d0.batch_at(6))
+
+
+def test_checkpoint_atomic_roundtrip(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=2)
+    tree = {"a": np.arange(10, dtype=np.float32),
+            "b": {"c": np.ones((3, 3), dtype=np.int32)}}
+    store.save(10, tree, {"note": "x"})
+    store.save(20, tree)
+    store.save(30, tree)
+    assert store.list_steps() == [20, 30]  # keep=2 gc
+    restored, meta = store.restore(tree, step=20)
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    np.testing.assert_array_equal(restored["b"]["c"], tree["b"]["c"])
+    assert meta["step"] == 20
+
+
+def test_adamw_decreases_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup_steps=1, total_steps=100,
+                      weight_decay=0.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw_init(params, cfg)
+    loss = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(60):
+        grads = jax.grad(loss)(params)
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert float(loss(params)) < 0.1
+
+
+def test_int8_compress_error_feedback_converges():
+    rng = np.random.RandomState(0)
+    x = rng.randn(1000).astype(np.float32)
+    err = None
+    acc = np.zeros_like(x)
+    for _ in range(50):
+        q, scale, err = int8_compress(x, err)
+        acc += int8_decompress(q, scale)
+    np.testing.assert_allclose(acc / 50, x, atol=0.02)
+
+
+def _make_world(n=2):
+    V.reset_registries()
+    c = build_cluster(n_hosts=n, nics_per_host=2)
+    kv, libs = None, []
+    for r in range(n):
+        lib = S.ShiftLib(c, f"host{r}", kv=kv,
+                         config=S.ShiftConfig(probe_interval=5e-3))
+        kv = lib.kv
+        libs.append(lib)
+    world = JcclWorld(c, libs, max_chunk_bytes=1 << 18)
+    return c, libs, world
+
+
+def test_ddp_training_loss_decreases_and_survives_failure(tmp_path):
+    c, libs, world = _make_world()
+    cfg = C.smoke_config("gpt2-124m", n_layers=2, d_model=128, n_heads=4,
+                         n_kv_heads=4, d_ff=512, vocab=512)
+    tcfg = TrainerConfig(steps=30, ckpt_every=10, lr=3e-3,
+                         ckpt_dir=str(tmp_path / "ck"))
+    trainer = DDPTrainer(c, libs, cfg, tcfg, batch_per_rank=2, seq_len=32)
+
+    def on_step(step, t, loss):
+        if step == 12:
+            c.fail_nic("host1/mlx5_0")
+
+    run = trainer.train(world, on_step=on_step)
+    assert run.final_step == 30
+    assert run.fallbacks >= 1             # the failure was masked
+    losses = [l for _, _, l in run.timeline]
+    assert losses[-1] < losses[0]          # learning continued through it
+    # loss continuity across the failure step: no blow-up
+    assert losses[13] < losses[0] * 1.5
+
+
+def test_ddp_grad_compress_trains(tmp_path):
+    c, libs, world = _make_world()
+    cfg = C.smoke_config("gpt2-124m", n_layers=2, d_model=128, n_heads=4,
+                         n_kv_heads=4, d_ff=512, vocab=512)
+    tcfg = TrainerConfig(steps=15, ckpt_every=50, lr=3e-3,
+                         grad_compress=True, ckpt_dir=str(tmp_path / "ck"))
+    trainer = DDPTrainer(c, libs, cfg, tcfg, batch_per_rank=2, seq_len=32)
+    run = trainer.train(world)
+    losses = [l for _, _, l in run.timeline]
+    assert losses[-1] < losses[0]

@@ -1,0 +1,202 @@
+"""Machine-checked counterexamples for the RDMA Failover Trilemma
+(§3.1 / Appendix C) + hypothesis property tests over the simulator."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import trilemma as T
+from repro.core import verbs as V
+from repro.core import shift as S
+from repro.core.fabric import build_cluster
+from repro.core.protocols import (FailoverClass, LLChannel, PROTOCOL_CLASS,
+                                  Protocol, classify_wqe_set)
+
+
+# ---------------------------------------------------------------------------
+# Lemma 3.1: indistinguishability
+# ---------------------------------------------------------------------------
+
+def test_sender_views_identical():
+    t1, t2 = T.trace_packet_lost(), T.trace_ack_lost()
+    assert T.sender_view(t1) == T.sender_view(t2)
+    assert t1 != t2  # yet the traces conflict
+
+
+def test_fixed_decisions_violate_one_property():
+    assert T.decision_violates(lambda view: False) == "liveness"
+    assert T.decision_violates(lambda view: True) == "safety"
+
+
+@given(st.integers(min_value=0, max_value=2 ** 16 - 1))
+@settings(max_examples=64, deadline=None)
+def test_any_deterministic_decision_function_fails(seed):
+    """Theorem 3.3, property form: EVERY deterministic decision function of
+    the sender view (here: an arbitrary hash-indexed boolean function)
+    violates liveness or safety."""
+
+    def decide(view):
+        return bool((hash(view) ^ seed) & 1)
+
+    assert T.decision_violates(decide) in ("liveness", "safety")
+
+
+# ---------------------------------------------------------------------------
+# Lemma 3.2: non-idempotency
+# ---------------------------------------------------------------------------
+
+def test_fadd_non_idempotent():
+    assert T.fadd_non_idempotent()
+
+
+@given(st.integers(min_value=1, max_value=10 ** 6))
+@settings(max_examples=32, deadline=None)
+def test_fadd_non_idempotent_any_delta(delta):
+    assert T.fadd_non_idempotent(delta=delta)
+
+
+def test_cas_double_success_aba():
+    assert T.cas_double_success()
+
+
+def test_two_sided_send_consumes_twice():
+    assert T.send_non_idempotent()
+
+
+def test_ll_write_after_reuse_corrupts():
+    corrupted, observed = T.ll_write_after_reuse()
+    assert corrupted and observed == T.V1  # app reads stale data as fresh
+
+
+# ---------------------------------------------------------------------------
+# Theorem 3.4: consensus barrier
+# ---------------------------------------------------------------------------
+
+def test_rw_registers_cannot_build_sticky_register():
+    decided = T.rw_register_consensus_attempt()
+    # exhaustive interleaving finds at least two conflicting winners
+    assert "ghost" in decided and "backup" in decided
+
+
+# ---------------------------------------------------------------------------
+# Protocol classification (§3.2 Table 1)
+# ---------------------------------------------------------------------------
+
+def test_protocol_table():
+    assert PROTOCOL_CLASS[Protocol.NCCL_SIMPLE] is FailoverClass.SAFE
+    assert PROTOCOL_CLASS[Protocol.NVSHMEM_ATOMIC] is FailoverClass.UNSAFE_ATOMIC
+    assert PROTOCOL_CLASS[Protocol.MSCCLPP_ATOMIC] is FailoverClass.UNSAFE_ATOMIC
+    assert PROTOCOL_CLASS[Protocol.NCCL_LL] is FailoverClass.UNSAFE_PACKED
+    assert PROTOCOL_CLASS[Protocol.NCCL_LL128] is FailoverClass.UNSAFE_PACKED
+
+
+def test_classify_wqe_set_detects_atomics():
+    class W:
+        def __init__(self, op):
+            self.opcode = op
+    assert classify_wqe_set([W(V.Opcode.WRITE)]) is FailoverClass.SAFE
+    assert classify_wqe_set(
+        [W(V.Opcode.WRITE), W(V.Opcode.FETCH_ADD)]) is FailoverClass.UNSAFE_ATOMIC
+
+
+# ---------------------------------------------------------------------------
+# Property test over the real simulator: SHIFT preserves the invariants of
+# §3.2 under ARBITRARY failure timing (hypothesis chooses when the NIC dies
+# and when it recovers).
+# ---------------------------------------------------------------------------
+
+def _run_simple_stream(fail_at, recover_at, n_msgs=24, size=4096,
+                       kill="host0/mlx5_0"):
+    from test_shift import make_shift_pair, simple_step, drain  # noqa
+    V.reset_registries()
+    c, a, b = make_shift_pair()
+    recv_wcs, send_wcs = [], []
+    next_seq = [0]
+
+    def pump():
+        if next_seq[0] < n_msgs:
+            simple_step(a, b, next_seq[0], size)
+            next_seq[0] += 1
+            c.sim.schedule(120e-6, pump)
+        drain(b, recv_wcs)
+        drain(a, send_wcs)
+
+    pump()
+    t0 = c.sim.now
+    c.sim.at(t0 + fail_at, c.fail_nic, kill)
+    c.sim.at(t0 + fail_at + recover_at, c.recover_nic, kill)
+    c.sim.run(until=t0 + 1.5)
+    drain(b, recv_wcs)
+    drain(a, send_wcs)
+    return a, b, send_wcs, recv_wcs
+
+
+@given(fail_at=st.floats(min_value=1e-5, max_value=4e-3),
+       recover_at=st.floats(min_value=1e-4, max_value=60e-3),
+       kill=st.sampled_from(["host0/mlx5_0", "host1/mlx5_0"]))
+@settings(max_examples=25, deadline=None)
+def test_notification_exactly_once_in_order_any_timing(fail_at, recover_at,
+                                                       kill):
+    a, b, send_wcs, recv_wcs = _run_simple_stream(fail_at, recover_at,
+                                                  kill=kill)
+    imms = [w.imm_data for w in recv_wcs
+            if w.opcode is V.WCOpcode.RECV_RDMA_WITH_IMM and not w.is_error]
+    assert imms == list(range(24)), f"timing ({fail_at},{recover_at}): {imms}"
+    ok = [w for w in send_wcs if not w.is_error]
+    assert len(ok) == 24
+
+
+# ---------------------------------------------------------------------------
+# Empirical trilemma: NAIVE failover (retransmit everything outstanding)
+# CAN corrupt LL-style packed traffic — the corruption the paper proves.
+# ---------------------------------------------------------------------------
+
+def test_naive_ll_failover_corrupts_on_simulator():
+    """Reproduce Lemma C.5 on the live simulator: an LL slot is consumed and
+    reused by the receiver app; a naive cross-NIC retransmission of the
+    outstanding packed write silently clobbers the new value."""
+    c = build_cluster(n_hosts=2, nics_per_host=2)
+    lib_a, lib_b = S.StandardLib(c, "host0"), S.StandardLib(c, "host1")
+    from test_shift import Endpoint  # noqa
+    a, b = Endpoint(lib_a), Endpoint(lib_b)
+    lib_a.connect(a.qp, *lib_b.route_of(b.qp))
+    lib_b.connect(b.qp, *lib_a.route_of(a.qp))
+    ll = LLChannel(b.mr)
+
+    # sender writes packed (data=V1, seq=1) into slot 0
+    a.buf[:8] = np.frombuffer(LLChannel.pack(77, 1), dtype=np.uint8)
+    a.lib.post_send(a.qp, V.SendWR(
+        wr_id=1, opcode=V.Opcode.WRITE, sge=V.SGE(a.mr.addr, 8, a.mr.lkey),
+        remote_addr=b.mr.addr, rkey=b.mr.rkey))
+    # ACK loss window: drop the sender-side return path right after delivery
+    lat = c.path_latency(c.nic_by_gid["host0/mlx5_0"],
+                         c.nic_by_gid["host1/mlx5_0"])
+    down = V.PER_MESSAGE_OVERHEAD + 8 / 12.5e9 + lat + 1e-7
+    c.sim.at(c.sim.now + down, c.fail_nic, "host0/mlx5_0")
+    c.sim.run(until=c.sim.now + 0.1)
+
+    # receiver consumed the data and reused the slot (flag recycled)
+    assert ll.poll_slot(0, 1) == 77
+    ll.reuse_slot(0, data=55, seq=1)
+
+    # NAIVE failover: copy the outstanding WQE to the backup NIC and resend
+    ctx_a2 = V.ibv_open_device(c, "host0", "mlx5_1")
+    ctx_b2 = V.ibv_open_device(c, "host1", "mlx5_1")
+    pd_a2, pd_b2 = V.ibv_alloc_pd(ctx_a2), V.ibv_alloc_pd(ctx_b2)
+    mr_a2 = V.ibv_reg_mr(pd_a2, a.buf, addr=a.mr.addr)
+    mr_b2 = V.ibv_reg_mr(pd_b2, b.buf, addr=b.mr.addr)
+    cq2a = V.ibv_create_cq(ctx_a2, 64)
+    cq2b = V.ibv_create_cq(ctx_b2, 64)
+    qp2a = V.ibv_create_qp(pd_a2, V.QPInitAttr(send_cq=cq2a, recv_cq=cq2a))
+    qp2b = V.ibv_create_qp(pd_b2, V.QPInitAttr(send_cq=cq2b, recv_cq=cq2b))
+    V.connect_qps(qp2a, qp2b)
+    wqe = a.qp.sq[0]
+    wr = wqe.to_wr()
+    wr.sge = V.SGE(mr_a2.addr, 8, mr_a2.lkey)
+    wr.rkey = mr_b2.rkey
+    V.ibv_post_send(qp2a, wr)
+    c.sim.run(until=c.sim.now + 0.1)
+
+    # SILENT DATA CORRUPTION: the app's new value 55 was overwritten by the
+    # stale 77, and the recycled flag makes it look valid
+    assert ll.poll_slot(0, 1) == 77, "expected the corruption to manifest"

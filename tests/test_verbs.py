@@ -1,0 +1,239 @@
+"""Unit tests for the simulated ibverbs layer (repro.core.verbs)."""
+
+import numpy as np
+import pytest
+
+from repro.core import verbs as V
+from repro.core.fabric import build_cluster
+
+
+def make_pair(cluster=None, nic="mlx5_0", depth=4096):
+    """Two hosts, one QP pair on the given rail, 64KB MRs each side."""
+    c = cluster or build_cluster(n_hosts=2, nics_per_host=2)
+    ctx_a = V.ibv_open_device(c, "host0", nic)
+    ctx_b = V.ibv_open_device(c, "host1", nic)
+    pd_a, pd_b = V.ibv_alloc_pd(ctx_a), V.ibv_alloc_pd(ctx_b)
+    buf_a = np.zeros(65536, dtype=np.uint8)
+    buf_b = np.zeros(65536, dtype=np.uint8)
+    mr_a, mr_b = V.ibv_reg_mr(pd_a, buf_a), V.ibv_reg_mr(pd_b, buf_b)
+    cq_a = V.ibv_create_cq(ctx_a, depth)
+    cq_b = V.ibv_create_cq(ctx_b, depth)
+    qp_a = V.ibv_create_qp(pd_a, V.QPInitAttr(send_cq=cq_a, recv_cq=cq_a))
+    qp_b = V.ibv_create_qp(pd_b, V.QPInitAttr(send_cq=cq_b, recv_cq=cq_b))
+    V.connect_qps(qp_a, qp_b)
+    return c, (ctx_a, pd_a, mr_a, cq_a, qp_a, buf_a), (ctx_b, pd_b, mr_b, cq_b, qp_b, buf_b)
+
+
+def test_rdma_write_delivers_payload():
+    c, a, b = make_pair()
+    _, _, mr_a, cq_a, qp_a, buf_a = a
+    _, _, mr_b, cq_b, qp_b, buf_b = b
+    buf_a[:16] = np.arange(16, dtype=np.uint8) + 1
+    wr = V.SendWR(wr_id=1, opcode=V.Opcode.WRITE,
+                  sge=V.SGE(mr_a.addr, 16, mr_a.lkey),
+                  remote_addr=mr_b.addr, rkey=mr_b.rkey)
+    V.ibv_post_send(qp_a, wr)
+    c.sim.run_until_idle()
+    wcs = V.ibv_poll_cq(cq_a, 10)
+    assert len(wcs) == 1 and wcs[0].status is V.WCStatus.SUCCESS
+    assert wcs[0].wr_id == 1
+    np.testing.assert_array_equal(buf_b[:16], buf_a[:16])
+
+
+def test_send_recv_two_sided():
+    c, a, b = make_pair()
+    _, _, mr_a, cq_a, qp_a, buf_a = a
+    _, _, mr_b, cq_b, qp_b, buf_b = b
+    V.ibv_post_recv(qp_b, V.RecvWR(wr_id=99, sge=V.SGE(mr_b.addr + 100, 64, mr_b.lkey)))
+    buf_a[:8] = 7
+    V.ibv_post_send(qp_a, V.SendWR(2, V.Opcode.SEND, V.SGE(mr_a.addr, 8, mr_a.lkey)))
+    c.sim.run_until_idle()
+    swc = V.ibv_poll_cq(cq_a, 10)
+    rwc = V.ibv_poll_cq(cq_b, 10)
+    assert len(swc) == 1 and swc[0].status is V.WCStatus.SUCCESS
+    assert len(rwc) == 1 and rwc[0].opcode is V.WCOpcode.RECV
+    assert rwc[0].wr_id == 99 and rwc[0].byte_len == 8
+    assert (buf_b[100:108] == 7).all()
+
+
+def test_write_with_imm_consumes_recv_and_carries_imm():
+    c, a, b = make_pair()
+    _, _, mr_a, cq_a, qp_a, buf_a = a
+    _, _, mr_b, cq_b, qp_b, buf_b = b
+    V.ibv_post_recv(qp_b, V.RecvWR(wr_id=5))
+    buf_a[:4] = 9
+    V.ibv_post_send(qp_a, V.SendWR(3, V.Opcode.WRITE_IMM,
+                                   V.SGE(mr_a.addr, 4, mr_a.lkey),
+                                   remote_addr=mr_b.addr, rkey=mr_b.rkey,
+                                   imm_data=0xBEEF))
+    c.sim.run_until_idle()
+    rwc = V.ibv_poll_cq(cq_b, 10)
+    assert len(rwc) == 1
+    assert rwc[0].opcode is V.WCOpcode.RECV_RDMA_WITH_IMM
+    assert rwc[0].imm_data == 0xBEEF
+    assert (buf_b[:4] == 9).all()
+    assert qp_b.rq_consumed == 1
+
+
+def test_rdma_read():
+    c, a, b = make_pair()
+    _, _, mr_a, cq_a, qp_a, buf_a = a
+    _, _, mr_b, _, _, buf_b = b
+    buf_b[:32] = np.arange(32, dtype=np.uint8)
+    V.ibv_post_send(qp_a, V.SendWR(4, V.Opcode.READ,
+                                   V.SGE(mr_a.addr + 64, 32, mr_a.lkey),
+                                   remote_addr=mr_b.addr, rkey=mr_b.rkey))
+    c.sim.run_until_idle()
+    wcs = V.ibv_poll_cq(cq_a, 10)
+    assert wcs[0].status is V.WCStatus.SUCCESS
+    np.testing.assert_array_equal(buf_a[64:96], buf_b[:32])
+
+
+def test_atomics_fetch_add_and_cas():
+    import struct
+    c, a, b = make_pair()
+    _, _, mr_a, cq_a, qp_a, buf_a = a
+    _, _, mr_b, _, _, buf_b = b
+    buf_b[:8] = np.frombuffer(struct.pack("<q", 41), dtype=np.uint8)
+    V.ibv_post_send(qp_a, V.SendWR(5, V.Opcode.FETCH_ADD,
+                                   V.SGE(mr_a.addr, 8, mr_a.lkey),
+                                   remote_addr=mr_b.addr, rkey=mr_b.rkey,
+                                   compare_add=1))
+    c.sim.run_until_idle()
+    assert struct.unpack("<q", bytes(buf_b[:8]))[0] == 42
+    assert struct.unpack("<q", bytes(buf_a[:8]))[0] == 41  # old value returned
+    # CAS 42 -> 100
+    V.ibv_post_send(qp_a, V.SendWR(6, V.Opcode.CMP_SWAP,
+                                   V.SGE(mr_a.addr + 8, 8, mr_a.lkey),
+                                   remote_addr=mr_b.addr, rkey=mr_b.rkey,
+                                   compare_add=42, swap=100))
+    c.sim.run_until_idle()
+    assert struct.unpack("<q", bytes(buf_b[:8]))[0] == 100
+    wcs = V.ibv_poll_cq(cq_a, 10)
+    assert all(w.status is V.WCStatus.SUCCESS for w in wcs)
+
+
+def test_receiver_nic_failure_gives_error_wc_and_flush():
+    c, a, b = make_pair()
+    _, _, mr_a, cq_a, qp_a, buf_a = a
+    _, _, mr_b, _, qp_b, _ = b
+    c.fail_nic("host1/mlx5_0")
+    for i in range(3):
+        V.ibv_post_send(qp_a, V.SendWR(10 + i, V.Opcode.WRITE,
+                                       V.SGE(mr_a.addr, 1024, mr_a.lkey),
+                                       remote_addr=mr_b.addr, rkey=mr_b.rkey))
+    c.sim.run_until_idle()
+    wcs = V.ibv_poll_cq(cq_a, 10)
+    assert len(wcs) == 3
+    assert wcs[0].status is V.WCStatus.RETRY_EXC_ERR
+    assert all(w.status is V.WCStatus.WR_FLUSH_ERR for w in wcs[1:])
+    assert qp_a.state is V.QPState.ERR
+    with pytest.raises(V.VerbsError):
+        V.ibv_post_send(qp_a, V.SendWR(99, V.Opcode.WRITE,
+                                       V.SGE(mr_a.addr, 8, mr_a.lkey),
+                                       remote_addr=mr_b.addr, rkey=mr_b.rkey))
+
+
+def test_sender_nic_failure_errors_quickly():
+    c, a, b = make_pair()
+    _, _, mr_a, cq_a, qp_a, _ = a
+    _, _, mr_b, _, _, _ = b
+    c.fail_nic("host0/mlx5_0")
+    V.ibv_post_send(qp_a, V.SendWR(20, V.Opcode.WRITE,
+                                   V.SGE(mr_a.addr, 8, mr_a.lkey),
+                                   remote_addr=mr_b.addr, rkey=mr_b.rkey))
+    c.sim.run_until_idle()
+    wcs = V.ibv_poll_cq(cq_a, 10)
+    assert len(wcs) >= 1 and wcs[0].is_error
+    # fast local detection, not 8x timeout
+    assert c.sim.now < 8 * c.ack_timeout
+
+
+def test_transient_flap_recovers_via_hw_retransmit():
+    """Short flap < retry budget: RC hardware retry masks it (access layer)."""
+    c, a, b = make_pair()
+    _, _, mr_a, cq_a, qp_a, buf_a = a
+    _, _, mr_b, _, _, buf_b = b
+    buf_a[:8] = 5
+    c.flap_nic("host1/mlx5_0", down_at=0.0, up_at=c.ack_timeout * 2.5)
+    V.ibv_post_send(qp_a, V.SendWR(30, V.Opcode.WRITE,
+                                   V.SGE(mr_a.addr, 8, mr_a.lkey),
+                                   remote_addr=mr_b.addr, rkey=mr_b.rkey))
+    c.sim.run_until_idle()
+    wcs = V.ibv_poll_cq(cq_a, 10)
+    assert len(wcs) == 1 and wcs[0].status is V.WCStatus.SUCCESS
+    assert (buf_b[:8] == 5).all()
+
+
+def test_rnr_retry_completes_after_recv_posted():
+    c, a, b = make_pair()
+    _, _, mr_a, cq_a, qp_a, buf_a = a
+    _, _, mr_b, cq_b, qp_b, _ = b
+    V.ibv_post_send(qp_a, V.SendWR(40, V.Opcode.SEND, V.SGE(mr_a.addr, 8, mr_a.lkey)))
+    # post the recv after a couple RNR cycles
+    c.sim.schedule(c.rnr_timer * 2.5, lambda: V.ibv_post_recv(
+        qp_b, V.RecvWR(wr_id=41, sge=V.SGE(mr_b.addr, 64, mr_b.lkey))))
+    c.sim.run_until_idle()
+    assert V.ibv_poll_cq(cq_a, 10)[0].status is V.WCStatus.SUCCESS
+    assert V.ibv_poll_cq(cq_b, 10)[0].wr_id == 41
+
+
+def test_doorbell_withholding_blocks_execution():
+    """The primitive behind SHIFT's WR execution fence (§4.3.3)."""
+    c, a, b = make_pair()
+    _, _, mr_a, cq_a, qp_a, buf_a = a
+    _, _, mr_b, _, _, buf_b = b
+    buf_a[:4] = 3
+    wqe = qp_a.post_send_wqe(V.SendWR(50, V.Opcode.WRITE,
+                                      V.SGE(mr_a.addr, 4, mr_a.lkey),
+                                      remote_addr=mr_b.addr, rkey=mr_b.rkey),
+                             ring=False)
+    c.sim.run_until_idle()
+    assert not wqe.completed and (buf_b[:4] == 0).all()  # withheld
+    qp_a.ring_sq_doorbell()
+    c.sim.run_until_idle()
+    assert wqe.completed and (buf_b[:4] == 3).all()
+
+
+def test_psn_duplicate_drop_same_qp():
+    """ACK lost on a healthy QP: HW retransmit is dropped as a duplicate —
+    exactly-once on the same NIC (the state cross-NIC failover loses)."""
+    import struct
+    c, a, b = make_pair()
+    _, _, mr_a, cq_a, qp_a, buf_a = a
+    _, _, mr_b, _, _, buf_b = b
+    # FETCH_ADD is the observable detector for double execution.
+    buf_b[:8] = np.frombuffer(struct.pack("<q", 0), dtype=np.uint8)
+    # Drop exactly the first ACK: flap the *sender-side* switch port during
+    # the ACK flight window. Data goes A->B (delivered), ACK B->A is lost.
+    lat = c.path_latency(c.nic_by_gid["host0/mlx5_0"], c.nic_by_gid["host1/mlx5_0"])
+    V.ibv_post_send(qp_a, V.SendWR(60, V.Opcode.FETCH_ADD,
+                                   V.SGE(mr_a.addr, 8, mr_a.lkey),
+                                   remote_addr=mr_b.addr, rkey=mr_b.rkey,
+                                   compare_add=1))
+    # window: after data delivery, before ack arrival
+    down_at = V.PER_MESSAGE_OVERHEAD + lat + 1e-7
+    c.sim.at(down_at, c.fail_switch_port, "host0/mlx5_0")
+    c.sim.at(down_at + lat + 1e-7, c.recover_switch_port, "host0/mlx5_0")
+    c.sim.run_until_idle()
+    wcs = V.ibv_poll_cq(cq_a, 10)
+    assert len(wcs) == 1 and wcs[0].status is V.WCStatus.SUCCESS
+    # executed exactly once despite retransmission
+    assert struct.unpack("<q", bytes(buf_b[:8]))[0] == 1
+
+
+def test_bandwidth_model_throughput_reasonable():
+    """64KB messages over 100Gb/s: simulated goodput within 2x of line rate."""
+    c, a, b = make_pair()
+    _, _, mr_a, cq_a, qp_a, buf_a = a
+    _, _, mr_b, _, _, _ = b
+    n, sz = 64, 65536
+    for i in range(n):
+        V.ibv_post_send(qp_a, V.SendWR(i, V.Opcode.WRITE,
+                                       V.SGE(mr_a.addr, sz, mr_a.lkey),
+                                       remote_addr=mr_b.addr, rkey=mr_b.rkey))
+    c.sim.run_until_idle()
+    wcs = V.ibv_poll_cq(cq_a, n + 1)
+    assert len(wcs) == n and all(w.status is V.WCStatus.SUCCESS for w in wcs)
+    goodput = n * sz / c.sim.now
+    assert goodput > 0.5 * 12.5e9
