@@ -1,45 +1,20 @@
-"""Shared benchmark harness utilities (perftest analogues)."""
+"""Shared benchmark harness utilities (perftest analogues).
+
+The endpoint/pair harness is the campaign engine's
+(``repro.scenarios.engine``); this module only re-exports it with the
+benchmark defaults (larger buffers, slower probe cadence)."""
 
 from __future__ import annotations
 
-import numpy as np
+from repro.core import verbs as V  # noqa: F401  (re-export for benchmarks)
+from repro.scenarios.engine import PairEndpoint, make_pair as _make_pair
 
-from repro.core import shift as S
-from repro.core import verbs as V
-from repro.core.fabric import build_cluster
-
-
-class BenchEndpoint:
-    def __init__(self, lib, nic="mlx5_0", buf_size=1 << 22, cq_depth=1 << 16):
-        self.lib = lib
-        self.ctx = lib.open_device(nic)
-        self.pd = lib.alloc_pd(self.ctx)
-        self.buf = np.zeros(buf_size, dtype=np.uint8)
-        self.mr = lib.reg_mr(self.pd, self.buf)
-        self.cq = lib.create_cq(self.ctx, cq_depth)
-        self.qp = lib.create_qp(self.pd, V.QPInitAttr(
-            send_cq=self.cq, recv_cq=self.cq,
-            cap=V.QPCap(max_send_wr=8192, max_recv_wr=8192)))
-
-    def poll(self, n=4096):
-        return self.lib.poll_cq(self.cq, n)
+BenchEndpoint = PairEndpoint
 
 
 def make_pair(lib_kind: str, probe_interval=20e-3, **cluster_kw):
-    V.reset_registries()
-    c = build_cluster(n_hosts=2, nics_per_host=2, **cluster_kw)
-    if lib_kind == "shift":
-        cfg = S.ShiftConfig(probe_interval=probe_interval)
-        lib_a = S.ShiftLib(c, "host0", config=cfg)
-        lib_b = S.ShiftLib(c, "host1", kv=lib_a.kv, config=cfg)
-    else:
-        lib_a = S.StandardLib(c, "host0")
-        lib_b = S.StandardLib(c, "host1")
-    a, b = BenchEndpoint(lib_a), BenchEndpoint(lib_b)
-    lib_a.connect(a.qp, *lib_b.route_of(b.qp))
-    lib_b.connect(b.qp, *lib_a.route_of(a.qp))
-    lib_a.settle(0.05)
-    return c, a, b
+    return _make_pair(lib_kind, probe_interval=probe_interval,
+                      endpoint_kw={"buf_size": 1 << 22}, **cluster_kw)
 
 
 class TrafficPump:

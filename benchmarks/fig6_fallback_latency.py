@@ -1,5 +1,10 @@
 """Fig. 6(b): fallback latency — interval between polling the first failed
-WC and the first successful WC after falling back to the backup RNIC."""
+WC and the first successful WC after falling back to the backup RNIC.
+
+Re-based on the fault-scenario campaign engine (repro.scenarios): each
+figure row is one named scenario from the library executed by the
+deterministic campaign runner, so the benchmark numbers come from exactly
+the same code path the invariant tests exercise."""
 
 from __future__ import annotations
 
@@ -7,35 +12,38 @@ import sys
 
 sys.path.insert(0, "src")
 
-from benchmarks.common import TrafficPump, make_pair  # noqa: E402
+from repro.scenarios import SCENARIOS, run_scenario  # noqa: E402
+
+# figure rows -> library scenarios (initiator / responder / switch cases)
+FIG6_SCENARIOS = {
+    "initiator_nic": "sender_nic_down",
+    "responder_nic": "receiver_nic_down",
+    "switch_port": "switch_port_down",
+}
 
 
-def run_one(scenario: str, op: str = "write"):
-    c, a, b = make_pair("shift")
-    t0 = c.sim.now
-    if scenario == "initiator_nic":
-        c.sim.at(t0 + 0.5, c.fail_nic, "host0/mlx5_0")
-    elif scenario == "responder_nic":
-        c.sim.at(t0 + 0.5, c.fail_nic, "host1/mlx5_0")
-    else:
-        c.sim.at(t0 + 0.5, c.fail_switch_port, "host0/mlx5_0")
-    pump = TrafficPump(c, a, b, op=op, msg_size=1 << 16, sample_dt=0.5)
-    pump.run(2.0)
-    lats = (a.lib.stats.fallback_latencies +
-            b.lib.stats.fallback_latencies)
-    return lats
+def run_one(case: str, workload: str = "pingpong", **kw):
+    return run_scenario(SCENARIOS[FIG6_SCENARIOS[case]],
+                        workload=workload, **kw)
 
 
 def main(quick: bool = False):
     out = []
-    for sc in ("initiator_nic", "responder_nic", "switch_port"):
-        for op in (("write",) if quick else ("write", "send", "read")):
-            lats = run_one(sc, op)
-            ms = [l * 1e3 for l in lats]
+    workloads = ("pingpong",) if quick else ("pingpong", "allreduce")
+    for case in FIG6_SCENARIOS:
+        for wl in workloads:
+            kw = {"max_rounds": 2000} if wl == "allreduce" else {}
+            result = run_one(case, workload=wl, **kw)
+            ms = [l * 1e3 for l in result.fallback_latencies]
             val = min(ms) if ms else float("nan")
-            out.append((f"fig6b/{sc}/{op}", val))
-            print(f"{sc:14s} {op:5s}  fallback latency = {val:.2f} ms "
-                  f"(n={len(ms)})")
+            # invariant violations mark the row instead of aborting the
+            # driver mid-report; benchmarks/run.py exits non-zero on them
+            status = "" if result.ok else \
+                "VIOLATED:" + ";".join(v.replace(",", ";")
+                                       for v in result.violations)
+            out.append((f"fig6b/{case}/{wl}", val, status))
+            print(f"{case:14s} {wl:9s}  fallback latency = {val:.2f} ms "
+                  f"(n={len(ms)}) {status}")
     return out
 
 

@@ -2,10 +2,15 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (quick-mode defaults so the
 full suite completes in minutes; each module's ``main()`` runs the full
-configuration standalone)."""
+configuration standalone).
+
+``--smoke`` runs a reduced deterministic subset — the fault-scenario
+campaign (pingpong workload over the full library), fig6 and fig7 — and
+exits non-zero on any invariant violation: the fast CI pass."""
 
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 
@@ -29,7 +34,8 @@ def fig5_throughput_rows():
 def fig6_fallback_rows():
     from benchmarks import fig6_fallback_latency
     rows = fig6_fallback_latency.main(quick=True)
-    return [(name, ms * 1e3, f"{ms:.3f}ms") for name, ms in rows]
+    return [(name, ms * 1e3, f"{ms:.3f}ms" + (f"|{status}" if status else ""))
+            for name, ms, status in rows]
 
 
 def fig7_verbs_rows():
@@ -58,21 +64,64 @@ def fig8_training_rows():
     return out
 
 
-def main() -> None:
-    sections = [
-        ("fig7 (verb overhead)", fig7_verbs_rows),
-        ("table2 (write latency)", table2_latency_rows),
-        ("fig6b (fallback latency)", fig6_fallback_rows),
-        ("fig5 (throughput failover)", fig5_throughput_rows),
-        ("fig8 (training progress)", fig8_training_rows),
-    ]
+def _violation_status(violations):
+    # the derived column is one CSV field: keep commas out of it
+    return "VIOLATED:" + ";".join(v.replace(",", ";") for v in violations)
+
+
+def campaign_rows(smoke: bool = False):
+    """Scenario-campaign section: one row per (scenario, workload) cell."""
+    from repro.scenarios import SCENARIOS, Campaign
+
+    workloads = ("pingpong",) if smoke else ("pingpong", "allreduce")
+    campaign = Campaign(list(SCENARIOS.values()), workloads=workloads,
+                        workload_kw={"allreduce": {"max_rounds": 2000}})
+    results = campaign.run()
+    out = []
+    for r in results:
+        lat_us = max(r.fallback_latencies) * 1e6 if r.fallback_latencies \
+            else float("nan")
+        status = "ok" if r.ok else _violation_status(r.violations)
+        out.append((f"campaign/{r.scenario}/{r.workload}", lat_us,
+                    f"{status}|fb={r.fallbacks}|rec={r.recoveries}|"
+                    f"events={r.event_count}"))
+    return out
+
+
+def main(smoke: bool = False) -> int:
+    if smoke:
+        # fig6's scenarios are a subset of the campaign's, so the campaign
+        # section already covers them — no separate fig6 pass in smoke
+        sections = [
+            ("campaign (fault scenarios)", lambda: campaign_rows(smoke=True)),
+            ("fig7 (verb overhead)", fig7_verbs_rows),
+        ]
+    else:
+        sections = [
+            ("fig7 (verb overhead)", fig7_verbs_rows),
+            ("table2 (write latency)", table2_latency_rows),
+            ("fig6b (fallback latency)", fig6_fallback_rows),
+            ("fig5 (throughput failover)", fig5_throughput_rows),
+            ("campaign (fault scenarios)", campaign_rows),
+            ("fig8 (training progress)", fig8_training_rows),
+        ]
     print("name,us_per_call,derived")
+    violated = False
     for title, fn in sections:
         print(f"# --- {title} ---", flush=True)
         for name, us, derived in fn():
             us_s = f"{us:.3f}" if np.isfinite(us) else ""
             print(f"{name},{us_s},{derived}", flush=True)
+            violated = violated or "VIOLATED" in derived
+    if violated:
+        print("# campaign invariant VIOLATIONS detected", flush=True)
+        return 1
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="fast deterministic CI subset "
+                             "(campaign + fig6 + fig7)")
+    sys.exit(main(smoke=parser.parse_args().smoke))

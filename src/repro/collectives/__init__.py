@@ -7,4 +7,5 @@ paper's GPU/NCCL placement onto a JAX training system (cross-host gradient
 sync / DCN-side traffic).
 """
 
-from .world import JcclWorld, CollectiveError, RankEndpoint  # noqa: F401
+from .world import (JcclWorld, CollectiveError, RankEndpoint,  # noqa: F401
+                    build_world)

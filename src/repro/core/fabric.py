@@ -20,7 +20,7 @@ from __future__ import annotations
 import heapq
 import itertools
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 # ---------------------------------------------------------------------------
 # Simulator core
@@ -246,6 +246,9 @@ class Cluster:
         self.rnr_timer: float = 100e-6
         self.rnr_retry: int = 7
         self.nic_error_detect_latency: float = 20e-6
+        # applied-fault audit trail: (virtual time, kind, nic gid)
+        self.fault_log: List[Tuple[float, str, str]] = []
+        self.fault_listeners: List[Callable[[float, str, str], None]] = []
 
     # -- construction ---------------------------------------------------------
     def add_host(self, name: str) -> Host:
@@ -290,35 +293,117 @@ class Cluster:
 
     # -- failure injection ----------------------------------------------------
     def fail_nic(self, gid: str) -> None:
+        self._record_fault("nic_down", gid)
         self.nic_by_gid[gid].set_up(False)
 
     def recover_nic(self, gid: str) -> None:
+        self._record_fault("nic_up", gid)
         self.nic_by_gid[gid].set_up(True)
 
     def fail_switch_port(self, gid: str) -> None:
         nic = self.nic_by_gid[gid]
         if nic.switch_port:
+            self._record_fault("port_down", gid)
             nic.switch_port.up = False
 
     def recover_switch_port(self, gid: str) -> None:
         nic = self.nic_by_gid[gid]
         if nic.switch_port:
+            self._record_fault("port_up", gid)
             nic.switch_port.up = True
 
     def fail_link(self, gid: str) -> None:
         nic = self.nic_by_gid[gid]
         if nic.link:
+            self._record_fault("link_down", gid)
             nic.link.up = False
 
     def recover_link(self, gid: str) -> None:
         nic = self.nic_by_gid[gid]
         if nic.link:
+            self._record_fault("link_up", gid)
             nic.link.up = True
 
     def flap_nic(self, gid: str, down_at: float, up_at: float) -> None:
         """Schedule an interface flap (down then up) in virtual time."""
         self.sim.at(down_at, self.fail_nic, gid)
         self.sim.at(up_at, self.recover_nic, gid)
+
+    # -- composable fault-injection hooks (scenario engine entry points) -----
+    # Uniform fault vocabulary: every injectable event is a (kind, target)
+    # pair, where target is a NIC GID ("host0/mlx5_0") or a rail selector
+    # ("rail:0" = NIC index 0 of every host — correlated rail failure).
+    FAULT_KINDS = ("nic_down", "nic_up", "port_down", "port_up",
+                   "link_down", "link_up")
+
+    def _record_fault(self, kind: str, gid: str) -> None:
+        self.fault_log.append((self.sim.now, kind, gid))
+        for cb in list(self.fault_listeners):
+            cb(self.sim.now, kind, gid)
+
+    def add_fault_listener(
+            self, cb: Callable[[float, str, str], None]) -> None:
+        """Register an observer fired on every applied fault (the scenario
+        engine uses this to cross-check injected vs. applied timelines)."""
+        self.fault_listeners.append(cb)
+
+    def resolve_targets(self, target: str) -> List[str]:
+        """Expand a target selector to concrete NIC GIDs."""
+        if target.startswith("rail:"):
+            k = int(target.split(":", 1)[1])
+            return [nic.gid for host in self.hosts.values()
+                    for nic in host.nics if nic.index == k]
+        return [target]
+
+    def apply_fault(self, kind: str, target: str) -> None:
+        """Apply one fault action now. Rail selectors expand to every
+        matching NIC (same virtual instant -> correlated failure)."""
+        fn = {
+            "nic_down": self.fail_nic, "nic_up": self.recover_nic,
+            "port_down": self.fail_switch_port,
+            "port_up": self.recover_switch_port,
+            "link_down": self.fail_link, "link_up": self.recover_link,
+        }.get(kind)
+        if fn is None:
+            raise ValueError(f"unknown fault kind {kind!r} "
+                             f"(expected one of {self.FAULT_KINDS})")
+        for gid in self.resolve_targets(target):
+            fn(gid)
+
+    def schedule_fault(self, at: float, kind: str, target: str) -> None:
+        self.sim.at(at, self.apply_fault, kind, target)
+
+
+# ---------------------------------------------------------------------------
+# Fault-timeline generators — produce (time, kind, target) triples that
+# compose by concatenation; the scenario DSL (repro.scenarios.spec) wraps
+# them into FaultActions. Times are relative to an arbitrary origin.
+# ---------------------------------------------------------------------------
+
+
+FaultTriple = Tuple[float, str, str]
+
+
+def flap_train(target: str, start: float, count: int, down_time: float,
+               period: float, kind: str = "nic") -> List[FaultTriple]:
+    """A train of ``count`` down/up flaps: down at start + i*period, back
+    up ``down_time`` later. ``kind`` is "nic", "port" or "link"."""
+    if down_time >= period:
+        raise ValueError("down_time must be < period (interface must "
+                         "come back up before the next flap)")
+    out: List[FaultTriple] = []
+    for i in range(count):
+        t = start + i * period
+        out.append((t, f"{kind}_down", target))
+        out.append((t + down_time, f"{kind}_up", target))
+    return out
+
+
+def correlated_failure(targets: Sequence[str], at: float,
+                       kind: str = "nic_down") -> List[FaultTriple]:
+    """The same fault on every target at the same virtual instant (e.g.
+    a rail switch power loss taking out one NIC of every host)."""
+    return [(at, kind, t) for t in targets]
 
 
 def build_cluster(n_hosts: int = 2, nics_per_host: int = 2,

@@ -44,6 +44,7 @@ Implementation deviations from the paper (documented in DESIGN.md):
 
 from __future__ import annotations
 
+import dataclasses
 import enum
 import itertools
 import time
@@ -128,6 +129,13 @@ class ShiftStats:
     fallback_latencies: List[float] = field(default_factory=list)
     # zero-copy audit: SHIFT must never hold payload bytes
     payload_bytes_held: int = 0
+
+    def as_dict(self) -> Dict[str, object]:
+        """Deep-copied snapshot (scenario engine determinism checks compare
+        these across runs, so mutation after the fact must not alias)."""
+        d = dataclasses.asdict(self)
+        d["fallback_latencies"] = list(self.fallback_latencies)
+        return d
 
 
 # ---------------------------------------------------------------------------
@@ -645,6 +653,7 @@ class ShiftQP:
             return
         self._in_handshake = True
         lib.stats.fallbacks += 1
+        lib._emit_event("fallback", self)
         self.cycle += 1
         self._reset_default()
         self._reset_backup()
@@ -672,6 +681,7 @@ class ShiftQP:
         self._await_first_success = True
         self._in_handshake = True
         self.lib.stats.fallbacks += 1
+        self.lib._emit_event("fallback", self)
         self.cycle += 1
         self._reset_default()
         self._reset_backup()
@@ -844,6 +854,7 @@ class ShiftQP:
         self._fence_rec = None
         self.send_state = SendState.DEFAULT
         self.lib.stats.recoveries += 1
+        self.lib._emit_event("recovery", self)
 
     def _abort_recovery(self, reenter: bool = True) -> None:
         """Default path died again mid-recovery: withheld WRs (never
@@ -970,6 +981,30 @@ class ShiftQP:
         self.send_scq.app_buffer.append(out)
 
     # ------------------------------------------------------------------
+    # introspection (scenario-engine invariant hooks)
+    # ------------------------------------------------------------------
+    def state_summary(self) -> Dict[str, object]:
+        """Structured snapshot of the per-QP state machine — used by the
+        campaign engine to assert quiescence invariants after a run."""
+        return {
+            "qpn": self.qpn,
+            "send_state": self.send_state.name,
+            "recv_state": self.recv_state.name,
+            "cycle": self.cycle,
+            "outstanding_sends": sum(1 for r in self.send_recs
+                                     if not r.completed),
+            "outstanding_recvs": sum(1 for r in self.recv_fifo
+                                     if not r.completed),
+            "withheld": len(self._withheld),
+            "awaiting_ack": self._awaiting_ack,
+            "in_handshake": self._in_handshake,
+            "probing": self._probing,
+            "n_recv_completed": self.n_recv_completed,
+            "n_sent_twosided_completed": self.n_sent_twosided_completed,
+            "fail_reason": self.fail_reason,
+        }
+
+    # ------------------------------------------------------------------
     # unmaskable failure
     # ------------------------------------------------------------------
     def _propagate_errors(self, reason: str) -> None:
@@ -979,6 +1014,7 @@ class ShiftQP:
         self._in_handshake = False
         self.lib.stats.errors_propagated += 1
         self.fail_reason = reason
+        self.lib._emit_event("failed", self)
         first = True
         for rec in self.send_recs:
             if rec.completed:
@@ -1022,6 +1058,26 @@ class ShiftLib:
         self.rwqe_map: Dict[int, Tuple[_RecvRec, ShiftQP]] = {}
         self.qpn_map: Dict[int, ShiftQP] = {}
         self.shift_qps: List[ShiftQP] = []
+        # lifecycle observers: cb(event, qp) with event in
+        # {"fallback", "recovery", "failed"} — scenario-engine hook
+        self.event_listeners: List[Callable[[str, ShiftQP], None]] = []
+
+    def add_event_listener(self,
+                           cb: Callable[[str, "ShiftQP"], None]) -> None:
+        self.event_listeners.append(cb)
+
+    def _emit_event(self, event: str, qp: "ShiftQP") -> None:
+        for cb in list(self.event_listeners):
+            cb(event, qp)
+
+    def invariant_snapshot(self) -> Dict[str, object]:
+        """Library-wide state snapshot for post-run invariant checks."""
+        return {
+            "host": self.host,
+            "stats": self.stats.as_dict(),
+            "payload_bytes_held": self.stats.payload_bytes_held,
+            "qps": [qp.state_summary() for qp in self.shift_qps],
+        }
 
     # -- control verbs (recorded + shadowed) --------------------------------
     def open_device(self, nic: str) -> ShiftContext:

@@ -1,0 +1,21 @@
+"""Compatibility shims for jax/pallas API drift.
+
+The kernels target the current pallas-TPU API; older jax releases spell
+some names differently. Import the shimmed names from here instead of
+``pltpu`` directly so the kernels run on either side of a rename.
+
+Currently shimmed:
+
+* ``CompilerParams`` — renamed from ``TPUCompilerParams`` after jax
+  0.4.x; same constructor signature (``dimension_semantics=...``).
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None)
+if CompilerParams is None:  # jax <= 0.4.x
+    CompilerParams = pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

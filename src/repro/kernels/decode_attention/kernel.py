@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -85,7 +87,7 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, scale=None,
                         pltpu.VMEM((1,), jnp.float32),
                         pltpu.VMEM((1, hd), jnp.float32)],
         out_shape=jax.ShapeDtypeStruct((B, H, 1, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(cache_len, q4, k_cache, v_cache)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -120,7 +122,7 @@ def flash_fwd(q, k, v, *, causal: bool = True, scale=None,
             pltpu.VMEM((bq, hd), jnp.float32),
         ],
         out_shape=out_shapes,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
@@ -258,7 +260,7 @@ def flash_bwd(q, k, v, o, lse, do, *, causal: bool = True, scale=None,
         out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
         scratch_shapes=[pltpu.VMEM((bq, hd), jnp.float32)],
         out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,
@@ -291,7 +293,7 @@ def flash_bwd(q, k, v, o, lse, do, *, causal: bool = True, scale=None,
                         pltpu.VMEM((bk, hd), jnp.float32)],
         out_shape=(jax.ShapeDtypeStruct((B, KV, Sk, hd), k.dtype),
                    jax.ShapeDtypeStruct((B, KV, Sk, hd), v.dtype)),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _rwkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scr,
                  *, bt: int):
@@ -74,7 +76,7 @@ def rwkv6_scan(r, k, v, w, u, *, bt: int = 64, interpret: bool = True):
         out_specs=pl.BlockSpec((1, 1, bt, N), lambda b, h, t: (b, h, t, 0)),
         scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
         out_shape=jax.ShapeDtypeStruct((B, H, T, N), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(rt, kt, vt, wt, u)

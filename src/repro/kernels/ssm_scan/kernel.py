@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, h_scr,
                 *, bt: int):
@@ -94,7 +96,7 @@ def ssd_scan(xh, dt, A, Bm, Cm, *, bt: int = 64, interpret: bool = True):
         out_specs=pl.BlockSpec((1, 1, bt, P), lambda b, h, t: (b, h, t, 0)),
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
         out_shape=jax.ShapeDtypeStruct((B, H, T, P), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xt, dtt, A, Bm, Cm)

@@ -1,0 +1,21 @@
+"""Deterministic fault-scenario campaign engine (see DESIGN.md §3).
+
+Turns the repo's headline claim — SHIFT masks fatal NIC/link failures so
+training continues — into a repeatable test artifact: a declarative
+scenario DSL (``spec``), a named >=10-scenario library (``library``), a
+campaign runner executing scenario x workload matrices (``engine``), and
+post-run invariant checks (``invariants``).
+
+Quick start::
+
+    from repro.scenarios import SCENARIOS, Campaign
+    results = Campaign([SCENARIOS["sender_nic_down"]],
+                       workloads=("pingpong", "allreduce")).run()
+    assert all(r.ok for r in results)
+"""
+
+from .spec import FaultAction, Scenario, correlated, flap_train  # noqa: F401
+from .library import SCENARIOS, get, names  # noqa: F401
+from .engine import (Campaign, RunResult, WORKLOADS,  # noqa: F401
+                     make_pair, run_scenario)
+from .invariants import check_invariants  # noqa: F401

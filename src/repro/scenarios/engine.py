@@ -1,0 +1,456 @@
+"""Campaign engine: execute fault scenarios against ShiftLib workloads.
+
+Three workloads, in increasing weight:
+
+* ``pingpong`` — a paced one-directional NCCL-Simple stream (bulk WRITE +
+  WRITE_IMM notify) between two hosts, with per-message payload
+  verification. Source-slot reuse is completion-gated (mirroring
+  ``collectives.world.RankEndpoint``) so a post-failover retransmission
+  can never DMA-read a recycled slot.
+* ``allreduce`` — repeated ring all-reduces through ``JcclWorld`` until
+  the scenario window closes, verifying the numeric result of every
+  round (payload-level exactly-once).
+* ``ddp`` — a short data-parallel training run (``build_smoke_trainer``);
+  scenario times are rebased onto the measured per-step collective time
+  so faults land mid-all-reduce regardless of model size.
+
+Every run returns a :class:`RunResult` whose :meth:`RunResult.fingerprint`
+is a pure function of the virtual-clock execution — same seed implies an
+identical fingerprint (the determinism contract tests assert this).
+Invariants (exactly-once, zero-copy, notification order, bounded fallback
+latency) are checked by ``repro.scenarios.invariants`` after every run.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import shift as S
+from repro.core import verbs as V
+from repro.core.fabric import Cluster, build_cluster
+
+from .spec import Scenario
+
+# ---------------------------------------------------------------------------
+# run result
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RunResult:
+    scenario: str
+    workload: str
+    seed: int
+    completed: bool = False         # workload reached its goal
+    aborted: bool = False           # app-visible failure (crash-stop)
+    event_count: int = 0            # simulator events executed
+    sim_elapsed: float = 0.0        # virtual seconds consumed
+    fallbacks: int = 0
+    recoveries: int = 0
+    errors_propagated: int = 0
+    payload_bytes_held: int = 0
+    fallback_latencies: List[float] = field(default_factory=list)
+    app_errors: int = 0             # error WCs surfaced to the application
+    delivered: Optional[List[int]] = None   # notify seqs in arrival order
+    n_expected: Optional[int] = None
+    payload_mismatches: int = 0
+    order_violations: int = 0
+    duplicate_notifies: int = 0
+    rounds: int = 0                 # allreduce rounds / train steps done
+    fault_log: List[Tuple[float, str, str]] = field(default_factory=list)
+    lifecycle: List[Tuple[float, str, str]] = field(default_factory=list)
+    violations: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def fingerprint(self) -> Tuple:
+        """Virtual-clock-only digest; identical across same-seed runs."""
+        return (
+            self.event_count,
+            round(self.sim_elapsed, 9),
+            self.fallbacks, self.recoveries, self.errors_propagated,
+            self.completed, self.aborted, self.rounds,
+            tuple(self.delivered) if self.delivered is not None else None,
+            tuple((round(t, 9), k, g) for t, k, g in self.fault_log),
+            tuple((round(t, 9), e, h) for t, e, h in self.lifecycle),
+            tuple(round(l, 9) for l in self.fallback_latencies),
+        )
+
+
+def _observe(cluster: Cluster, libs: Sequence, result: RunResult) -> None:
+    """Wire fault + SHIFT lifecycle observers into a result."""
+    cluster.add_fault_listener(
+        lambda t, kind, gid: result.fault_log.append((t, kind, gid)))
+    for lib in libs:
+        if isinstance(lib, S.ShiftLib):
+            lib.add_event_listener(
+                lambda ev, qp, host=lib.host: result.lifecycle.append(
+                    (cluster.sim.now, ev, host)))
+
+
+def _harvest(libs: Sequence, result: RunResult) -> None:
+    shift_libs = [l for l in libs if isinstance(l, S.ShiftLib)]
+    result.fallbacks = sum(l.stats.fallbacks for l in shift_libs)
+    result.recoveries = sum(l.stats.recoveries for l in shift_libs)
+    result.errors_propagated = sum(l.stats.errors_propagated
+                                   for l in shift_libs)
+    result.payload_bytes_held = sum(l.stats.payload_bytes_held
+                                    for l in shift_libs)
+    result.fallback_latencies = [lat for l in shift_libs
+                                 for lat in l.stats.fallback_latencies]
+
+
+def _from_snapshot(snap: Dict[str, object], result: RunResult) -> None:
+    """Populate a RunResult from JcclWorld.stats_snapshot — the single
+    source of aggregation for world-based workloads."""
+    result.fallbacks = snap["fallbacks"]
+    result.recoveries = snap["recoveries"]
+    result.errors_propagated = snap["errors_propagated"]
+    result.payload_bytes_held = snap["payload_bytes_held"]
+    result.fallback_latencies = snap["fallback_latencies"]
+    result.order_violations = snap["order_violations"]
+    result.duplicate_notifies = snap["duplicate_notifies"]
+    result.app_errors = sum(snap["rank_errors"])
+
+
+# ---------------------------------------------------------------------------
+# pingpong workload
+# ---------------------------------------------------------------------------
+
+
+class PairEndpoint:
+    """One application endpoint (mirrors the tests'/benchmarks' harness)."""
+
+    def __init__(self, lib, nic: str = "mlx5_0", buf_size: int = 1 << 20,
+                 cq_depth: int = 1 << 16):
+        self.lib = lib
+        self.ctx = lib.open_device(nic)
+        self.pd = lib.alloc_pd(self.ctx)
+        self.buf = np.zeros(buf_size, dtype=np.uint8)
+        self.mr = lib.reg_mr(self.pd, self.buf)
+        self.cq = lib.create_cq(self.ctx, cq_depth)
+        self.qp = lib.create_qp(self.pd, V.QPInitAttr(
+            send_cq=self.cq, recv_cq=self.cq,
+            cap=V.QPCap(max_send_wr=8192, max_recv_wr=8192)))
+
+    def poll(self, n: int = 4096):
+        return self.lib.poll_cq(self.cq, n)
+
+
+def make_pair(lib_kind: str = "shift", probe_interval: float = 5e-3,
+              nics_per_host: int = 2, endpoint_kw: Optional[dict] = None,
+              **cluster_kw):
+    """Fresh 2-host cluster + connected endpoint pair (also the harness
+    behind ``benchmarks.common.make_pair``)."""
+    V.reset_registries()
+    c = build_cluster(n_hosts=2, nics_per_host=nics_per_host, **cluster_kw)
+    if lib_kind == "shift":
+        cfg = S.ShiftConfig(probe_interval=probe_interval)
+        lib_a = S.ShiftLib(c, "host0", config=cfg)
+        lib_b = S.ShiftLib(c, "host1", kv=lib_a.kv, config=cfg)
+    else:
+        lib_a, lib_b = S.StandardLib(c, "host0"), S.StandardLib(c, "host1")
+    endpoint_kw = endpoint_kw or {}
+    a, b = PairEndpoint(lib_a, **endpoint_kw), PairEndpoint(lib_b, **endpoint_kw)
+    lib_a.connect(a.qp, *lib_b.route_of(b.qp))
+    lib_b.connect(b.qp, *lib_a.route_of(a.qp))
+    lib_a.settle(0.05)
+    return c, a, b
+
+
+class _PingPongPump:
+    """Paced Simple-protocol stream a -> b with payload verification.
+
+    ``SLOTS`` source/staging slots are reused round-robin; a new message
+    only posts while fewer than ``WINDOW`` notifies are uncompleted, so a
+    slot is never rewritten before its prior message is ACKed (or its
+    completion synthesized) — the completion-gated reuse rule.
+    """
+
+    SLOTS = 16
+    WINDOW = 4
+
+    def __init__(self, c: Cluster, a: PairEndpoint, b: PairEndpoint,
+                 n_msgs: int, size: int, interval: float, seed: int,
+                 deadline: float, result: RunResult):
+        self.c, self.a, self.b = c, a, b
+        self.n_msgs, self.size, self.interval = n_msgs, size, interval
+        self.deadline = deadline
+        self.r = result
+        self.fills = [(seed * 31 + s) % 251 + 1 for s in range(n_msgs)]
+        self.posted = 0
+        self.completed_sends = 0
+        self.dead = False
+        result.delivered = []
+        result.n_expected = n_msgs
+
+    # -- helpers -----------------------------------------------------------
+    def _off(self, seq: int) -> int:
+        return (seq % self.SLOTS) * self.size
+
+    def drain(self) -> None:
+        for wc in self.a.poll():
+            if wc.is_error:
+                self.r.app_errors += 1
+                self.dead = True
+                continue
+            if wc.opcode is V.WCOpcode.RDMA_WRITE:
+                self.completed_sends += 1   # only the imm send is signaled
+        for wc in self.b.poll():
+            if wc.is_error:
+                self.r.app_errors += 1
+                continue
+            if wc.opcode is V.WCOpcode.RECV_RDMA_WITH_IMM:
+                seq = wc.imm_data
+                self.r.delivered.append(seq)
+                off = self._off(seq)
+                got = self.b.buf[off:off + self.size]
+                if not (got == self.fills[seq]).all():
+                    self.r.payload_mismatches += 1
+
+    def _post_one(self) -> None:
+        seq = self.posted
+        off = self._off(seq)
+        self.a.buf[off:off + self.size] = self.fills[seq]
+        try:
+            self.b.lib.post_recv(self.b.qp, V.RecvWR(wr_id=50_000 + seq))
+            self.a.lib.post_send(self.a.qp, V.SendWR(
+                wr_id=seq, opcode=V.Opcode.WRITE,
+                sge=V.SGE(self.a.mr.addr + off, self.size, self.a.mr.lkey),
+                remote_addr=self.b.mr.addr + off, rkey=self.b.mr.rkey,
+                send_flags=0))
+            self.a.lib.post_send(self.a.qp, V.SendWR(
+                wr_id=seq, opcode=V.Opcode.WRITE_IMM, sge=None,
+                remote_addr=0, rkey=self.b.mr.rkey, imm_data=seq,
+                send_flags=V.SEND_FLAG_SIGNALED))
+        except V.VerbsError:
+            self.dead = True
+            return
+        self.posted += 1
+
+    @property
+    def finished(self) -> bool:
+        if self.dead:
+            return True
+        return (len(self.r.delivered) >= self.n_msgs
+                and self.completed_sends >= self.n_msgs)
+
+    def _tick(self) -> None:
+        self.drain()
+        if (not self.dead and self.posted < self.n_msgs
+                and self.posted - self.completed_sends < self.WINDOW):
+            self._post_one()
+        if not self.finished and self.c.sim.now <= self.deadline:
+            self.c.sim.schedule(self.interval, self._tick)
+
+    def start(self) -> None:
+        self._tick()
+
+
+def _traffic_horizon(scenario: Scenario, probe_interval: float) -> float:
+    """How long the workload must keep posting *signaled* traffic: past the
+    last fault action plus a few probe cycles. Recovery's WR-execution
+    fence is the next signaled WR after the probe succeeds, so a stream
+    that drains before the default path returns can never switch back."""
+    last_act = max((a.at for a in scenario.actions), default=0.0)
+    return last_act + 3 * probe_interval
+
+
+def run_pingpong(scenario: Scenario, seed: int = 0, n_msgs: int = 60,
+                 size: int = 8192, interval: float = 200e-6,
+                 probe_interval: float = 5e-3) -> RunResult:
+    result = RunResult(scenario=scenario.name, workload="pingpong",
+                       seed=seed)
+    n_msgs = max(n_msgs,
+                 int(_traffic_horizon(scenario, probe_interval) / interval))
+    c, a, b = make_pair(probe_interval=probe_interval)
+    _observe(c, [a.lib, b.lib], result)
+    t0 = c.sim.now
+    scenario.schedule(c, t0)
+    deadline = t0 + scenario.duration
+    pump = _PingPongPump(c, a, b, n_msgs, size, interval, seed,
+                         deadline, result)
+    pump.start()
+    c.sim.run(until=deadline + 0.05)
+    pump.drain()
+    result.completed = (not pump.dead
+                        and len(result.delivered) >= n_msgs)
+    result.aborted = pump.dead
+    result.event_count = c.sim._executed
+    result.sim_elapsed = c.sim.now - t0
+    _harvest([a.lib, b.lib], result)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# allreduce workload
+# ---------------------------------------------------------------------------
+
+
+def run_allreduce(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
+                  elems: int = 1 << 14, max_rounds: int = 4000,
+                  probe_interval: float = 5e-3) -> RunResult:
+    from repro.collectives import CollectiveError, build_world
+
+    result = RunResult(scenario=scenario.name, workload="allreduce",
+                       seed=seed)
+    cluster, libs, world = build_world(
+        n_ranks=n_ranks, probe_interval=probe_interval,
+        max_chunk_bytes=1 << 14, strict_order=False)
+    _observe(cluster, libs, result)
+    t0 = cluster.sim.now
+    scenario.schedule(cluster, t0)
+    deadline = t0 + scenario.duration
+    rng = np.random.RandomState(seed)
+    mismatched = 0
+    # rounds are capped for wall time, but traffic MUST span the fault
+    # timeline (+ probe margin) or recovery could never fence (see
+    # _traffic_horizon) and min_fallbacks expectations would be vacuous
+    horizon = t0 + min(scenario.duration,
+                       _traffic_horizon(scenario, probe_interval))
+    try:
+        while cluster.sim.now < horizon or (
+                cluster.sim.now < deadline and result.rounds < max_rounds):
+            arrays = [rng.randn(elems).astype(np.float32)
+                      for _ in range(n_ranks)]
+            expect = np.sum(arrays, axis=0)
+            world.allreduce(arrays, timeout=scenario.duration + 1.0)
+            for arr in arrays:
+                if not np.allclose(arr, expect, atol=1e-4):
+                    mismatched += 1
+            result.rounds += 1
+        result.completed = result.rounds > 0
+    except CollectiveError:
+        result.aborted = True
+    # let probes / recovery handshakes settle inside the window
+    cluster.sim.run(until=deadline + 0.05)
+    result.payload_mismatches = mismatched
+    result.event_count = cluster.sim._executed
+    result.sim_elapsed = cluster.sim.now - t0
+    _from_snapshot(world.stats_snapshot(), result)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# ddp training workload
+# ---------------------------------------------------------------------------
+
+
+def run_ddp(scenario: Scenario, seed: int = 0, steps: int = 6,
+            n_ranks: int = 2) -> RunResult:
+    from repro.collectives import build_world
+    from repro.train.trainer import RestartNeeded, build_smoke_trainer
+
+    result = RunResult(scenario=scenario.name, workload="ddp", seed=seed)
+    cluster, libs, world = build_world(
+        n_ranks=n_ranks, probe_interval=5e-4,
+        max_chunk_bytes=1 << 18, strict_order=False)
+    _observe(cluster, libs, result)
+    ckpt_dir = tempfile.mkdtemp(prefix="repro-campaign-ckpt-")
+    trainer = build_smoke_trainer(cluster, libs, steps=steps,
+                                  ckpt_dir=ckpt_dir, seed=seed)
+    t0 = cluster.sim.now
+    scheduled = [False]
+
+    def on_step(step: int, t: float, loss: float) -> None:
+        # Rebase the scenario timeline onto the measured collective time:
+        # after step 1 we know the per-step virtual cost, so action times
+        # (authored against `scenario.duration`) are scaled to land inside
+        # the remaining steps — mid-all-reduce, not between steps.
+        if step == 1 and not scheduled[0]:
+            scheduled[0] = True
+            per_step = cluster.sim.now - t0
+            span = max(per_step * (steps - 1), per_step)
+            scale = span / scenario.duration
+            for lib in libs:
+                lib.config.probe_interval = max(per_step / 4, 1e-5)
+            for act in scenario.actions:
+                cluster.schedule_fault(cluster.sim.now + act.at * scale,
+                                       act.kind, act.target)
+        result.rounds = step
+
+    try:
+        run = trainer.train(world, on_step=on_step)
+        result.completed = run.final_step == steps
+        losses = [l for _, _, l in run.timeline]
+        if not all(np.isfinite(losses)):
+            result.payload_mismatches += 1
+    except RestartNeeded:
+        result.aborted = True
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+    result.event_count = cluster.sim._executed
+    result.sim_elapsed = cluster.sim.now - t0
+    _from_snapshot(world.stats_snapshot(), result)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# campaign runner
+# ---------------------------------------------------------------------------
+
+
+WORKLOADS: Dict[str, Callable[..., RunResult]] = {
+    "pingpong": run_pingpong,
+    "allreduce": run_allreduce,
+    "ddp": run_ddp,
+}
+
+
+def run_scenario(scenario: Scenario, workload: str = "pingpong",
+                 seed: int = 0, **kw) -> RunResult:
+    """Execute one (scenario, workload) cell and check invariants."""
+    from .invariants import check_invariants
+
+    hints = (scenario.workload_hints or {}).get(workload, {})
+    result = WORKLOADS[workload](scenario, seed=seed, **{**hints, **kw})
+    result.violations = check_invariants(result, scenario)
+    return result
+
+
+class Campaign:
+    """A scenario x workload matrix executed on the deterministic fabric."""
+
+    def __init__(self, scenarios: Sequence[Scenario],
+                 workloads: Sequence[str] = ("pingpong",),
+                 seed: int = 0,
+                 workload_kw: Optional[Dict[str, dict]] = None):
+        unknown = [w for w in workloads if w not in WORKLOADS]
+        if unknown:
+            raise ValueError(f"unknown workloads {unknown}")
+        self.scenarios = list(scenarios)
+        self.workloads = list(workloads)
+        self.seed = seed
+        self.workload_kw = workload_kw or {}
+
+    def run(self) -> List[RunResult]:
+        results = []
+        for sc in self.scenarios:
+            for w in self.workloads:
+                results.append(run_scenario(
+                    sc, workload=w, seed=self.seed,
+                    **self.workload_kw.get(w, {})))
+        return results
+
+    @staticmethod
+    def report(results: Sequence[RunResult]) -> str:
+        lines = []
+        for r in results:
+            lat = max(r.fallback_latencies) * 1e3 \
+                if r.fallback_latencies else float("nan")
+            status = "ok" if r.ok else "VIOLATED"
+            lines.append(
+                f"{r.scenario:32s} {r.workload:9s} {status:8s} "
+                f"fb={r.fallbacks} rec={r.recoveries} "
+                f"err={r.errors_propagated} lat_max={lat:.2f}ms "
+                f"events={r.event_count}")
+            for v in r.violations:
+                lines.append(f"    ! {v}")
+        return "\n".join(lines)

@@ -1,0 +1,92 @@
+"""Post-run invariant checks for campaign results.
+
+The four headline invariants (checked after EVERY run):
+
+1. **Exactly-once delivery** — every notification is delivered once:
+   no duplicates in the pingpong delivery trace, no duplicate notifies in
+   a JcclWorld, and every all-reduce round's numeric result equals the
+   true sum (a payload-level exactly-once proof: a lost or doubled
+   contribution changes the sum).
+2. **Zero-copy** — SHIFT never buffers payload bytes
+   (``ShiftStats.payload_bytes_held == 0``; WQE-copy resubmission reads
+   payloads from the registered MRs at retransmit time).
+3. **Notification-order preservation** — the delivery trace is the posted
+   order (strictly increasing seqs) across any number of failovers.
+4. **Bounded fallback latency** — every observed first-failed-WC to
+   first-success interval is within the scenario's ``latency_bound``.
+
+Scenario expectations (masked vs. propagated, minimum fallback count,
+recovery) are checked alongside: a fault-tolerance claim is vacuous if
+the fault never actually bit.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from .engine import RunResult
+from .spec import Scenario
+
+
+def check_invariants(result: RunResult, scenario: Scenario) -> List[str]:
+    v: List[str] = []
+
+    # -- zero-copy ----------------------------------------------------------
+    if result.payload_bytes_held:
+        v.append(f"zero-copy violated: SHIFT held "
+                 f"{result.payload_bytes_held} payload bytes")
+
+    # -- exactly-once + ordering (pingpong delivery trace) -------------------
+    if result.delivered is not None:
+        seen = set()
+        dups = [s for s in result.delivered
+                if s in seen or seen.add(s)]
+        if dups:
+            v.append(f"exactly-once violated: duplicate deliveries {dups[:8]}")
+        if result.delivered != sorted(set(result.delivered)):
+            v.append("notification order violated in delivery trace")
+        if (scenario.expect_masked and result.n_expected is not None
+                and result.delivered != list(range(result.n_expected))):
+            v.append(f"incomplete delivery: {len(result.delivered)}/"
+                     f"{result.n_expected} messages")
+    if result.payload_mismatches:
+        v.append(f"payload corruption: {result.payload_mismatches} "
+                 f"mismatched messages/rounds")
+
+    # -- world-level notify counters ----------------------------------------
+    if result.duplicate_notifies:
+        v.append(f"exactly-once violated: {result.duplicate_notifies} "
+                 f"duplicate notifies")
+    if result.order_violations:
+        v.append(f"notification order violated: {result.order_violations} "
+                 f"out-of-order notifies")
+
+    # -- bounded fallback latency -------------------------------------------
+    late = [l for l in result.fallback_latencies
+            if l > scenario.latency_bound]
+    if late:
+        v.append(f"fallback latency unbounded: max {max(late) * 1e3:.2f}ms "
+                 f"> {scenario.latency_bound * 1e3:.2f}ms")
+
+    # -- scenario expectations ----------------------------------------------
+    if scenario.expect_masked:
+        if result.aborted:
+            v.append("maskable failure aborted the workload")
+        if result.app_errors:
+            v.append(f"maskable failure surfaced {result.app_errors} "
+                     f"error WCs to the application")
+        if not result.completed:
+            v.append("workload did not complete inside the scenario window")
+        if result.fallbacks < scenario.min_fallbacks:
+            v.append(f"fault did not bite: {result.fallbacks} fallbacks "
+                     f"< expected {scenario.min_fallbacks}")
+        # recovery needs probe cycles the short ddp window doesn't have
+        if (scenario.expect_recovery and result.workload != "ddp"
+                and result.recoveries < 1):
+            v.append("traffic never returned to the default NIC")
+    else:
+        if not (result.errors_propagated or result.aborted
+                or result.app_errors):
+            v.append("unmaskable failure was silently swallowed")
+
+    return v

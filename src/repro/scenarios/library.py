@@ -1,0 +1,163 @@
+"""The named fault-scenario library (>= 10 scenarios).
+
+All scenarios assume the standard rail-optimized testbed
+(``build_cluster(n_hosts>=2, nics_per_host=2)``): NIC ``mlx5_0`` of every
+host on rail 0 (the default data rail), ``mlx5_1`` on rail 1 (SHIFT's
+backup). Times are virtual seconds after workload start; the pingpong
+workload paces one message per 200us, so the 2ms-40ms window is dense
+mid-stream traffic.
+
+Naming convention: what fails, then how. ``expect_masked=False`` marks
+the boundary of fault tolerance — scenarios SHIFT must *propagate*, not
+mask (the Trilemma: no healthy path left).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .spec import FaultAction, Scenario, correlated, flap_train
+
+A = FaultAction
+
+
+SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
+    Scenario(
+        name="baseline_clean",
+        description="Control: no faults; zero fallbacks expected.",
+        actions=(),
+        tags=("control",),
+    ),
+    Scenario(
+        name="sender_nic_down",
+        description="Initiator default NIC fails mid-stream, recovers.",
+        actions=(A(2e-3, "nic_down", "host0/mlx5_0"),
+                 A(30e-3, "nic_up", "host0/mlx5_0")),
+        min_fallbacks=1, expect_recovery=True,
+        tags=("nic", "single"),
+    ),
+    Scenario(
+        name="receiver_nic_down",
+        description="Responder default NIC fails mid-stream, recovers.",
+        actions=(A(2e-3, "nic_down", "host1/mlx5_0"),
+                 A(30e-3, "nic_up", "host1/mlx5_0")),
+        min_fallbacks=1, expect_recovery=True,
+        tags=("nic", "single"),
+    ),
+    Scenario(
+        name="switch_port_down",
+        description="ToR port of the initiator's rail goes down, recovers.",
+        actions=(A(2e-3, "port_down", "host0/mlx5_0"),
+                 A(30e-3, "port_up", "host0/mlx5_0")),
+        min_fallbacks=1, expect_recovery=True,
+        tags=("switch", "single"),
+    ),
+    Scenario(
+        name="cable_pull",
+        description="Initiator's rail-0 cable pulled, re-seated later.",
+        actions=(A(2e-3, "link_down", "host0/mlx5_0"),
+                 A(40e-3, "link_up", "host0/mlx5_0")),
+        min_fallbacks=1, expect_recovery=True,
+        tags=("link", "single"),
+    ),
+    Scenario(
+        name="nic_down_permanent",
+        description="Fatal NIC loss, never recovers: traffic must finish "
+                    "on the backup rail (the paper's headline case).",
+        actions=(A(2e-3, "nic_down", "host0/mlx5_0"),),
+        min_fallbacks=1, expect_recovery=False,
+        tags=("nic", "permanent"),
+    ),
+    Scenario(
+        name="link_flap_train",
+        description="4 link flaps (3ms down / 8ms period) on the sender "
+                    "rail: probes keep failing until the train ends.",
+        actions=flap_train("host0/mlx5_0", start=2e-3, count=4,
+                           down_time=3e-3, period=8e-3, kind="link"),
+        min_fallbacks=1, expect_recovery=True,
+        tags=("link", "flap"),
+    ),
+    Scenario(
+        name="port_flap_train",
+        description="3 switch-port flaps on the receiver rail.",
+        actions=flap_train("host1/mlx5_0", start=2e-3, count=3,
+                           down_time=2e-3, period=7e-3, kind="port"),
+        min_fallbacks=1, expect_recovery=True,
+        tags=("switch", "flap"),
+    ),
+    Scenario(
+        name="correlated_rail_failure",
+        description="Rail-0 switch power loss: NIC 0 of EVERY host goes "
+                    "down at the same instant, recovers together.",
+        actions=correlated(["rail:0"], at=2e-3, kind="nic_down")
+        + correlated(["rail:0"], at=40e-3, kind="nic_up"),
+        min_fallbacks=2, expect_recovery=True,
+        tags=("rail", "correlated"),
+    ),
+    Scenario(
+        name="simultaneous_bidirectional",
+        description="Both peers' default NICs die at the same virtual "
+                    "instant: the crossing-NOTIFY handshake case (each "
+                    "side's NOTIFY doubles as the other's ACK).",
+        actions=correlated(["host0/mlx5_0", "host1/mlx5_0"], at=2e-3)
+        + correlated(["host0/mlx5_0", "host1/mlx5_0"], at=40e-3,
+                     kind="nic_up"),
+        min_fallbacks=2, expect_recovery=True,
+        tags=("nic", "correlated", "handshake"),
+    ),
+    Scenario(
+        name="failure_during_recovery",
+        description="Default NIC recovers just long enough for the probe "
+                    "to succeed, then dies again: exercises recovery "
+                    "abort (withheld WRs move back to the backup QP).",
+        actions=(A(2e-3, "nic_down", "host0/mlx5_0"),
+                 A(8e-3, "nic_up", "host0/mlx5_0"),
+                 A(16e-3, "nic_down", "host0/mlx5_0"),
+                 A(40e-3, "nic_up", "host0/mlx5_0")),
+        min_fallbacks=1, expect_recovery=True,
+        tags=("nic", "compound"),
+    ),
+    Scenario(
+        name="repeated_fallback_cycles",
+        description="Two well-separated full fail/recover cycles: state "
+                    "machine must complete Default->Fallback->Default "
+                    "twice (per-cycle PSN bases reject ghosts).",
+        actions=(A(2e-3, "nic_down", "host0/mlx5_0"),
+                 A(20e-3, "nic_up", "host0/mlx5_0"),
+                 A(35e-3, "nic_down", "host0/mlx5_0"),
+                 A(50e-3, "nic_up", "host0/mlx5_0")),
+        duration=0.3,
+        min_fallbacks=3, expect_recovery=True,
+        tags=("nic", "compound"),
+        workload_hints={"pingpong": {"n_msgs": 240}},
+    ),
+    Scenario(
+        name="backup_rail_blip",
+        description="The UNUSED backup NIC blips while traffic rides the "
+                    "default rail: the application must see nothing.",
+        actions=(A(2e-3, "nic_down", "host0/mlx5_1"),
+                 A(10e-3, "nic_up", "host0/mlx5_1")),
+        min_fallbacks=0, expect_recovery=False,
+        tags=("nic", "control"),
+    ),
+    Scenario(
+        name="double_rail_outage",
+        description="Default dies, then the backup dies during fallback: "
+                    "no healthy path remains, so the error MUST be "
+                    "propagated to the application (Trilemma boundary).",
+        actions=(A(2e-3, "nic_down", "host0/mlx5_0"),
+                 A(6e-3, "nic_down", "host0/mlx5_1")),
+        expect_masked=False, min_fallbacks=1,
+        tags=("nic", "unmaskable"),
+    ),
+]}
+
+
+def get(name: str) -> Scenario:
+    return SCENARIOS[name]
+
+
+def names(*tags: str) -> List[str]:
+    """Scenario names, optionally filtered to those carrying all tags."""
+    return [n for n, s in SCENARIOS.items()
+            if all(t in s.tags for t in tags)]

@@ -184,6 +184,22 @@ class DDPTrainer:
         return run
 
 
+def build_smoke_trainer(cluster, libs, steps: int = 6, ckpt_dir: str =
+                        "/tmp/repro-ckpt-smoke", seed: int = 0,
+                        lr: float = 3e-3) -> DDPTrainer:
+    """Campaign-engine / CI-smoke entry point: a DDP trainer over a tiny
+    model that finishes a handful of steps in seconds. The fault-scenario
+    campaign (repro.scenarios) drives this as its heaviest workload."""
+    from repro import configs as C
+
+    model_cfg = C.smoke_config("gpt2-124m", n_layers=2, d_model=128,
+                               n_heads=4, n_kv_heads=4, d_ff=512, vocab=512)
+    tcfg = TrainerConfig(steps=steps, ckpt_every=max(2, steps // 2),
+                         lr=lr, ckpt_dir=ckpt_dir, seed=seed)
+    return DDPTrainer(cluster, libs, model_cfg, tcfg,
+                      batch_per_rank=2, seq_len=32)
+
+
 class RestartNeeded(Exception):
     """Signals the driver to rebuild the communicator and resume.
 

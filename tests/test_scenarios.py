@@ -1,0 +1,179 @@
+"""Campaign-engine tests: the named scenario library runs deterministically
+against ShiftLib workloads and every run passes the exactly-once,
+zero-copy, notification-order, and bounded-fallback-latency invariants."""
+
+import pytest
+
+from repro.core.fabric import build_cluster, correlated_failure, flap_train
+from repro.scenarios import (SCENARIOS, Campaign, FaultAction, Scenario,
+                             run_scenario)
+
+ALL_SCENARIOS = sorted(SCENARIOS)
+
+
+# ---------------------------------------------------------------------------
+# library shape
+# ---------------------------------------------------------------------------
+
+def test_library_names_the_required_scenarios():
+    assert len(SCENARIOS) >= 10
+    required = {"link_flap_train", "correlated_rail_failure",
+                "failure_during_recovery", "simultaneous_bidirectional"}
+    assert required <= set(SCENARIOS)
+
+
+def test_scenario_spec_validates_kinds_and_times():
+    with pytest.raises(ValueError):
+        FaultAction(1e-3, "nuke_datacenter", "host0/mlx5_0")
+    with pytest.raises(ValueError):
+        FaultAction(-1.0, "nic_down", "host0/mlx5_0")
+    with pytest.raises(ValueError):  # must come back up before next flap
+        flap_train("host0/mlx5_0", start=0, count=2,
+                   down_time=5e-3, period=4e-3)
+
+
+# ---------------------------------------------------------------------------
+# fabric fault hooks
+# ---------------------------------------------------------------------------
+
+def test_rail_selector_resolves_to_every_host():
+    c = build_cluster(n_hosts=3, nics_per_host=2)
+    gids = c.resolve_targets("rail:1")
+    assert sorted(gids) == ["host0/mlx5_1", "host1/mlx5_1", "host2/mlx5_1"]
+
+
+def test_fault_log_and_listeners_record_applied_faults():
+    c = build_cluster(n_hosts=2, nics_per_host=2)
+    seen = []
+    c.add_fault_listener(lambda t, kind, gid: seen.append((kind, gid)))
+    for t, kind, target in correlated_failure(["rail:0"], at=1e-3):
+        c.schedule_fault(t, kind, target)
+    c.sim.run(until=2e-3)
+    assert seen == [("nic_down", "host0/mlx5_0"),
+                    ("nic_down", "host1/mlx5_0")]
+    assert [(k, g) for _, k, g in c.fault_log] == seen
+    assert not c.nic_by_gid["host0/mlx5_0"].up
+
+
+def test_unknown_fault_kind_rejected():
+    c = build_cluster()
+    with pytest.raises(ValueError):
+        c.apply_fault("chaos", "host0/mlx5_0")
+
+
+# ---------------------------------------------------------------------------
+# the scenario matrix (pingpong workload: per-message delivery trace)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL_SCENARIOS)
+def test_scenario_pingpong_invariants(name):
+    sc = SCENARIOS[name]
+    r = run_scenario(sc)
+    assert r.ok, r.violations
+    assert r.payload_bytes_held == 0           # zero-copy
+    assert r.payload_mismatches == 0
+    if sc.expect_masked:
+        # exactly-once, in order, complete
+        assert r.delivered == list(range(r.n_expected))
+        assert not r.aborted and r.app_errors == 0
+        assert r.fallbacks >= sc.min_fallbacks
+    else:
+        # boundary of fault tolerance: error propagated, never silent
+        assert r.aborted and r.errors_propagated >= 1
+        # the prefix that did arrive is still exactly-once and ordered
+        assert r.delivered == sorted(set(r.delivered))
+
+
+@pytest.mark.parametrize("name", ["sender_nic_down", "link_flap_train",
+                                  "simultaneous_bidirectional",
+                                  "failure_during_recovery"])
+def test_scenario_determinism_same_seed_identical_events(name):
+    r1 = run_scenario(SCENARIOS[name], seed=7)
+    r2 = run_scenario(SCENARIOS[name], seed=7)
+    assert r1.event_count == r2.event_count
+    assert r1.fingerprint() == r2.fingerprint()
+
+
+def test_different_seed_changes_payloads_not_correctness():
+    r1 = run_scenario(SCENARIOS["sender_nic_down"], seed=1)
+    r2 = run_scenario(SCENARIOS["sender_nic_down"], seed=2)
+    assert r1.ok and r2.ok
+    # same event structure is NOT required across seeds, but both deliver
+    assert r1.delivered == r2.delivered == list(range(r1.n_expected))
+
+
+# ---------------------------------------------------------------------------
+# allreduce workload (payload-level exactly-once: sums must be exact)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["sender_nic_down",
+                                  "correlated_rail_failure",
+                                  "failure_during_recovery"])
+def test_scenario_allreduce_invariants(name):
+    r = run_scenario(SCENARIOS[name], workload="allreduce", max_rounds=1500)
+    assert r.ok, r.violations
+    assert r.rounds > 0 and r.payload_mismatches == 0
+    assert r.order_violations == 0 and r.duplicate_notifies == 0
+    assert r.fallbacks >= SCENARIOS[name].min_fallbacks
+
+
+def test_scenario_allreduce_unmaskable_aborts_loudly():
+    r = run_scenario(SCENARIOS["double_rail_outage"], workload="allreduce",
+                     max_rounds=1500)
+    assert r.ok, r.violations
+    assert r.aborted and r.errors_propagated >= 1
+    assert r.payload_mismatches == 0   # completed rounds stayed correct
+
+
+def test_scenario_allreduce_deterministic():
+    r1 = run_scenario(SCENARIOS["sender_nic_down"], workload="allreduce",
+                      max_rounds=400, seed=5)
+    r2 = run_scenario(SCENARIOS["sender_nic_down"], workload="allreduce",
+                      max_rounds=400, seed=5)
+    assert r1.fingerprint() == r2.fingerprint()
+
+
+# ---------------------------------------------------------------------------
+# ddp workload (the paper's §5.2 experiment under scripted faults)
+# ---------------------------------------------------------------------------
+
+def test_scenario_ddp_masks_failure_and_finishes(tmp_path):
+    r = run_scenario(SCENARIOS["sender_nic_down"], workload="ddp", steps=5)
+    assert r.ok, r.violations
+    assert r.completed and r.rounds == 5
+    assert r.fallbacks >= 1
+
+
+# ---------------------------------------------------------------------------
+# campaign runner
+# ---------------------------------------------------------------------------
+
+def test_campaign_matrix_runs_and_reports():
+    scs = [SCENARIOS["baseline_clean"], SCENARIOS["sender_nic_down"]]
+    campaign = Campaign(scs, workloads=("pingpong", "allreduce"),
+                        workload_kw={"allreduce": {"max_rounds": 300}})
+    results = campaign.run()
+    assert len(results) == 4
+    assert all(r.ok for r in results), [r.violations for r in results]
+    report = Campaign.report(results)
+    assert "sender_nic_down" in report and "ok" in report
+
+
+def test_campaign_rejects_unknown_workload():
+    with pytest.raises(ValueError):
+        Campaign([SCENARIOS["baseline_clean"]], workloads=("tpu_pod",))
+
+
+def test_custom_scenario_composes_from_generators():
+    from repro.scenarios import correlated, flap_train as sflap
+    sc = Scenario(
+        name="custom_compound",
+        description="flap train then a correlated rail hit",
+        actions=sflap("host1/mlx5_0", start=2e-3, count=2,
+                      down_time=2e-3, period=6e-3)
+        + correlated(["rail:0"], at=20e-3)
+        + correlated(["rail:0"], at=45e-3, kind="nic_up"),
+        min_fallbacks=2, expect_recovery=True)
+    r = run_scenario(sc)
+    assert r.ok, r.violations
+    assert r.delivered == list(range(r.n_expected))
