@@ -12,9 +12,11 @@ from repro.scenarios.engine import PairEndpoint, make_pair as _make_pair
 BenchEndpoint = PairEndpoint
 
 
-def make_pair(lib_kind: str, probe_interval=20e-3, **cluster_kw):
+def make_pair(lib_kind: str, probe_interval=20e-3, fast=True,
+              buf_size=1 << 24, **cluster_kw):
     return _make_pair(lib_kind, probe_interval=probe_interval,
-                      endpoint_kw={"buf_size": 1 << 22}, **cluster_kw)
+                      endpoint_kw={"buf_size": buf_size}, fast=fast,
+                      **cluster_kw)
 
 
 class TrafficPump:
@@ -22,11 +24,19 @@ class TrafficPump:
 
     op: "write" (ib_write_bw), "send" (ib_send_bw), "read" (ib_read_bw).
     Samples completed bytes per `sample_dt` of simulated time.
+
+    ``cq_mod`` mirrors perftest's CQ moderation (``--cq-mod``): only every
+    cq_mod-th WRITE is signaled; the WC of the signaled WR retires the
+    whole group (RC completes in order). Only meaningful for "write".
+
+    ``chain=False`` replicates the pre-fast-path harness: one
+    ``post_send`` (and one doorbell) per WR instead of a posted chain —
+    the "before" configuration of the tracked perf suite.
     """
 
     def __init__(self, c, src: BenchEndpoint, dst: BenchEndpoint,
                  op: str = "write", msg_size: int = 1 << 18, depth: int = 16,
-                 sample_dt: float = 1.0):
+                 sample_dt: float = 1.0, cq_mod: int = 1, chain: bool = True):
         self.c = c
         self.src = src
         self.dst = dst
@@ -34,26 +44,65 @@ class TrafficPump:
         self.msg = msg_size
         self.depth = depth
         self.sample_dt = sample_dt
+        self.cq_mod = max(1, cq_mod) if op == "write" else 1
+        self.chain = chain
         self.seq = 0
         self.outstanding = 0
         self.completed_bytes = 0
         self.samples = []
         self.dead = False
         self._t0 = c.sim.now
+        # Source/destination slots rotate over the whole registered
+        # buffer, sized so a slot is never rewritten while a message
+        # referencing it is still in flight (completion-gated reuse: the
+        # zero-copy ownership rule). With slots >= depth, a coalesced
+        # segment's writes are also contiguous in memory, so the fast
+        # datapath collapses them into single vectorized copies.
+        buf_slots = min(src.buf.nbytes, dst.buf.nbytes) // max(msg_size, 1)
+        self.slots = max(1, min(depth, buf_slots)) if buf_slots else 1
+        # Pre-built WR templates, reused across posts exactly like
+        # perftest reuses its ibv_send_wr structures (the driver copies
+        # WR -> WQE at post time, so reuse after post is safe).
+        if op == "write":
+            self._wr_ring = []
+            # slots*cq_mod is divisible by both, so the offset and the
+            # signaling pattern each repeat cleanly over the ring
+            n_templates = self.slots * self.cq_mod
+            for i in range(n_templates):
+                off = (i % self.slots) * self.msg
+                signaled = (i % self.cq_mod) == self.cq_mod - 1
+                self._wr_ring.append(V.SendWR(
+                    wr_id=i, opcode=V.Opcode.WRITE,
+                    sge=V.SGE(src.mr.addr + off, self.msg, src.mr.lkey),
+                    remote_addr=dst.mr.addr + off, rkey=dst.mr.rkey,
+                    send_flags=V.SEND_FLAG_SIGNALED if signaled else 0))
+
+    def _post_write_burst(self, n: int):
+        """Chain-post n WRITEs with a single doorbell (wr.next chaining).
+        With ``chain=False``, posts one WR per call like the pre-fast-path
+        harness did."""
+        ring = self._wr_ring
+        m = len(ring)
+        i = self.seq
+        wrs = [ring[(i + k) % m] for k in range(n)]
+        try:
+            if self.chain:
+                self.src.lib.post_send_chain(self.src.qp, wrs)
+            else:
+                for wr in wrs:
+                    self.src.lib.post_send(self.src.qp, wr)
+        except V.VerbsError:
+            self.dead = True
+            return
+        self.seq = i + n
+        self.outstanding += n
 
     def _post_one(self):
         i = self.seq
         self.seq += 1
-        off = (i % 8) * self.msg
+        off = (i % self.slots) * self.msg
         try:
-            if self.op == "write":
-                self.src.lib.post_send(self.src.qp, V.SendWR(
-                    wr_id=i, opcode=V.Opcode.WRITE,
-                    sge=V.SGE(self.src.mr.addr + off, self.msg,
-                              self.src.mr.lkey),
-                    remote_addr=self.dst.mr.addr + off,
-                    rkey=self.dst.mr.rkey))
-            elif self.op == "read":
+            if self.op == "read":
                 self.src.lib.post_send(self.src.qp, V.SendWR(
                     wr_id=i, opcode=V.Opcode.READ,
                     sge=V.SGE(self.src.mr.addr + off, self.msg,
@@ -73,7 +122,7 @@ class TrafficPump:
             self.dead = True
 
     def _tick(self):
-        # drain completions
+        # drain completions (one WC retires cq_mod messages)
         for wc in self.src.poll():
             if wc.is_error:
                 self.dead = True
@@ -81,11 +130,18 @@ class TrafficPump:
                 continue
             if wc.opcode in (V.WCOpcode.RDMA_WRITE, V.WCOpcode.SEND,
                              V.WCOpcode.RDMA_READ):
-                self.outstanding -= 1
-                self.completed_bytes += self.msg
-        self.dst.poll()
-        while not self.dead and self.outstanding < self.depth:
-            self._post_one()
+                group = self.cq_mod if wc.opcode is V.WCOpcode.RDMA_WRITE \
+                    else 1
+                self.outstanding -= group
+                self.completed_bytes += self.msg * group
+        if self.op == "write":
+            # one-sided writes raise no WCs at the responder: skip its CQ
+            if not self.dead and self.outstanding < self.depth:
+                self._post_write_burst(self.depth - self.outstanding)
+        else:
+            self.dst.poll()
+            while not self.dead and self.outstanding < self.depth:
+                self._post_one()
         if self.dead and self.outstanding == 0:
             return
         self.c.sim.schedule(50e-6, self._tick)

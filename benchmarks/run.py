@@ -6,7 +6,12 @@ configuration standalone).
 
 ``--smoke`` runs a reduced deterministic subset — the fault-scenario
 campaign (pingpong workload over the full library), fig6 and fig7 — and
-exits non-zero on any invariant violation: the fast CI pass."""
+exits non-zero on any invariant violation: the fast CI pass.
+
+``--bench-json PATH`` additionally runs the tracked perf suite
+(``benchmarks/perf_suite.py``), writes its JSON to PATH, and exits
+non-zero on a >20% regression vs the committed baseline at PATH (which
+is read before being overwritten)."""
 
 from __future__ import annotations
 
@@ -88,7 +93,7 @@ def campaign_rows(smoke: bool = False):
     return out
 
 
-def main(smoke: bool = False) -> int:
+def main(smoke: bool = False, bench_json: str = None) -> int:
     if smoke:
         # fig6's scenarios are a subset of the campaign's, so the campaign
         # section already covers them — no separate fig6 pass in smoke
@@ -116,6 +121,10 @@ def main(smoke: bool = False) -> int:
     if violated:
         print("# campaign invariant VIOLATIONS detected", flush=True)
         return 1
+    if bench_json:
+        from benchmarks import perf_suite
+        print("# --- perf suite (tracked baseline) ---", flush=True)
+        return perf_suite.emit(bench_json, quick=smoke)
     return 0
 
 
@@ -124,4 +133,9 @@ if __name__ == "__main__":
     parser.add_argument("--smoke", action="store_true",
                         help="fast deterministic CI subset "
                              "(campaign + fig6 + fig7)")
-    sys.exit(main(smoke=parser.parse_args().smoke))
+    parser.add_argument("--bench-json", default=None, metavar="PATH",
+                        help="run the tracked perf suite, write JSON to "
+                             "PATH, fail on >20%% regression vs the "
+                             "committed baseline")
+    args = parser.parse_args()
+    sys.exit(main(smoke=args.smoke, bench_json=args.bench_json))

@@ -64,15 +64,21 @@ class RankEndpoint:
         self.pd = lib.alloc_pd(self.ctx)
         n = world.n_ranks
         slot = world.max_chunk_bytes
-        # staging: per peer, double-buffered inbound slots
-        self.staging = np.zeros(n * 2 * slot, dtype=np.uint8)
+        self.K = world.src_slots
+        # Inbound staging: per peer, K slots addressed by message sequence
+        # (slot = seq % K). The staging depth EQUALS the sender's outbound
+        # FIFO depth, so the at-most-K in-flight messages to a peer always
+        # occupy distinct slots — credit-based flow control that stays
+        # correct even when a coalesced segment delivers a whole burst at
+        # one virtual instant (the old 2-slot parity scheme relied on
+        # inter-message event spacing and broke under doorbell coalescing).
+        self.staging = np.zeros(n * self.K * slot, dtype=np.uint8)
         self.staging_mr = lib.reg_mr(self.pd, self.staging)
         # Outbound FIFO: per peer, K slots. A slot may only be reused once
         # the send that references it has COMPLETED (ACKed or synthesized):
         # payloads are DMA-read at (re)transmit time, so reusing the slot
         # of an unACKed send would corrupt a post-failover retransmission.
         # This mirrors NCCL's completion-gated FIFO reuse.
-        self.K = world.src_slots
         self.src = np.zeros(n * self.K * slot, dtype=np.uint8)
         self.src_mr = lib.reg_mr(self.pd, self.src)
         self.send_completed: Dict[int, int] = {}
@@ -117,39 +123,47 @@ class RankEndpoint:
             self._listened.app_listener = fn
 
     # -- staging layout ---------------------------------------------------
-    def staging_slot_addr(self, peer: int, parity: int) -> int:
+    def staging_slot_addr(self, peer: int, seq: int) -> int:
         slot = self.world.max_chunk_bytes
-        off = (peer * 2 + parity) * slot
+        off = (peer * self.K + seq % self.K) * slot
         return self.staging_mr.addr + off
 
-    def staging_slot_view(self, peer: int, parity: int, nbytes: int) -> np.ndarray:
+    def staging_slot_view(self, peer: int, seq: int, nbytes: int) -> np.ndarray:
         slot = self.world.max_chunk_bytes
-        off = (peer * 2 + parity) * slot
+        off = (peer * self.K + seq % self.K) * slot
         return self.staging[off:off + nbytes]
 
     # -- data-plane helpers -------------------------------------------------
     def post_recv_notify(self, peer: int) -> None:
         self.lib.post_recv(self.qps[peer], V.RecvWR(wr_id=peer))
 
-    def send_chunk(self, peer: int, payload: np.ndarray, parity: int) -> None:
+    def send_chunk(self, peer: int, payload: np.ndarray) -> None:
         """NCCL-Simple message: bulk WRITE (unsignaled) into the peer's
-        staging slot + WRITE_IMM notification (signaled). If all outbound
-        FIFO slots for this peer are in flight, the payload is held until
-        a completion frees one (completion-gated reuse)."""
-        if self.send_seq[peer] - self.send_completed[peer] >= self.K:
-            self.pending_sends[peer].append(
-                (payload.view(np.uint8).ravel().copy(), parity))
-            return
-        self._post_chunk(peer, payload.view(np.uint8).ravel(), parity)
+        staging slot ``send_seq % K`` + WRITE_IMM notification (signaled).
+        If all outbound FIFO slots for this peer are in flight, the
+        payload is held until a completion frees one (completion-gated
+        reuse).
 
-    def _post_chunk(self, peer: int, raw: np.ndarray, parity: int) -> None:
+        Ownership rule (zero-copy): a chunk handed to ``send_chunk`` must
+        stay byte-stable until it is copied into the outbound FIFO slot at
+        post time. The ring collectives guarantee this causally — any
+        later write to the same flat range is triggered by a notify that
+        is downstream of THIS chunk's delivery around the ring, so a
+        still-pending (unposted) send can never be overwritten. A held
+        view therefore suffices; no defensive copy."""
+        if self.send_seq[peer] - self.send_completed[peer] >= self.K:
+            self.pending_sends[peer].append(payload.view(np.uint8).ravel())
+            return
+        self._post_chunk(peer, payload.view(np.uint8).ravel())
+
+    def _post_chunk(self, peer: int, raw: np.ndarray) -> None:
         nbytes = raw.nbytes
         seq = self.send_seq[peer]
         self.send_seq[peer] = seq + 1
         src_off = (peer * self.K + seq % self.K) * self.world.max_chunk_bytes
         self.src[src_off:src_off + nbytes] = raw
         remote = self.world.endpoints[peer]
-        remote_addr = remote.staging_slot_addr(self.rank, parity)
+        remote_addr = remote.staging_slot_addr(self.rank, seq)
         qp = self.qps[peer]
         if nbytes:
             self.lib.post_send(qp, V.SendWR(
@@ -167,8 +181,7 @@ class RankEndpoint:
         self.send_completed[peer] += 1
         if self.pending_sends[peer] and (
                 self.send_seq[peer] - self.send_completed[peer] < self.K):
-            raw, parity = self.pending_sends[peer].pop(0)
-            self._post_chunk(peer, raw, parity)
+            self._post_chunk(peer, self.pending_sends[peer].pop(0))
 
 
 class JcclWorld:
@@ -322,7 +335,14 @@ class JcclWorld:
 
     def broadcast(self, array: np.ndarray, root: int = 0,
                   timeout: float = 120.0) -> List[np.ndarray]:
-        outs = [array.copy() if r == root else np.zeros_like(array)
+        # Ownership rule: the root's entry is a READ-ONLY view of the
+        # caller's array — the pipeline only ever reads the root slot
+        # (non-roots get fresh writable buffers), so aliasing the input
+        # is safe and saves a full-size copy. Callers that need an
+        # independent root buffer copy it themselves.
+        root_view = array.view()
+        root_view.flags.writeable = False
+        outs = [root_view if r == root else np.zeros_like(array)
                 for r in range(self.n_ranks)]
         coll = _PipelineBroadcast(self, outs, root)
         self._run(coll, timeout)
@@ -363,15 +383,19 @@ class JcclWorld:
 def build_world(n_ranks: int = 2, lib_kind: str = "shift",
                 nics_per_host: int = 2, probe_interval: float = 5e-3,
                 max_chunk_bytes: int = 1 << 16, strict_order: bool = True,
+                fast: bool = True,
                 **world_kw) -> Tuple[Cluster, List, JcclWorld]:
     """Scenario-harness entry point: a fresh cluster + per-rank libs + a
     fully wired JcclWorld. Consolidates the setup previously copy-pasted
-    across tests and benchmarks; the campaign engine drives it directly."""
+    across tests and benchmarks; the campaign engine drives it directly.
+    ``fast`` selects the coalescing zero-copy datapath (default); pass
+    False to run on the legacy per-WQE event chain."""
     from repro.core.fabric import build_cluster
     from repro.core.shift import ShiftConfig
 
     V.reset_registries()
     cluster = build_cluster(n_hosts=n_ranks, nics_per_host=nics_per_host)
+    cluster.fast_datapath = fast
     libs: List = []
     if lib_kind == "shift":
         kv = None
@@ -478,7 +502,7 @@ class _RingAllReduce(_Collective):
         c0, c1 = self._chunk_bounds(bucket, chunk)
         payload = self.flat[rank][c0:c1]
         right = (rank + 1) % n
-        self.world.endpoints[rank].send_chunk(right, payload, parity=step % 2)
+        self.world.endpoints[rank].send_chunk(right, payload)
 
     def start(self) -> None:
         n = self.world.n_ranks
@@ -505,7 +529,7 @@ class _RingAllReduce(_Collective):
         c0, c1 = self._chunk_bounds(bucket, chunk)
         nbytes = (c1 - c0) * self.itemsize
         ep = self.world.endpoints[rank]
-        stage = ep.staging_slot_view(left, step % 2, nbytes).view(self.dtype)
+        stage = ep.staging_slot_view(left, seq, nbytes).view(self.dtype)
         if phase == "rs":
             _reduce(self.flat[rank][c0:c1], stage, self.op)
         else:
@@ -543,7 +567,7 @@ class _RingAllGather(_Collective):
         shard = (rank - step) % n
         o0, o1 = self.offsets[shard], self.offsets[shard + 1]
         self.world.endpoints[rank].send_chunk(
-            (rank + 1) % n, self.full[rank][o0:o1], parity=step % 2)
+            (rank + 1) % n, self.full[rank][o0:o1])
 
     def start(self) -> None:
         n = self.world.n_ranks
@@ -562,7 +586,7 @@ class _RingAllGather(_Collective):
         shard = (rank - 1 - step) % n
         o0, o1 = self.offsets[shard], self.offsets[shard + 1]
         ep = self.world.endpoints[rank]
-        stage = ep.staging_slot_view(peer, step % 2,
+        stage = ep.staging_slot_view(peer, seq,
                                      (o1 - o0) * self.itemsize).view(self.dtype)
         self.full[rank][o0:o1] = stage
         self._send(rank, step + 1)
@@ -600,8 +624,7 @@ class _PipelineBroadcast(_Collective):
         if step >= len(self.chunks):
             return
         c0, c1 = self.chunks[step]
-        self.world.endpoints[rank].send_chunk(
-            nxt, self.outs[rank][c0:c1], parity=step % 2)
+        self.world.endpoints[rank].send_chunk(nxt, self.outs[rank][c0:c1])
         self.sent[rank] = step + 1
 
     def start(self) -> None:
@@ -617,7 +640,7 @@ class _PipelineBroadcast(_Collective):
         self.recv_step[rank] = step + 1
         c0, c1 = self.chunks[step]
         ep = self.world.endpoints[rank]
-        stage = ep.staging_slot_view(peer, step % 2,
+        stage = ep.staging_slot_view(peer, seq,
                                      (c1 - c0) * self.itemsize).view(self.dtype)
         self.outs[rank][c0:c1] = stage
         self._forward(rank, step)
@@ -653,12 +676,11 @@ class _AllToAll(_Collective):
             for peer in range(n):
                 if peer == r:
                     continue
-                self.world.endpoints[r].send_chunk(
-                    peer, self.mats[r][peer], parity=0)
+                self.world.endpoints[r].send_chunk(peer, self.mats[r][peer])
 
     def on_notify(self, rank: int, peer: int, seq: int) -> None:
         ep = self.world.endpoints[rank]
-        stage = ep.staging_slot_view(peer, 0, self.rowbytes).view(self.dtype)
+        stage = ep.staging_slot_view(peer, seq, self.rowbytes).view(self.dtype)
         self.outs[rank][peer] = stage.reshape(self.outs[rank][peer].shape)
         self.received[rank] += 1
 

@@ -18,7 +18,6 @@ Design notes (see DESIGN.md §2):
 from __future__ import annotations
 
 import heapq
-import itertools
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -28,72 +27,149 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 
 class Event:
-    """A cancellable scheduled callback."""
+    """A cancellable scheduled callback (the handle ``schedule`` returns).
 
-    __slots__ = ("time", "seq", "fn", "args", "cancelled")
+    Heap records themselves are plain tuples ``(time, seq, handle, fn,
+    args)`` so heap ordering compares floats/ints in C; an ``Event`` is
+    only allocated when the caller needs the ability to cancel.  Handles
+    are deliberately NOT pooled: they escape to callers (``wqe.timeout_ev``
+    and friends) and a recycled handle would make a stale ``cancel()``
+    kill an unrelated event.
+    """
 
-    def __init__(self, time: float, seq: int, fn: Callable, args: tuple):
+    __slots__ = ("time", "seq", "fn", "args", "cancelled", "fired", "_sim")
+
+    def __init__(self, time: float, seq: int, fn: Callable, args: tuple,
+                 sim: Optional["Simulator"] = None):
         self.time = time
         self.seq = seq
         self.fn = fn
         self.args = args
         self.cancelled = False
+        self.fired = False
+        self._sim = sim
 
     def cancel(self) -> None:
-        self.cancelled = True
+        # cancelling an already-executed event is a no-op — it left the
+        # heap when it fired, so it must not count toward _dead (phantom
+        # counts would trigger compactions that remove nothing)
+        if not self.cancelled and not self.fired:
+            self.cancelled = True
+            if self._sim is not None:
+                self._sim._dead += 1
 
-    def __lt__(self, other: "Event") -> bool:  # heap ordering
+    def __lt__(self, other: "Event") -> bool:  # legacy ordering helper
         return (self.time, self.seq) < (other.time, other.seq)
 
 
 class Simulator:
-    """Deterministic discrete-event loop with a virtual clock (seconds)."""
+    """Deterministic discrete-event loop with a virtual clock (seconds).
+
+    Two scheduling entry points:
+
+    * :meth:`schedule` returns a cancellable :class:`Event` handle.
+    * :meth:`call` is the allocation-light fast path for events that are
+      never cancelled (the bulk of the datapath: serialize-done, deliver,
+      ACK-arrive). No handle object is created.
+
+    Cancelled events are removed lazily: ``Event.cancel`` only marks the
+    handle and bumps ``_dead``; when dead events exceed half the heap the
+    heap is compacted in one pass (the cancel-leak fix — a long run that
+    cancels most of its timeouts no longer grows the heap without bound).
+    """
+
+    #: compaction only kicks in above this heap size (small heaps drain
+    #: dead entries through normal pops faster than a rebuild would)
+    COMPACT_MIN = 64
 
     def __init__(self) -> None:
         self.now: float = 0.0
-        self._heap: List[Event] = []
-        self._seq = itertools.count()
+        # heap records: (time, seq, Event-or-None, fn, args)
+        self._heap: List[tuple] = []
+        self._seq = 0
         self._executed: int = 0
+        self._dead: int = 0          # cancelled events still in the heap
+        self._compactions: int = 0
 
     def schedule(self, delay: float, fn: Callable, *args) -> Event:
+        """Schedule ``fn(*args)`` after ``delay``; returns a cancellable
+        handle."""
         if delay < 0:
             raise ValueError(f"negative delay {delay}")
-        ev = Event(self.now + delay, next(self._seq), fn, args)
-        heapq.heappush(self._heap, ev)
+        t = self.now + delay
+        seq = self._seq
+        self._seq = seq + 1
+        ev = Event(t, seq, fn, args, self)
+        heapq.heappush(self._heap, (t, seq, ev, fn, args))
+        if self._dead > self.COMPACT_MIN and self._dead * 2 > len(self._heap):
+            self._compact()
         return ev
+
+    def call(self, delay: float, fn: Callable, *args) -> None:
+        """Hot-path schedule with no cancellation handle (no allocation
+        beyond the heap record itself)."""
+        if delay < 0:
+            raise ValueError(f"negative delay {delay}")
+        t = self.now + delay
+        seq = self._seq
+        self._seq = seq + 1
+        heapq.heappush(self._heap, (t, seq, None, fn, args))
 
     def at(self, time: float, fn: Callable, *args) -> Event:
         return self.schedule(max(0.0, time - self.now), fn, *args)
 
+    def _compact(self) -> None:
+        """Drop cancelled records and re-heapify (lazy deletion).
+
+        In place: ``run`` holds a reference to the heap list across
+        events, so the list object must never be rebound."""
+        self._heap[:] = [rec for rec in self._heap
+                         if rec[2] is None or not rec[2].cancelled]
+        heapq.heapify(self._heap)
+        self._dead = 0
+        self._compactions += 1
+
     def peek_time(self) -> Optional[float]:
-        while self._heap and self._heap[0].cancelled:
-            heapq.heappop(self._heap)
-        return self._heap[0].time if self._heap else None
+        heap = self._heap
+        while heap and heap[0][2] is not None and heap[0][2].cancelled:
+            heapq.heappop(heap)
+            self._dead -= 1
+        return heap[0][0] if heap else None
 
     def step(self) -> bool:
         """Execute the next pending event. Returns False if none left."""
-        while self._heap:
-            ev = heapq.heappop(self._heap)
-            if ev.cancelled:
-                continue
-            self.now = ev.time
+        heap = self._heap
+        while heap:
+            t, _seq, ev, fn, args = heapq.heappop(heap)
+            if ev is not None:
+                if ev.cancelled:
+                    self._dead -= 1
+                    continue
+                ev.fired = True
+            self.now = t
             self._executed += 1
-            ev.fn(*ev.args)
+            fn(*args)
             return True
         return False
 
     def run(self, until: Optional[float] = None, max_events: int = 50_000_000) -> None:
         """Run events until the heap drains or virtual time passes ``until``."""
+        heap = self._heap
+        pop = heapq.heappop
         n = 0
-        while self._heap:
-            t = self.peek_time()
-            if t is None:
-                break
-            if until is not None and t > until:
+        while heap:
+            if until is not None and heap[0][0] > until:
                 self.now = until
                 return
-            if not self.step():
-                break
+            t, _seq, ev, fn, args = pop(heap)
+            if ev is not None:
+                if ev.cancelled:
+                    self._dead -= 1
+                    continue
+                ev.fired = True
+            self.now = t
+            self._executed += 1
+            fn(*args)
             n += 1
             if n > max_events:
                 raise RuntimeError("simulator exceeded max_events — livelock?")
@@ -246,6 +322,15 @@ class Cluster:
         self.rnr_timer: float = 100e-6
         self.rnr_retry: int = 7
         self.nic_error_detect_latency: float = 20e-6
+        # --- datapath fast path (DESIGN.md §5) ---
+        # fast_datapath=True: the verbs engine coalesces every burst of
+        # doorbell'd WQEs into ONE scheduled segment (one serialize-done,
+        # one delivery, one coalesced ACK, one batch timeout) and hands
+        # payloads around as read-only numpy views (single copy at the
+        # RNIC-to-memory boundary). False restores the legacy per-WQE
+        # event chain with bytes() payload snapshots.
+        self.fast_datapath: bool = True
+        self.max_burst: int = 64     # WQEs per coalesced segment
         # applied-fault audit trail: (virtual time, kind, nic gid)
         self.fault_log: List[Tuple[float, str, str]] = []
         self.fault_listeners: List[Callable[[float, str, str], None]] = []

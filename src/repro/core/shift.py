@@ -50,7 +50,7 @@ import itertools
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Deque, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -175,6 +175,9 @@ class StandardLib:
 
     def post_send(self, qp, wr: V.SendWR) -> None:
         V.ibv_post_send(qp, wr)
+
+    def post_send_chain(self, qp, wrs: Sequence[V.SendWR]) -> None:
+        V.ibv_post_send_chain(qp, wrs)
 
     def post_recv(self, qp, wr: V.RecvWR) -> None:
         V.ibv_post_recv(qp, wr)
@@ -332,24 +335,28 @@ class ShiftCQ:
         self.process_physical()
 
     def process_physical(self) -> None:
+        route = self.lib._route_wc
         for cq in (self.default, self.backup):
             if cq is None:
                 continue
-            while True:
-                wcs = cq.poll(64)
-                if not wcs:
-                    V.ibv_req_notify_cq(cq)
-                    break
-                for wc in wcs:
-                    self.lib._route_wc(wc, self)
+            while cq.entries:       # routing may push follow-on WCs
+                for wc in cq.poll(64):
+                    route(wc, self)
+            V.ibv_req_notify_cq(cq)
         if self.app_listener is not None and self.app_buffer:
             buf, self.app_buffer = self.app_buffer, []
             self.app_listener(buf)
 
     def poll(self, n: int) -> List[V.WC]:
         self.process_physical()
-        out = self.app_buffer[:n]
-        del self.app_buffer[:n]
+        buf = self.app_buffer
+        if not buf:
+            return []
+        if n >= len(buf):
+            self.app_buffer = []
+            return buf
+        out = buf[:n]
+        del buf[:n]
         return out
 
 
@@ -413,6 +420,10 @@ class ShiftQP:
         self._seq = itertools.count()
         self.send_recs: Deque[_SendRec] = deque()
         self.recv_fifo: Deque[_RecvRec] = deque()
+        # O(1) hot-path bookkeeping: counters instead of deque scans for
+        # the retransmission-safe check and the recovery-drain check.
+        self._n_outstanding = 0     # posted, not yet completed sends
+        self._n_atomics = 0         # outstanding FETCH_ADD/CMP_SWAP
         self.n_recv_completed = 0
         self.n_sent_twosided_completed = 0
         self._attr_rtr: Optional[V.QPAttr] = None
@@ -499,11 +510,21 @@ class ShiftQP:
     # ------------------------------------------------------------------
     # data-path posting
     # ------------------------------------------------------------------
+    def _rec_done(self, rec: _SendRec) -> None:
+        """Mark a send record completed, maintaining the O(1) counters."""
+        rec.completed = True
+        self._n_outstanding -= 1
+        if rec.opcode in V.ATOMIC_OPCODES:
+            self._n_atomics -= 1
+
     def post_send(self, wr: V.SendWR) -> None:
         if self.send_state is SendState.FAILED:
             raise V.VerbsError("SHIFT QP failed (unmaskable error)")
         rec = _SendRec(next(self._seq), wr)
         self.send_recs.append(rec)
+        self._n_outstanding += 1
+        if rec.opcode in V.ATOMIC_OPCODES:
+            self._n_atomics += 1
         if self._awaiting_ack or self._in_handshake:
             rec.pending_wr = wr  # metadata only; payload stays in the MR
             return
@@ -541,6 +562,51 @@ class ShiftQP:
         else:  # pragma: no cover
             raise V.VerbsError(f"bad state {self.send_state}")
 
+    def post_send_chain(self, wrs: Sequence[V.SendWR]) -> None:
+        """Post a WR chain with one doorbell (steady-state fast path).
+        In FALLBACK the chain is key-patched and posted to the backup QP,
+        still with one doorbell; other states (handshake, recovery fence)
+        degrade to per-WR posting, which handles every edge."""
+        if self._awaiting_ack or self._in_handshake:
+            for wr in wrs:
+                self.post_send(wr)
+            return
+        if self.send_state is SendState.FALLBACK and \
+                self.backup is not None and \
+                self.backup.state is V.QPState.RTS:
+            patched = [self._patch_wr(wr) for wr in wrs]
+            wqes = self.backup.post_send_chain(patched, ring=False)
+            for wr, wqe in zip(wrs, wqes):
+                rec = _SendRec(next(self._seq), wr)
+                self.send_recs.append(rec)
+                self._n_outstanding += 1
+                if rec.opcode in V.ATOMIC_OPCODES:
+                    self._n_atomics += 1
+                self._map_send(rec, wqe)
+            self.backup.ring_sq_doorbell()
+            return
+        if (self.send_state is not SendState.DEFAULT
+                or self.default.state is not V.QPState.RTS):
+            for wr in wrs:
+                self.post_send(wr)
+            return
+        wqes = self.default.post_send_chain(wrs, ring=False)
+        append = self.send_recs.append
+        seq = self._seq
+        wqe_map = self.lib.wqe_map
+        n_atomics = 0
+        for wr, wqe in zip(wrs, wqes):
+            rec = _SendRec(next(seq), wr)
+            append(rec)
+            if rec.opcode in V.ATOMIC_OPCODES:
+                n_atomics += 1
+            rec.cur_wqe = wqe   # fresh rec: nothing to unmap
+            if rec.signaled:
+                wqe_map[id(wqe)] = (rec, self)
+        self._n_outstanding += len(wqes)
+        self._n_atomics += n_atomics
+        self.default.ring_sq_doorbell()
+
     def post_recv(self, wr: V.RecvWR) -> None:
         rec = _RecvRec(next(self._seq))
         self.recv_fifo.append(rec)
@@ -555,7 +621,13 @@ class ShiftQP:
             self.lib.wqe_map.pop(id(rec.cur_wqe), None)
         rec.cur_wqe = wqe
         rec.pending_wr = None
-        self.lib.wqe_map[id(wqe)] = (rec, self)
+        # Unsignaled sends never produce a success WC, so they need no
+        # wqe->rec route: their recs retire via ring-order completion
+        # coalescing (on_send_wc) or counter synthesis, and their error
+        # WCs route through qpn_map. Skipping the dict insert keeps the
+        # post hot path O(1) with no per-message map growth.
+        if rec.signaled:
+            self.lib.wqe_map[id(wqe)] = (rec, self)
 
     def _map_recv(self, rec: _RecvRec, rwqe: V.RecvWQE) -> None:
         if rec.cur_rwqe is not None:
@@ -645,10 +717,9 @@ class ShiftQP:
         if not self.ready:
             self._propagate_errors("backup resources not ready")
             return
-        # retransmission-safe check: scan outstanding WQEs for atomics
-        outstanding = [r for r in self.send_recs if not r.completed]
-        if lib.config.protect_atomics and any(
-                r.opcode in V.ATOMIC_OPCODES for r in outstanding):
+        # retransmission-safe check: any outstanding atomics? (O(1) —
+        # the counter is maintained at post/completion time)
+        if lib.config.protect_atomics and self._n_atomics > 0:
             self._propagate_errors("atomic WR in flight (Trilemma §3.1)")
             return
         self._in_handshake = True
@@ -710,7 +781,7 @@ class ShiftQP:
                 break
             # everything up to (and including) the next delivered two-sided
             # WR has landed in receiver memory — complete it locally
-            rec.completed = True
+            self._rec_done(rec)
             rec.synthesized = True
             lib.stats.synthesized_wcs += 1
             if rec.two_sided:
@@ -821,7 +892,7 @@ class ShiftQP:
         self._recover_sent = False
         self._fence_rec = None
         # if the backup queue is already drained there is nothing to fence
-        if not any(not r.completed for r in self.send_recs):
+        if self._n_outstanding == 0:
             self.send_state = SendState.WAIT_DRAINED
             self._post_recover_ctrl()
 
@@ -934,7 +1005,31 @@ class ShiftQP:
             return
         if rec.completed:
             return
-        rec.completed = True
+        # Ring-order completion coalescing: RC completes WQEs in order, so
+        # a successful WC proves every EARLIER posted WQE on this stream
+        # completed too. Retire unsignaled predecessors here (they never
+        # get a WC of their own) — without this, unsignaled sends under
+        # CQ moderation would pile up in send_recs/wqe_map forever and a
+        # later fallback would needlessly resubmit proven-delivered work.
+        # Signaled predecessors are untouched: their WCs route first
+        # (CQ FIFO), so an uncompleted front here is always unsignaled.
+        q = self.send_recs
+        atomic_ops = V.ATOMIC_OPCODES
+        while q and q[0] is not rec:
+            front = q[0]
+            if not front.completed:
+                if front.pending_wr is not None or front.signaled:
+                    break   # unposted (can't have completed) / owns a WC
+                # unsignaled fronts are never in wqe_map (see _map_send),
+                # so completion here is pure counter work
+                front.completed = True
+                self._n_outstanding -= 1
+                if front.opcode in atomic_ops:
+                    self._n_atomics -= 1
+                if front.two_sided:
+                    self.n_sent_twosided_completed += 1
+            q.popleft()
+        self._rec_done(rec)
         while self.send_recs and self.send_recs[0].completed:
             self.send_recs.popleft()
         if rec.two_sided:
@@ -966,15 +1061,9 @@ class ShiftQP:
 
     def _emit_app_wc(self, rec: _SendRec, status: V.WCStatus,
                      wc: Optional[V.WC] = None) -> None:
-        op = {V.Opcode.WRITE: V.WCOpcode.RDMA_WRITE,
-              V.Opcode.WRITE_IMM: V.WCOpcode.RDMA_WRITE,
-              V.Opcode.SEND: V.WCOpcode.SEND,
-              V.Opcode.READ: V.WCOpcode.RDMA_READ,
-              V.Opcode.FETCH_ADD: V.WCOpcode.FETCH_ADD,
-              V.Opcode.CMP_SWAP: V.WCOpcode.CMP_SWAP}[rec.opcode]
         out = V.WC(wc.wr_id if wc else (rec.cur_wqe.wr_id if rec.cur_wqe
                                         else 0),
-                   status, op,
+                   status, V._WC_OP_OF[rec.opcode],
                    byte_len=wc.byte_len if wc else (
                        rec.cur_wqe.length if rec.cur_wqe else 0),
                    qp_num=self.qpn)
@@ -996,6 +1085,7 @@ class ShiftQP:
             "outstanding_recvs": sum(1 for r in self.recv_fifo
                                      if not r.completed),
             "withheld": len(self._withheld),
+            "n_outstanding_counter": self._n_outstanding,
             "awaiting_ack": self._awaiting_ack,
             "in_handshake": self._in_handshake,
             "probing": self._probing,
@@ -1019,7 +1109,7 @@ class ShiftQP:
         for rec in self.send_recs:
             if rec.completed:
                 continue
-            rec.completed = True
+            self._rec_done(rec)
             self._emit_app_wc(rec, V.WCStatus.RETRY_EXC_ERR if first
                               else V.WCStatus.WR_FLUSH_ERR)
             first = False
@@ -1105,6 +1195,9 @@ class ShiftLib:
     def post_send(self, sqp: ShiftQP, wr: V.SendWR) -> None:
         sqp.post_send(wr)
 
+    def post_send_chain(self, sqp: ShiftQP, wrs: Sequence[V.SendWR]) -> None:
+        sqp.post_send_chain(wrs)
+
     def post_recv(self, sqp: ShiftQP, wr: V.RecvWR) -> None:
         sqp.post_recv(wr)
 
@@ -1141,10 +1234,14 @@ class ShiftLib:
                 if wc.is_error:
                     sqp = self.qpn_map.get(wc.qp_num)
                     if sqp is not None:
-                        # error on a WQE we no longer track (e.g. flushed
-                        # twice) still signals path failure
+                        # error on a WQE we don't track (unsignaled sends
+                        # are never mapped; flushed-twice residue) still
+                        # signals path failure — on either NIC
                         if wc.qp_num == sqp.default.qpn:
                             sqp.on_default_error(wc)
+                        else:
+                            sqp._propagate_errors(
+                                f"backup path failure: {wc.status}")
                 return
             rec, sqp = entry
             if wc.is_error:

@@ -27,7 +27,7 @@ import enum
 import itertools
 import struct
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -84,6 +84,28 @@ SEND_FLAG_SIGNALED = 0x1
 SEND_FLAG_FENCE = 0x2
 
 PER_MESSAGE_OVERHEAD = 0.15e-6  # headers/doorbell processing, seconds
+
+_WC_OP_OF = {Opcode.WRITE: WCOpcode.RDMA_WRITE,
+             Opcode.WRITE_IMM: WCOpcode.RDMA_WRITE,
+             Opcode.SEND: WCOpcode.SEND,
+             Opcode.READ: WCOpcode.RDMA_READ,
+             Opcode.FETCH_ADD: WCOpcode.FETCH_ADD,
+             Opcode.CMP_SWAP: WCOpcode.CMP_SWAP}
+
+_PAYLOAD_OPCODES = (Opcode.WRITE, Opcode.WRITE_IMM, Opcode.SEND)
+
+
+class _SegmentTimeout:
+    """Shared ACK-timeout bookkeeping for one coalesced segment: a single
+    scheduled event covers every WQE in the burst; per-WQE completion
+    decrements ``remaining`` and the event is cancelled once the whole
+    segment is accounted for (lazy heap deletion reclaims it)."""
+
+    __slots__ = ("ev", "remaining")
+
+    def __init__(self):
+        self.ev = None
+        self.remaining = 0
 
 
 class VerbsError(RuntimeError):
@@ -145,29 +167,32 @@ class SendWQE:
     __slots__ = ("idx", "wr_id", "opcode", "local_addr", "length", "lkey",
                  "remote_addr", "rkey", "imm_data", "signaled", "fence",
                  "compare_add", "swap", "psn", "attempts", "acked",
-                 "completed", "status", "probe", "timeout_ev")
+                 "completed", "status", "probe", "timeout_ev", "batch")
 
     def __init__(self, idx: int, wr: SendWR):
         self.idx = idx
         self.wr_id = wr.wr_id
         self.opcode = wr.opcode
-        self.local_addr = wr.sge.addr if wr.sge else 0
-        self.length = wr.sge.length if wr.sge else 0
-        self.lkey = wr.sge.lkey if wr.sge else 0
+        sge = wr.sge
+        if sge is not None:
+            self.local_addr = sge.addr
+            self.length = sge.length
+            self.lkey = sge.lkey
+        else:
+            self.local_addr = self.length = self.lkey = 0
         self.remote_addr = wr.remote_addr
         self.rkey = wr.rkey
         self.imm_data = wr.imm_data
-        self.signaled = bool(wr.send_flags & SEND_FLAG_SIGNALED)
-        self.fence = bool(wr.send_flags & SEND_FLAG_FENCE)
+        flags = wr.send_flags
+        self.signaled = bool(flags & SEND_FLAG_SIGNALED)
+        self.fence = bool(flags & SEND_FLAG_FENCE)
         self.compare_add = wr.compare_add
         self.swap = wr.swap
-        self.psn: Optional[int] = None
         self.attempts = 0
-        self.acked = False
-        self.completed = False
-        self.status: Optional[WCStatus] = None
-        self.probe = False  # sequence-transparent management probe (SHIFT)
-        self.timeout_ev = None
+        # probe: sequence-transparent management probe (SHIFT)
+        self.acked = self.completed = self.probe = False
+        # batch: _SegmentTimeout of the coalesced segment in flight
+        self.psn = self.status = self.timeout_ev = self.batch = None
 
     def to_wr(self) -> SendWR:
         """Reconstruct a WR from this WQE (SHIFT's 'copying inherent WQEs')."""
@@ -218,6 +243,10 @@ class MR:
             raise VerbsError("MR buffers must be 1-D uint8 views")
         self.pd = pd
         self.buf = buf
+        # read-only alias of the same memory: slicing it yields read-only
+        # views without per-call flag flips (the zero-copy handoff path)
+        self._buf_ro = buf.view()
+        self._buf_ro.flags.writeable = False
         self.length = buf.nbytes
         # Registering the same buffer on a second (backup) NIC reuses the
         # same virtual address — only the keys differ (§4.2: SHIFT patches
@@ -233,6 +262,19 @@ class MR:
         if off < 0 or off + length > self.length:
             raise VerbsError("MR bounds")
         return self.buf[off:off + length]
+
+    def ro_view(self, addr: int, length: int) -> np.ndarray:
+        """Read-only view of registered memory — the zero-copy handoff the
+        fast datapath ships instead of a ``bytes()`` snapshot. The single
+        copy happens at the RNIC-to-memory boundary on the receiver
+        (``dst[:] = view``). Ownership rule: the application must not
+        mutate the source range until the WR completes (completion-gated
+        slot reuse), exactly as on real hardware where the NIC DMA-reads
+        at (re)transmit time."""
+        off = addr - self.addr
+        if off < 0 or off + length > self.length:
+            raise VerbsError("MR bounds")
+        return self._buf_ro[off:off + length]
 
 
 class PD:
@@ -257,7 +299,7 @@ class CompChannel:
         self.pending.append(cq)
         if self.callback is not None:
             # wake the "background thread" at current virtual time (+eps)
-            self.ctx.sim.schedule(1e-7, self.callback, cq)
+            self.ctx.sim.call(1e-7, self.callback, cq)
 
 
 class CQ:
@@ -279,8 +321,14 @@ class CQ:
             self.channel._fire(self)
 
     def poll(self, n: int) -> List[WC]:
-        out = self.entries[:n]
-        del self.entries[:n]
+        entries = self.entries
+        if not entries:
+            return []
+        if n >= len(entries):
+            self.entries = []
+            return entries
+        out = entries[:n]
+        del entries[:n]
         return out
 
 
@@ -325,15 +373,21 @@ class QP:
         self.state = QPState.RESET
         self.dest_gid: Optional[str] = None
         self.dest_qpn: Optional[int] = None
-        # --- send queue ring ---
+        # --- send queue ring (bounded: slot = idx % max_send_wr) ---
+        # All cursors are ABSOLUTE WQE indices; ring arithmetic is O(1)
+        # and the ring never grows past the queue cap (the full check
+        # guarantees a recycled slot's previous occupant completed).
         self.sq: List[SendWQE] = []
+        self.sq_tail = 0           # next WQE index to post
         self.sq_doorbell = 0       # WQEs [0, doorbell) visible to the NIC
         self.sq_cursor = 0         # next WQE the NIC engine will serialize
         self.sq_completed = 0      # in-order completion watermark
         # --- recv queue ring ---
         self.rq: List[RecvWQE] = []
+        self.rq_tail = 0
         self.rq_doorbell = 0
         self.rq_consumed = 0
+        self._kick_pending = False  # a coalescing engine start is scheduled
         # --- transport state ---
         self.next_psn = 0
         self.epsn = 0
@@ -391,14 +445,23 @@ class QP:
                       sq_psn=self.next_psn, timeout=self.timeout,
                       retry_cnt=self.retry_cnt, rnr_retry=self.rnr_retry)
 
+    def _sq_at(self, idx: int) -> SendWQE:
+        return self.sq[idx % self.cap.max_send_wr]
+
+    def _rq_at(self, idx: int) -> RecvWQE:
+        return self.rq[idx % self.cap.max_recv_wr]
+
     def _reset(self) -> None:
         for wqe in self.sq:
             if wqe.timeout_ev is not None:
                 wqe.timeout_ev.cancel()
+            if wqe.batch is not None and wqe.batch.ev is not None:
+                wqe.batch.ev.cancel()
         self.sq = []
         self.rq = []
-        self.sq_doorbell = self.sq_cursor = self.sq_completed = 0
-        self.rq_doorbell = self.rq_consumed = 0
+        self.sq_tail = self.sq_doorbell = 0
+        self.sq_cursor = self.sq_completed = 0
+        self.rq_tail = self.rq_doorbell = self.rq_consumed = 0
         self.next_psn = 0
         self.epsn = 0
         self._serializing = 0
@@ -416,26 +479,63 @@ class QP:
             # posting before RTS is allowed at driver level (SHIFT withholds
             # doorbells on not-yet-active QPs); real NICs require RTS to
             # *execute*, which the engine enforces.
-        if len(self.sq) - self.sq_completed >= self.cap.max_send_wr:
+        idx = self.sq_tail
+        if idx - self.sq_completed >= self.cap.max_send_wr:
             raise VerbsError("send queue full")
-        wqe = SendWQE(len(self.sq), wr)
-        self.sq.append(wqe)
+        wqe = SendWQE(idx, wr)
+        if len(self.sq) < self.cap.max_send_wr:
+            self.sq.append(wqe)
+        else:
+            self.sq[idx % self.cap.max_send_wr] = wqe
+        self.sq_tail = idx + 1
         if ring:
             self.ring_sq_doorbell()
         return wqe
 
+    def post_send_chain(self, wrs: Sequence[SendWR],
+                        ring: bool = True) -> List[SendWQE]:
+        """Post a linked chain of send WRs with ONE doorbell (the real
+        ``ibv_post_send`` posts ``wr.next`` chains exactly like this).
+        The whole chain lands behind a single doorbell, so the fast
+        datapath serializes it as one coalesced segment."""
+        cap = self.cap.max_send_wr
+        if self.sq_tail - self.sq_completed + len(wrs) > cap:
+            raise VerbsError("send queue full")
+        if self.state is QPState.ERR:
+            raise VerbsError("post_send on QP in ERR state")
+        sq = self.sq
+        out = []
+        idx = self.sq_tail
+        for wr in wrs:
+            wqe = SendWQE(idx, wr)
+            if len(sq) < cap:
+                sq.append(wqe)
+            else:
+                sq[idx % cap] = wqe
+            idx += 1
+            out.append(wqe)
+        self.sq_tail = idx
+        if ring:
+            self.ring_sq_doorbell()
+        return out
+
     def ring_sq_doorbell(self, upto: Optional[int] = None) -> None:
         """Make WQEs visible to the NIC and kick the engine."""
-        self.sq_doorbell = len(self.sq) if upto is None else upto
+        self.sq_doorbell = self.sq_tail if upto is None else upto
         self.ctx._engine_kick(self)
 
     def post_recv_wqe(self, wr: RecvWR, ring: bool = True) -> RecvWQE:
-        if len(self.rq) - self.rq_consumed >= self.cap.max_recv_wr:
+        idx = self.rq_tail
+        if idx - self.rq_consumed >= self.cap.max_recv_wr:
             raise VerbsError("recv queue full")
-        wqe = RecvWQE(len(self.rq), wr)
-        self.rq.append(wqe)
+        wqe = RecvWQE(idx, wr)
+        if len(self.rq) < self.cap.max_recv_wr:
+            self.rq.append(wqe)
+        else:
+            self.rq[idx % self.cap.max_recv_wr] = wqe
+        self.rq_tail = idx + 1
         if ring:
-            self.rq_doorbell = len(self.rq)
+            self.rq_doorbell = self.rq_tail
         return wqe
 
     # ------------------------------------------------------------------
@@ -448,10 +548,12 @@ class QP:
         self.state = QPState.ERR
         if first_wqe is not None and not first_wqe.completed:
             self._complete_send(first_wqe, status, force_wc=True)
-        for wqe in self.sq[self.sq_completed:]:
+        for i in range(self.sq_completed, self.sq_tail):
+            wqe = self._sq_at(i)
             if not wqe.completed:
                 self._complete_send(wqe, WCStatus.WR_FLUSH_ERR, force_wc=True)
-        for rwqe in self.rq[self.rq_consumed:]:
+        for i in range(self.rq_consumed, self.rq_tail):
+            rwqe = self._rq_at(i)
             if not rwqe.completed:
                 rwqe.completed = True
                 rwqe.status = WCStatus.WR_FLUSH_ERR
@@ -469,17 +571,18 @@ class QP:
         if wqe.timeout_ev is not None:
             wqe.timeout_ev.cancel()
             wqe.timeout_ev = None
-        while (self.sq_completed < len(self.sq)
-               and self.sq[self.sq_completed].completed):
+        bt = wqe.batch
+        if bt is not None:
+            wqe.batch = None
+            bt.remaining -= 1
+            if bt.remaining <= 0 and bt.ev is not None:
+                bt.ev.cancel()
+        while (self.sq_completed < self.sq_tail
+               and self._sq_at(self.sq_completed).completed):
             self.sq_completed += 1
         if (wqe.signaled or force_wc) and not wqe.probe:
-            op = {Opcode.WRITE: WCOpcode.RDMA_WRITE,
-                  Opcode.WRITE_IMM: WCOpcode.RDMA_WRITE,
-                  Opcode.SEND: WCOpcode.SEND,
-                  Opcode.READ: WCOpcode.RDMA_READ,
-                  Opcode.FETCH_ADD: WCOpcode.FETCH_ADD,
-                  Opcode.CMP_SWAP: WCOpcode.CMP_SWAP}[wqe.opcode]
-            wc = WC(wqe.wr_id, status, op, wqe.length, qp_num=self.qpn)
+            wc = WC(wqe.wr_id, status, _WC_OP_OF[wqe.opcode], wqe.length,
+                    qp_num=self.qpn)
             wc._wqe = wqe
             self.send_cq.push(wc)
         elif wqe.probe and self.ctx._probe_cb.get(self.qpn):
@@ -521,7 +624,7 @@ class Context:
     def _on_nic_state(self, up: bool) -> None:
         if up:
             for qp in self.qps.values():
-                self.sim.schedule(0.0, self._engine_kick, qp)
+                self.sim.call(0.0, self._engine_kick, qp)
             return
         # NIC died: every QP with pending work errors out after the
         # detection latency (footnote 3: failures manifest as error WCs).
@@ -529,28 +632,327 @@ class Context:
             if qp.state in (QPState.RTS, QPState.RTR) and (
                     qp.sq_completed < qp.sq_doorbell or qp.rq_consumed < qp.rq_doorbell
                     or qp.sq_cursor < qp.sq_doorbell):
-                self.sim.schedule(self.cluster.nic_error_detect_latency,
-                                  qp._enter_error, WCStatus.FATAL_ERR, None)
+                self.sim.call(self.cluster.nic_error_detect_latency,
+                              qp._enter_error, WCStatus.FATAL_ERR, None)
 
     # ------------------------------------------------------------------
     # RC transport engine
     # ------------------------------------------------------------------
     def _engine_kick(self, qp: QP) -> None:
-        """Start serializing the next doorbell'd WQE if the NIC is free."""
+        """Start serializing doorbell'd work if the NIC is free.
+
+        Fast datapath: the start is deferred by one zero-delay event so
+        every doorbell rung at the same virtual instant (a burst of
+        ``post_send`` calls) lands in ONE coalesced segment instead of N
+        single-WQE transfers — the simulator's doorbell coalescing."""
         if qp.state is not QPState.RTS or qp._serializing > 0:
             return
         if qp.sq_cursor >= qp.sq_doorbell:
             return
-        wqe = qp.sq[qp.sq_cursor]
+        if self.cluster.fast_datapath:
+            if not qp._kick_pending:
+                qp._kick_pending = True
+                self.sim.call(0.0, self._engine_start, qp)
+            return
+        wqe = qp._sq_at(qp.sq_cursor)
         qp.sq_cursor += 1
         self._transmit(qp, wqe, first_attempt=True)
 
+    def _engine_start(self, qp: QP) -> None:
+        """Collect the doorbell'd burst into one segment (fast path)."""
+        qp._kick_pending = False
+        if qp.state is not QPState.RTS or qp._serializing > 0:
+            return
+        end = min(qp.sq_doorbell, qp.sq_cursor + self.cluster.max_burst)
+        if qp.sq_cursor >= end:
+            return
+        sq, cap = qp.sq, qp.cap.max_send_wr
+        wqes = [sq[i % cap] for i in range(qp.sq_cursor, end)]
+        qp.sq_cursor = end
+        self._send_segment(qp, wqes)
+
+    # -- coalesced fast path --------------------------------------------
+    def _send_segment(self, qp: QP, wqes: List[SendWQE]) -> None:
+        """Serialize a run of WQEs as ONE scheduled transfer event.
+
+        Used for first transmission and retransmission alike; payloads are
+        zero-copy read-only views into registered memory (DMA-read at
+        delivery — valid under the completion-gated slot-reuse rule)."""
+        if qp.state is not QPState.RTS:
+            return
+        wqes = [w for w in wqes if not w.completed]
+        if not wqes:
+            return
+        if not self.nic.up:
+            self.sim.call(self.cluster.nic_error_detect_latency,
+                          qp._enter_error, WCStatus.RETRY_EXC_ERR, wqes[0])
+            return
+        bw = self.nic.effective_bandwidth()
+        ser = 0.0
+        next_psn = qp.next_psn
+        for wqe in wqes:
+            if wqe.psn is None and not wqe.probe:
+                wqe.psn = next_psn
+                next_psn += 1
+            wqe.attempts += 1
+            if wqe.length:
+                ser += PER_MESSAGE_OVERHEAD + wqe.length / bw
+            else:
+                ser += PER_MESSAGE_OVERHEAD
+        qp.next_psn = next_psn
+        # serialization occupies the NIC (compute share before joining).
+        # Payloads are NOT materialized here: the receiver DMA-reads the
+        # source MR at delivery (the zero-copy handoff) — valid under the
+        # completion-gated slot-reuse ownership rule.
+        qp._serializing += 1
+        self.nic.active_flows += 1
+        self.sim.call(ser, self._segment_serialized, qp, wqes, qp.epoch)
+
+    def _segment_serialized(self, qp: QP, wqes: List[SendWQE],
+                            epoch: int) -> None:
+        self.nic.active_flows = max(0, self.nic.active_flows - 1)
+        if epoch != qp.epoch:
+            return  # QP was reset while this segment was on the wire
+        qp._serializing = max(0, qp._serializing - 1)
+        # pipeline: the next burst can start serializing immediately
+        self._engine_start(qp)
+        if qp.state is not QPState.RTS:
+            return
+        live = [w for w in wqes if not w.completed]
+        if not live:
+            return
+        # one ACK timeout for the whole segment (vs. one per WQE)
+        bt = _SegmentTimeout()
+        for wqe in live:
+            old = wqe.batch
+            if old is not None:            # re-segmented retransmission
+                old.remaining -= 1
+                if old.remaining <= 0 and old.ev is not None:
+                    old.ev.cancel()
+            wqe.batch = bt
+            bt.remaining += 1
+        bt.ev = self.sim.schedule(qp.timeout, self._segment_timeout, qp,
+                                  live, epoch)
+        dst = self.cluster.nic_by_gid.get(_gid_of(qp))
+        if dst is None or not self.cluster.path_up(self.nic, dst):
+            return  # segment lost on the wire
+        lat = self.cluster.path_latency(self.nic, dst)
+        self.sim.call(lat, self._segment_deliver, qp, live, dst, epoch)
+
+    def _segment_deliver(self, src_qp: QP, items: List[SendWQE],
+                         dst_nic: RNIC, epoch: int) -> None:
+        # Receiver-side execution proceeds even if the *sender* QP was
+        # reset meanwhile (Theorem 3.4's Ghost) — only sender completion
+        # is epoch-guarded, exactly like the per-WQE path. Payload views
+        # are taken HERE, at the RNIC-to-memory boundary: the simulated
+        # DMA engine reads registered source memory at delivery time.
+        if not self.cluster.path_up(src_qp.pd.ctx.nic, dst_nic):
+            return  # dropped in flight
+        dqp = _qp_registry.get((dst_nic.gid, src_qp.dest_qpn))
+        if dqp is None or dqp.state not in (QPState.RTR, QPState.RTS):
+            return  # receiver QP not ready: silent drop -> sender timeout
+        src_host = src_qp.pd.ctx.nic.host.name
+        acked: List[Tuple[SendWQE, Optional[object]]] = []
+        rnr_wqe: Optional[SendWQE] = None
+        nak_wqe: Optional[SendWQE] = None
+        i, n = 0, len(items)
+        while i < n:
+            wqe = items[i]
+            if wqe.probe:
+                # sequence-transparent management probe: ACK, never
+                # touches epsn or memory
+                acked.append((wqe, None))
+                i += 1
+                continue
+            if wqe.psn < dqp.epsn:
+                acked.append((wqe, None))   # duplicate: drop and re-ACK
+                i += 1
+                continue
+            if wqe.psn > dqp.epsn:
+                i += 1
+                continue  # gap: drop, the sender retransmits in order
+            if wqe.opcode is Opcode.WRITE and wqe.length and i + 1 < n:
+                # vectorized transfer: gather the PSN-ordered run of plain
+                # WRITEs and execute it in one pass (adjacent writes that
+                # are contiguous in source AND destination collapse into
+                # a single numpy copy)
+                j = i + 1
+                expect = wqe.psn + 1
+                while j < n:
+                    w2 = items[j]
+                    if (w2.probe or w2.opcode is not Opcode.WRITE
+                            or not w2.length or w2.psn != expect):
+                        break
+                    expect += 1
+                    j += 1
+                if j - i >= 2:
+                    run = items[i:j]
+                    n_ok = self._execute_write_run(dqp, run, dst_nic,
+                                                   src_host)
+                    dqp.epsn += n_ok
+                    for k in range(n_ok):
+                        acked.append((run[k], None))
+                    if n_ok < len(run):
+                        nak_wqe = run[n_ok]
+                        break
+                    i = j
+                    continue
+            payload = None
+            if wqe.length and wqe.opcode in _PAYLOAD_OPCODES:
+                src_mr = _mr_registry_lkey.get((src_host, wqe.lkey))
+                if src_mr is None:
+                    nak_wqe = wqe   # source MR vanished: local protection
+                    break
+                payload = src_mr.ro_view(wqe.local_addr, wqe.length)
+            result = self._execute_at_receiver(dqp, wqe, payload, dst_nic)
+            if type(result) is str:
+                if result == "rnr":
+                    rnr_wqe = wqe
+                else:       # "acc_err"
+                    nak_wqe = wqe
+                break       # later PSNs become gaps: dropped
+            dqp.epsn += 1
+            acked.append((wqe, result))
+            i += 1
+        if acked:
+            # coalesced ACK: one response event for the delivered run
+            self._send_segment_ack(src_qp, acked, dst_nic, epoch)
+        if rnr_wqe is not None:
+            self._send_ack(src_qp, rnr_wqe, dst_nic, rnr=True, epoch=epoch)
+        elif nak_wqe is not None:
+            self._send_nak_access(src_qp, nak_wqe, dst_nic, epoch)
+
+    def _execute_write_run(self, dqp: QP, run: List[SendWQE],
+                           dst_nic: RNIC, src_host: str) -> int:
+        """Execute a PSN-ordered run of plain RDMA WRITEs against
+        destination memory. Returns how many executed (stops at the first
+        access error — the caller NAKs that WQE). Adjacent writes that
+        are contiguous in BOTH source and destination are copied with one
+        numpy operation instead of one per message."""
+        host = dst_nic.host.name
+        done = 0
+        i, n = 0, len(run)
+        while i < n:
+            wqe = run[i]
+            total = wqe.length
+            j = i + 1
+            while j < n:
+                w2 = run[j]
+                if not (w2.lkey == wqe.lkey
+                        and w2.local_addr == wqe.local_addr + total
+                        and w2.rkey == wqe.rkey
+                        and w2.remote_addr == wqe.remote_addr + total):
+                    break
+                total += w2.length
+                j += 1
+            mr = _find_mr(host, wqe.rkey, wqe.remote_addr, total)
+            src_mr = _mr_registry_lkey.get((src_host, wqe.lkey))
+            if mr is not None and src_mr is not None:
+                mr.slice(wqe.remote_addr, total)[:] = src_mr.ro_view(
+                    wqe.local_addr, total)
+                done += j - i
+            else:
+                # merged lookup failed (or no source MR): fall back to
+                # per-WQE execution so the NAK lands on the exact WQE
+                for k in range(i, j):
+                    wk = run[k]
+                    mrk = _find_mr(host, wk.rkey, wk.remote_addr, wk.length)
+                    srck = _mr_registry_lkey.get((src_host, wk.lkey))
+                    if mrk is None or srck is None:
+                        return done
+                    mrk.slice(wk.remote_addr, wk.length)[:] = srck.ro_view(
+                        wk.local_addr, wk.length)
+                    done += 1
+            i = j
+        return done
+
+    def _send_segment_ack(self, src_qp: QP,
+                          acked: List[Tuple[SendWQE, Optional[object]]],
+                          dst_nic: RNIC, epoch: int) -> None:
+        src_nic = src_qp.pd.ctx.nic
+        lat = self.cluster.path_latency(dst_nic, src_nic)
+        resp_bytes = sum(len(data) for wqe, data in acked
+                         if data is not None and wqe.opcode is Opcode.READ)
+        if resp_bytes:
+            # READ responses carry data: serialize at the responder NIC
+            lat += resp_bytes / max(dst_nic.effective_bandwidth(), 1.0)
+        self.sim.call(lat, self._segment_ack_arrive, src_qp, acked, dst_nic,
+                      epoch)
+
+    def _segment_ack_arrive(self, qp: QP,
+                            acked: List[Tuple[SendWQE, Optional[object]]],
+                            dst_nic: RNIC, epoch: int) -> None:
+        src_nic = qp.pd.ctx.nic
+        if not self.cluster.path_up(dst_nic, src_nic):
+            return  # ACK lost — Lemma 3.1 trace T2
+        if epoch != qp.epoch or qp.state is not QPState.RTS:
+            return
+        # Batch completion: inlined success path of QP._complete_send for
+        # the whole acked run; the in-order watermark advances once at the
+        # end instead of once per WQE. Semantics are identical.
+        ok = WCStatus.SUCCESS
+        any_done = False
+        for wqe, data in acked:
+            if wqe.completed:
+                continue
+            wqe.acked = True
+            if data is not None and wqe.opcode in (Opcode.READ,
+                                                   *ATOMIC_OPCODES):
+                n = wqe.length if wqe.opcode is Opcode.READ else 8
+                mr = self._local_mr(wqe.lkey)
+                if isinstance(data, (bytes, bytearray)):
+                    mr.slice(wqe.local_addr, n)[:] = np.frombuffer(
+                        bytes(data[:n]), dtype=np.uint8)
+                else:
+                    mr.slice(wqe.local_addr, n)[:] = data[:n]
+            wqe.completed = True
+            wqe.status = ok
+            any_done = True
+            if wqe.timeout_ev is not None:
+                wqe.timeout_ev.cancel()
+                wqe.timeout_ev = None
+            bt = wqe.batch
+            if bt is not None:
+                wqe.batch = None
+                bt.remaining -= 1
+                if bt.remaining <= 0 and bt.ev is not None:
+                    bt.ev.cancel()
+            if wqe.probe:
+                cb = self._probe_cb.get(qp.qpn)
+                if cb is not None:
+                    cb(wqe, ok)
+            elif wqe.signaled:
+                wc = WC(wqe.wr_id, ok, _WC_OP_OF[wqe.opcode], wqe.length,
+                        qp_num=qp.qpn)
+                wc._wqe = wqe
+                qp.send_cq.push(wc)
+        if any_done:
+            sq, cap = qp.sq, qp.cap.max_send_wr
+            done = qp.sq_completed
+            tail = qp.sq_tail
+            while done < tail and sq[done % cap].completed:
+                done += 1
+            qp.sq_completed = done
+
+    def _segment_timeout(self, qp: QP, wqes: List[SendWQE],
+                         epoch: int) -> None:
+        if epoch != qp.epoch or qp.state is not QPState.RTS:
+            return
+        pend = [w for w in wqes if not w.completed and not w.acked]
+        if not pend:
+            return
+        if pend[0].attempts > qp.retry_cnt:
+            qp._enter_error(WCStatus.RETRY_EXC_ERR, pend[0])
+            return
+        self._send_segment(qp, pend)
+
+    # -- legacy per-WQE path (cluster.fast_datapath=False) --------------
     def _transmit(self, qp: QP, wqe: SendWQE, first_attempt: bool) -> None:
         if qp.state is not QPState.RTS or wqe.completed:
             return
         if not self.nic.up:
-            self.sim.schedule(self.cluster.nic_error_detect_latency,
-                              qp._enter_error, WCStatus.RETRY_EXC_ERR, wqe)
+            self.sim.call(self.cluster.nic_error_detect_latency,
+                          qp._enter_error, WCStatus.RETRY_EXC_ERR, wqe)
             return
         if first_attempt and wqe.psn is None and not wqe.probe:
             wqe.psn = qp.next_psn
@@ -558,7 +960,7 @@ class Context:
         wqe.attempts += 1
         # DMA-read the payload out of registered memory at transmit time
         payload = None
-        if wqe.opcode in (Opcode.WRITE, Opcode.WRITE_IMM, Opcode.SEND) and wqe.length:
+        if wqe.opcode in _PAYLOAD_OPCODES and wqe.length:
             mr = self._local_mr(wqe.lkey)
             payload = bytes(mr.slice(wqe.local_addr, wqe.length))
         # serialization occupies the NIC (compute share before joining)
@@ -566,7 +968,7 @@ class Context:
         qp._serializing += 1
         self.nic.active_flows += 1
         ser = PER_MESSAGE_OVERHEAD + (wqe.length / bw if wqe.length else 0.0)
-        self.sim.schedule(ser, self._serialized, qp, wqe, payload, qp.epoch)
+        self.sim.call(ser, self._serialized, qp, wqe, payload, qp.epoch)
 
     def _serialized(self, qp: QP, wqe: SendWQE, payload: Optional[bytes],
                     epoch: int) -> None:
@@ -587,7 +989,7 @@ class Context:
         if dst is None or not self.cluster.path_up(self.nic, dst):
             return  # packet lost on the wire
         lat = self.cluster.path_latency(self.nic, dst)
-        self.sim.schedule(lat, self._deliver, qp, wqe, payload, dst, epoch)
+        self.sim.call(lat, self._deliver, qp, wqe, payload, dst, epoch)
 
     # -- receiver side ----------------------------------------------------
     def _deliver(self, src_qp: QP, wqe: SendWQE, payload: Optional[bytes],
@@ -626,15 +1028,21 @@ class Context:
                        epoch=epoch)
 
     def _execute_at_receiver(self, dqp: QP, wqe: SendWQE,
-                             payload: Optional[bytes], dst_nic: RNIC):
+                             payload, dst_nic: RNIC):
+        """Execute one WQE against destination memory.
+
+        ``payload`` is a read-only numpy view on the fast path (the single
+        copy to destination memory happens here — the RNIC-to-memory
+        boundary) or a ``bytes`` snapshot on the legacy path."""
         host = dst_nic.host.name
+        if type(payload) is bytes:
+            payload = np.frombuffer(payload, dtype=np.uint8)
         if wqe.opcode in (Opcode.WRITE, Opcode.WRITE_IMM):
             if wqe.length:
                 mr = _find_mr(host, wqe.rkey, wqe.remote_addr, wqe.length)
                 if mr is None:
                     return "acc_err"
-                mr.slice(wqe.remote_addr, wqe.length)[:] = np.frombuffer(
-                    payload, dtype=np.uint8)
+                mr.slice(wqe.remote_addr, wqe.length)[:] = payload
             if wqe.opcode is Opcode.WRITE_IMM:
                 rwqe = _consume_recv(dqp)
                 if rwqe is None:
@@ -656,8 +1064,7 @@ class Context:
                 mr = _mr_registry_lkey.get((host, rwqe.lkey))
                 if mr is None:
                     return "acc_err"
-                mr.slice(rwqe.addr, wqe.length)[:] = np.frombuffer(
-                    payload, dtype=np.uint8)
+                mr.slice(rwqe.addr, wqe.length)[:] = payload
             wc = WC(rwqe.wr_id, WCStatus.SUCCESS, WCOpcode.RECV,
                     byte_len=wqe.length, imm_data=None, qp_num=dqp.qpn)
             wc._rwqe = rwqe
@@ -667,6 +1074,12 @@ class Context:
             mr = _find_mr(host, wqe.rkey, wqe.remote_addr, wqe.length)
             if mr is None:
                 return "acc_err"
+            if self.cluster.fast_datapath:
+                # READ responses must snapshot at execution time: the
+                # responder NIC serializes the data as it executes, so a
+                # write landing during the response's flight must not be
+                # visible to the requester (a live view would leak it).
+                return mr.slice(wqe.remote_addr, wqe.length).copy()
             return bytes(mr.slice(wqe.remote_addr, wqe.length))
         if wqe.opcode in ATOMIC_OPCODES:
             mr = _find_mr(host, wqe.rkey, wqe.remote_addr, 8)
@@ -693,8 +1106,8 @@ class Context:
         if isinstance(read_data, (bytes, bytearray)) and wqe.opcode is Opcode.READ:
             # response carries data: serialize at the responder NIC
             lat += len(read_data) / max(dst_nic.effective_bandwidth(), 1.0)
-        self.sim.schedule(lat, self._ack_arrive, src_qp, wqe, dst_nic, rnr,
-                          read_data, epoch)
+        self.sim.call(lat, self._ack_arrive, src_qp, wqe, dst_nic, rnr,
+                      read_data, epoch)
 
     def _ack_arrive(self, qp: QP, wqe: SendWQE, dst_nic: RNIC, rnr: bool,
                     read_data, epoch: int) -> None:
@@ -711,8 +1124,8 @@ class Context:
             if wqe.attempts > qp.rnr_retry:
                 qp._enter_error(WCStatus.RNR_RETRY_EXC_ERR, wqe)
                 return
-            self.sim.schedule(self.cluster.rnr_timer, self._retransmit,
-                              qp, wqe, epoch)
+            self.sim.call(self.cluster.rnr_timer, self._retransmit,
+                          qp, wqe, epoch)
             return
         wqe.acked = True
         if isinstance(read_data, (bytes, bytearray)) and wqe.opcode in (
@@ -733,7 +1146,7 @@ class Context:
                 return
             if src_qp.state is QPState.RTS and not wqe.completed:
                 src_qp._enter_error(WCStatus.REM_ACCESS_ERR, wqe)
-        self.sim.schedule(lat, _nak)
+        self.sim.call(lat, _nak)
 
     def _ack_timeout(self, qp: QP, wqe: SendWQE, epoch: int) -> None:
         if epoch != qp.epoch:
@@ -750,7 +1163,10 @@ class Context:
             return
         if qp.state is not QPState.RTS or wqe.completed:
             return
-        self._transmit(qp, wqe, first_attempt=False)
+        if self.cluster.fast_datapath:
+            self._send_segment(qp, [wqe])
+        else:
+            self._transmit(qp, wqe, first_attempt=False)
 
 
 def _gid_of(qp: QP) -> str:
@@ -760,7 +1176,7 @@ def _gid_of(qp: QP) -> str:
 def _consume_recv(dqp: QP) -> Optional[RecvWQE]:
     if dqp.rq_consumed >= dqp.rq_doorbell:
         return None
-    rwqe = dqp.rq[dqp.rq_consumed]
+    rwqe = dqp._rq_at(dqp.rq_consumed)
     dqp.rq_consumed += 1
     rwqe.consumed = True
     rwqe.completed = True
@@ -841,6 +1257,11 @@ def ibv_query_qp(qp: QP) -> QPAttr:
 
 def ibv_post_send(qp: QP, wr: SendWR) -> SendWQE:
     return qp.post_send_wqe(wr, ring=True)
+
+
+def ibv_post_send_chain(qp: QP, wrs: Sequence[SendWR]) -> List[SendWQE]:
+    """Post a ``wr.next``-style linked chain with a single doorbell."""
+    return qp.post_send_chain(wrs, ring=True)
 
 
 def ibv_post_recv(qp: QP, wr: RecvWR) -> RecvWQE:

@@ -146,11 +146,14 @@ class PairEndpoint:
 
 def make_pair(lib_kind: str = "shift", probe_interval: float = 5e-3,
               nics_per_host: int = 2, endpoint_kw: Optional[dict] = None,
-              **cluster_kw):
+              fast: bool = True, **cluster_kw):
     """Fresh 2-host cluster + connected endpoint pair (also the harness
-    behind ``benchmarks.common.make_pair``)."""
+    behind ``benchmarks.common.make_pair``). ``fast`` selects the
+    coalescing zero-copy datapath (default); False restores the legacy
+    per-WQE event chain."""
     V.reset_registries()
     c = build_cluster(n_hosts=2, nics_per_host=nics_per_host, **cluster_kw)
+    c.fast_datapath = fast
     if lib_kind == "shift":
         cfg = S.ShiftConfig(probe_interval=probe_interval)
         lib_a = S.ShiftLib(c, "host0", config=cfg)
@@ -172,6 +175,12 @@ class _PingPongPump:
     only posts while fewer than ``WINDOW`` notifies are uncompleted, so a
     slot is never rewritten before its prior message is ACKed (or its
     completion synthesized) — the completion-gated reuse rule.
+
+    ``burst`` > 1 posts B messages per tick with the tick period scaled
+    by B: the same average message rate, fills, and delivery trace, but
+    the posts land in one doorbell-coalescing window so the fast datapath
+    serializes them as a single segment. ``burst=1`` reproduces the
+    legacy one-message-per-tick pacing exactly.
     """
 
     SLOTS = 16
@@ -179,9 +188,16 @@ class _PingPongPump:
 
     def __init__(self, c: Cluster, a: PairEndpoint, b: PairEndpoint,
                  n_msgs: int, size: int, interval: float, seed: int,
-                 deadline: float, result: RunResult):
+                 deadline: float, result: RunResult, burst: int = 1):
         self.c, self.a, self.b = c, a, b
         self.n_msgs, self.size, self.interval = n_msgs, size, interval
+        self.burst = max(1, burst)
+        # completion-gated reuse needs slots >= window (a slot is never
+        # rewritten while its previous message could still be in flight)
+        self.slots = max(self.SLOTS, 2 * self.burst)
+        if self.slots * size > min(a.buf.nbytes, b.buf.nbytes):
+            raise ValueError("pingpong burst*size exceeds endpoint buffers")
+        self.window = max(self.WINDOW, 2 * self.burst)
         self.deadline = deadline
         self.r = result
         self.fills = [(seed * 31 + s) % 251 + 1 for s in range(n_msgs)]
@@ -193,7 +209,7 @@ class _PingPongPump:
 
     # -- helpers -----------------------------------------------------------
     def _off(self, seq: int) -> int:
-        return (seq % self.SLOTS) * self.size
+        return (seq % self.slots) * self.size
 
     def drain(self) -> None:
         for wc in self.a.poll():
@@ -215,25 +231,39 @@ class _PingPongPump:
                 if not (got == self.fills[seq]).all():
                     self.r.payload_mismatches += 1
 
-    def _post_one(self) -> None:
-        seq = self.posted
-        off = self._off(seq)
-        self.a.buf[off:off + self.size] = self.fills[seq]
-        try:
-            self.b.lib.post_recv(self.b.qp, V.RecvWR(wr_id=50_000 + seq))
-            self.a.lib.post_send(self.a.qp, V.SendWR(
+    def _post_batch(self, count: int) -> None:
+        """Fill payload slots and post ``count`` messages. With count > 1
+        the bulk WRITE + WRITE_IMM pairs go out as ONE posted chain (one
+        doorbell -> one coalesced segment on the fast datapath); count=1
+        reproduces the legacy two-post sequence exactly."""
+        start = self.posted
+        wrs = []
+        for k in range(count):
+            seq = start + k
+            off = self._off(seq)
+            self.a.buf[off:off + self.size] = self.fills[seq]
+            wrs.append(V.SendWR(
                 wr_id=seq, opcode=V.Opcode.WRITE,
                 sge=V.SGE(self.a.mr.addr + off, self.size, self.a.mr.lkey),
                 remote_addr=self.b.mr.addr + off, rkey=self.b.mr.rkey,
                 send_flags=0))
-            self.a.lib.post_send(self.a.qp, V.SendWR(
+            wrs.append(V.SendWR(
                 wr_id=seq, opcode=V.Opcode.WRITE_IMM, sge=None,
                 remote_addr=0, rkey=self.b.mr.rkey, imm_data=seq,
                 send_flags=V.SEND_FLAG_SIGNALED))
+        try:
+            for k in range(count):
+                self.b.lib.post_recv(self.b.qp,
+                                     V.RecvWR(wr_id=50_000 + start + k))
+            if count == 1:
+                self.a.lib.post_send(self.a.qp, wrs[0])
+                self.a.lib.post_send(self.a.qp, wrs[1])
+            else:
+                self.a.lib.post_send_chain(self.a.qp, wrs)
         except V.VerbsError:
             self.dead = True
             return
-        self.posted += 1
+        self.posted = start + count
 
     @property
     def finished(self) -> bool:
@@ -244,11 +274,13 @@ class _PingPongPump:
 
     def _tick(self) -> None:
         self.drain()
-        if (not self.dead and self.posted < self.n_msgs
-                and self.posted - self.completed_sends < self.WINDOW):
-            self._post_one()
+        if not self.dead:
+            count = min(self.burst, self.n_msgs - self.posted,
+                        self.window - (self.posted - self.completed_sends))
+            if count > 0:
+                self._post_batch(count)
         if not self.finished and self.c.sim.now <= self.deadline:
-            self.c.sim.schedule(self.interval, self._tick)
+            self.c.sim.call(self.interval * self.burst, self._tick)
 
     def start(self) -> None:
         self._tick()
@@ -265,18 +297,21 @@ def _traffic_horizon(scenario: Scenario, probe_interval: float) -> float:
 
 def run_pingpong(scenario: Scenario, seed: int = 0, n_msgs: int = 60,
                  size: int = 8192, interval: float = 200e-6,
-                 probe_interval: float = 5e-3) -> RunResult:
+                 probe_interval: float = 5e-3, fast: bool = True,
+                 burst: Optional[int] = None) -> RunResult:
     result = RunResult(scenario=scenario.name, workload="pingpong",
                        seed=seed)
     n_msgs = max(n_msgs,
                  int(_traffic_horizon(scenario, probe_interval) / interval))
-    c, a, b = make_pair(probe_interval=probe_interval)
+    c, a, b = make_pair(probe_interval=probe_interval, fast=fast)
     _observe(c, [a.lib, b.lib], result)
     t0 = c.sim.now
     scenario.schedule(c, t0)
     deadline = t0 + scenario.duration
+    if burst is None:
+        burst = 8 if fast else 1   # fast mode feeds the doorbell coalescer
     pump = _PingPongPump(c, a, b, n_msgs, size, interval, seed,
-                         deadline, result)
+                         deadline, result, burst=burst)
     pump.start()
     c.sim.run(until=deadline + 0.05)
     pump.drain()
@@ -296,14 +331,14 @@ def run_pingpong(scenario: Scenario, seed: int = 0, n_msgs: int = 60,
 
 def run_allreduce(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
                   elems: int = 1 << 14, max_rounds: int = 4000,
-                  probe_interval: float = 5e-3) -> RunResult:
+                  probe_interval: float = 5e-3, fast: bool = True) -> RunResult:
     from repro.collectives import CollectiveError, build_world
 
     result = RunResult(scenario=scenario.name, workload="allreduce",
                        seed=seed)
     cluster, libs, world = build_world(
         n_ranks=n_ranks, probe_interval=probe_interval,
-        max_chunk_bytes=1 << 14, strict_order=False)
+        max_chunk_bytes=1 << 14, strict_order=False, fast=fast)
     _observe(cluster, libs, result)
     t0 = cluster.sim.now
     scenario.schedule(cluster, t0)
@@ -344,14 +379,14 @@ def run_allreduce(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
 
 
 def run_ddp(scenario: Scenario, seed: int = 0, steps: int = 6,
-            n_ranks: int = 2) -> RunResult:
+            n_ranks: int = 2, fast: bool = True) -> RunResult:
     from repro.collectives import build_world
     from repro.train.trainer import RestartNeeded, build_smoke_trainer
 
     result = RunResult(scenario=scenario.name, workload="ddp", seed=seed)
     cluster, libs, world = build_world(
         n_ranks=n_ranks, probe_interval=5e-4,
-        max_chunk_bytes=1 << 18, strict_order=False)
+        max_chunk_bytes=1 << 18, strict_order=False, fast=fast)
     _observe(cluster, libs, result)
     ckpt_dir = tempfile.mkdtemp(prefix="repro-campaign-ckpt-")
     trainer = build_smoke_trainer(cluster, libs, steps=steps,

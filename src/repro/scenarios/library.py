@@ -70,18 +70,24 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
     ),
     Scenario(
         name="link_flap_train",
-        description="4 link flaps (3ms down / 8ms period) on the sender "
-                    "rail: probes keep failing until the train ends.",
+        description="4 link flaps (6ms down / 9ms period) on the sender "
+                    "rail: each outage exceeds the RC retry budget "
+                    "(retry_cnt x ack_timeout ~ 3.2ms), so every flap "
+                    "forces an error WC and a fallback regardless of "
+                    "traffic pacing; probes keep failing until the train "
+                    "ends.",
         actions=flap_train("host0/mlx5_0", start=2e-3, count=4,
-                           down_time=3e-3, period=8e-3, kind="link"),
+                           down_time=6e-3, period=9e-3, kind="link"),
         min_fallbacks=1, expect_recovery=True,
         tags=("link", "flap"),
     ),
     Scenario(
         name="port_flap_train",
-        description="3 switch-port flaps on the receiver rail.",
+        description="3 switch-port flaps on the receiver rail, each "
+                    "outage longer than the RC retry budget (the "
+                    "transport alone cannot ride it out).",
         actions=flap_train("host1/mlx5_0", start=2e-3, count=3,
-                           down_time=2e-3, period=7e-3, kind="port"),
+                           down_time=6e-3, period=9e-3, kind="port"),
         min_fallbacks=1, expect_recovery=True,
         tags=("switch", "flap"),
     ),
