@@ -32,6 +32,14 @@ Benchmarks
     collective is latency-chained (each chunk waits for the previous
     notify), so this tracks per-message datapath cost, not batching.
 
+``multirail_busbw``
+    Aggregate pingpong busbw of a chunk stream striped across both rails
+    through the JcclWorld channel scheduler vs the single-rail path,
+    measured in VIRTUAL time (deterministic). Gated two ways: the ratio
+    is baseline-compared like other metrics AND has an absolute >= 1.8x
+    floor — losing the striping is a correctness bug in the scheduler,
+    not a perf regression.
+
 ``fallback_latency``
     Max virtual-time fallback latency over the sender_nic_down scenario
     in fast mode — a determinism canary: it must not drift at all.
@@ -67,8 +75,13 @@ GATED_RATIOS = {
     "fig5_msg_rate_64k.after.events_per_message": False,
     "campaign_pingpong.after.events_per_message": False,
     "campaign_pingpong.events_per_message_reduction": True,
+    "multirail_busbw.busbw_ratio": True,
 }
 TOLERANCE = 0.20
+# Absolute floor (not baseline-relative): striping over 2 rails must
+# deliver >= 1.8x the single-rail pingpong busbw (virtual time, so this
+# is deterministic — a miss means the channel scheduler stopped striping)
+MULTIRAIL_MIN_RATIO = 1.8
 
 
 def bench_fig5_msg_rate(msg_size: int = 1 << 16, duration: float = 2.0):
@@ -145,6 +158,53 @@ def bench_campaign(interval: float = 20e-6, size: int = 16384):
     }
 
 
+def bench_multirail_busbw(size: int = 1 << 16, chunks: int = 512):
+    """Aggregate pingpong busbw, striped across 2 rails vs the
+    single-rail path. A one-directional chunk stream rank0 -> rank1 goes
+    through the JcclWorld channel scheduler (home = chunk % channels);
+    busbw is delivered bytes over elapsed VIRTUAL time, so the ratio is
+    fully deterministic. Per-rail byte counters come from the fabric's
+    new rail accounting. Gate: the 2-rail ratio must stay >= 1.8x."""
+    import numpy as np
+    from repro.collectives import build_world
+
+    def one(channels):
+        cluster, libs, world = build_world(
+            n_ranks=2, channels=channels, max_chunk_bytes=size)
+        payload = np.arange(size, dtype=np.uint8)
+        base = {k: v["delivered_bytes"]
+                for k, v in cluster.rail_bytes().items()}
+        t0 = cluster.sim.now
+        for i in range(chunks):
+            world.send(0, 1, payload, tag=i)
+        while (sum(ch.chunks_delivered for ch in world.channels) < chunks
+               and cluster.sim.step()):
+            pass
+        elapsed = cluster.sim.now - t0
+        rails = {str(k): v["delivered_bytes"] - base.get(k, 0)
+                 for k, v in cluster.rail_bytes().items()}
+        return {
+            "busbw_gbps": round(chunks * size * 8 / elapsed / 1e9, 3),
+            "virtual_s": round(elapsed, 9),
+            "per_rail_delivered_bytes": rails,
+            "chunks": chunks,
+            "chunks_per_channel": [ch.chunks_delivered
+                                   for ch in world.channels],
+        }
+
+    single = one(1)
+    dual = one(2)
+    return {
+        "config": {"size": size, "chunks": chunks,
+                   "note": "busbw over virtual time (deterministic); "
+                           "single = 1 channel on rail 0, dual = chunks "
+                           "striped across both rails"},
+        "single_rail": single,
+        "dual_rail": dual,
+        "busbw_ratio": round(dual["busbw_gbps"] / single["busbw_gbps"], 3),
+    }
+
+
 def bench_allreduce(n_ranks: int = 2, elems: int = 1 << 16,
                     rounds: int = 12):
     import numpy as np
@@ -183,16 +243,18 @@ def run_suite(quick: bool = False) -> dict:
     fig5 = bench_fig5_msg_rate(duration=2.0)
     campaign = bench_campaign()
     allreduce = bench_allreduce(rounds=12)
+    multirail = bench_multirail_busbw()
     return {
         "schema": SCHEMA,
         "note": "before = pre-fast-path configuration (legacy per-WQE "
                 "event datapath); after = coalescing zero-copy datapath. "
                 "Wall-clock ratios are same-machine; events-per-message "
-                "is deterministic.",
+                "and the multirail busbw ratio are deterministic.",
         "benchmarks": {
             "fig5_msg_rate_64k": fig5,
             "campaign_pingpong": campaign,
             "allreduce_bytes": allreduce,
+            "multirail_busbw": multirail,
         },
     }
 
@@ -265,6 +327,15 @@ def emit(path: str, quick: bool = False,
           flush=True)
     print(f"# perf: allreduce {b['allreduce_bytes']['speedup']:.2f}x",
           flush=True)
+    mr = b["multirail_busbw"]
+    print(f"# perf: multirail busbw "
+          f"{mr['single_rail']['busbw_gbps']:.1f} -> "
+          f"{mr['dual_rail']['busbw_gbps']:.1f} Gbps "
+          f"({mr['busbw_ratio']:.2f}x on 2 rails)", flush=True)
+    if mr["busbw_ratio"] < MULTIRAIL_MIN_RATIO:
+        print(f"# PERF MULTIRAIL FLOOR: busbw_ratio {mr['busbw_ratio']} "
+              f"< required {MULTIRAIL_MIN_RATIO}", flush=True)
+        return 1
     # invariant violations fail UNCONDITIONALLY — no baseline needed: a
     # fast datapath that breaks exactly-once/zero-copy/ordering is a
     # correctness bug, not a perf regression

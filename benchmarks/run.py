@@ -74,13 +74,20 @@ def _violation_status(violations):
     return "VIOLATED:" + ";".join(v.replace(",", ";") for v in violations)
 
 
-def campaign_rows(smoke: bool = False):
-    """Scenario-campaign section: one row per (scenario, workload) cell."""
+def campaign_rows(smoke: bool = False, fast: bool = True):
+    """Scenario-campaign section: one row per (scenario, workload) cell.
+    ``fast=False`` drives every workload on the legacy per-WQE datapath
+    (CI runs the smoke in both modes)."""
     from repro.scenarios import SCENARIOS, Campaign
 
-    workloads = ("pingpong",) if smoke else ("pingpong", "allreduce")
+    workloads = ("pingpong",) if smoke else (
+        "pingpong", "allreduce", "broadcast", "all_to_all")
+    kw = {"max_rounds": 2000, "fast": fast}
     campaign = Campaign(list(SCENARIOS.values()), workloads=workloads,
-                        workload_kw={"allreduce": {"max_rounds": 2000}})
+                        workload_kw={"pingpong": {"fast": fast},
+                                     "allreduce": dict(kw),
+                                     "broadcast": dict(kw),
+                                     "all_to_all": dict(kw)})
     results = campaign.run()
     out = []
     for r in results:
@@ -93,12 +100,14 @@ def campaign_rows(smoke: bool = False):
     return out
 
 
-def main(smoke: bool = False, bench_json: str = None) -> int:
+def main(smoke: bool = False, bench_json: str = None,
+         fast: bool = True) -> int:
     if smoke:
         # fig6's scenarios are a subset of the campaign's, so the campaign
         # section already covers them — no separate fig6 pass in smoke
         sections = [
-            ("campaign (fault scenarios)", lambda: campaign_rows(smoke=True)),
+            ("campaign (fault scenarios)",
+             lambda: campaign_rows(smoke=True, fast=fast)),
             ("fig7 (verb overhead)", fig7_verbs_rows),
         ]
     else:
@@ -107,7 +116,7 @@ def main(smoke: bool = False, bench_json: str = None) -> int:
             ("table2 (write latency)", table2_latency_rows),
             ("fig6b (fallback latency)", fig6_fallback_rows),
             ("fig5 (throughput failover)", fig5_throughput_rows),
-            ("campaign (fault scenarios)", campaign_rows),
+            ("campaign (fault scenarios)", lambda: campaign_rows(fast=fast)),
             ("fig8 (training progress)", fig8_training_rows),
         ]
     print("name,us_per_call,derived")
@@ -137,5 +146,10 @@ if __name__ == "__main__":
                         help="run the tracked perf suite, write JSON to "
                              "PATH, fail on >20%% regression vs the "
                              "committed baseline")
+    parser.add_argument("--legacy-datapath", action="store_true",
+                        help="drive campaign workloads on the legacy "
+                             "per-WQE event datapath instead of the "
+                             "coalescing fast path")
     args = parser.parse_args()
-    sys.exit(main(smoke=args.smoke, bench_json=args.bench_json))
+    sys.exit(main(smoke=args.smoke, bench_json=args.bench_json,
+                  fast=not args.legacy_datapath))

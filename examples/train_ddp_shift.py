@@ -29,6 +29,9 @@ def main():
     ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--fail-at", type=int, default=None)
     ap.add_argument("--ranks", type=int, default=2)
+    ap.add_argument("--channels", type=int, default=1,
+                    help="stripe gradient collectives across N rails "
+                         "(multi-rail channelized JCCL)")
     ap.add_argument("--baseline", action="store_true",
                     help="StandardLib (crash + checkpoint-restart) instead "
                          "of SHIFT")
@@ -36,17 +39,21 @@ def main():
     steps = args.steps or (200 if args.full else 60)
     fail_at = args.fail_at or steps // 3
 
-    cluster = build_cluster(n_hosts=args.ranks, nics_per_host=2)
+    cluster = build_cluster(n_hosts=args.ranks,
+                            nics_per_host=max(2, args.channels))
     if args.baseline:
         libs = [S.StandardLib(cluster, f"host{r}") for r in range(args.ranks)]
     else:
         kv = None
         libs = []
         for r in range(args.ranks):
-            lib = S.ShiftLib(cluster, f"host{r}", kv=kv)
+            lib = S.ShiftLib(cluster, f"host{r}", kv=kv,
+                             config=S.ShiftConfig(
+                                 data_rails=max(1, args.channels)))
             kv = lib.kv
             libs.append(lib)
-    world = JcclWorld(cluster, libs, max_chunk_bytes=1 << 20)
+    world = JcclWorld(cluster, libs, max_chunk_bytes=1 << 20,
+                      channels=args.channels)
 
     model_cfg = (C.get_config("gpt2-124m") if args.full else
                  C.smoke_config("gpt2-124m", n_layers=4, d_model=256,
@@ -74,7 +81,8 @@ def main():
         cluster.recover_nic("host1/mlx5_0")
         libs2 = [S.StandardLib(cluster, f"host{r}")
                  for r in range(args.ranks)]
-        world2 = JcclWorld(cluster, libs2, max_chunk_bytes=1 << 20)
+        world2 = JcclWorld(cluster, libs2, max_chunk_bytes=1 << 20,
+                           channels=args.channels)
         run = resume_training(trainer, world2, rn, on_step=on_step)
 
     t_final, final_step, final_loss = run.timeline[-1]

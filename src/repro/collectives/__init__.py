@@ -4,8 +4,12 @@ Implements the paper's Table-1 'NCCL (Simple)' protocol: bulk RDMA Writes
 followed by a Write-with-Imm notification, which is exactly the traffic
 class SHIFT can fail over safely. See DESIGN.md §2 for how this maps the
 paper's GPU/NCCL placement onto a JAX training system (cross-host gradient
-sync / DCN-side traffic).
+sync / DCN-side traffic) and DESIGN.md §6 for the multi-rail channel
+layer (``channels=N`` stripes collectives across all host NICs with
+rail-aware SHIFT failover).
 """
 
-from .world import (JcclWorld, CollectiveError, RankEndpoint,  # noqa: F401
+from .channel import Channel, ChannelScheduler          # noqa: F401
+from .endpoint import RankEndpoint                      # noqa: F401
+from .world import (CollectiveError, JcclWorld,         # noqa: F401
                     build_world)

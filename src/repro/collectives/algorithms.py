@@ -1,0 +1,280 @@
+"""Collective algorithms as channel-striping chunk schedulers.
+
+Every algorithm is an event-driven actor: ``start()`` launches the first
+wave of chunks, ``on_notify`` consumes one delivered chunk and launches
+its successors, ``done()`` reports completion. Chunks go out through
+``JcclWorld.send(rank, peer, payload, tag, home)``: the *tag* identifies
+the chunk to the algorithm when the matching notify lands (so arrival
+order across channels does not matter), and *home* is the chunk's
+preferred channel — the scheduler honours it while the channel is
+healthy and resteers it otherwise.
+
+Striping units (each unit's chunk chain is ordered; units are
+independent, so they ride different rails concurrently):
+
+* all-reduce / reduce-scatter — **buckets**: each bucket runs the full
+  ring pipeline on its home channel.
+* all-gather — **shards**: each shard's trip around the ring is a chain.
+* broadcast — **chunks**: each pipeline chunk travels the root chain.
+* all-to-all — **pairs**: each (src, dst) row picks a channel by pair.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import numpy as np
+
+
+def _reduce(dst: np.ndarray, src: np.ndarray, op: str) -> None:
+    if op == "sum":
+        np.add(dst, src, out=dst)
+    elif op == "max":
+        np.maximum(dst, src, out=dst)
+    else:
+        raise ValueError(op)
+
+
+class _Collective:
+    tolerates_failure = False
+
+    def __init__(self, world):
+        self.world = world
+        self.tolerates_failure = world.any_shift
+
+    def start(self) -> None:
+        raise NotImplementedError
+
+    def on_notify(self, rank: int, peer: int, tag, ep, seq: int) -> None:
+        raise NotImplementedError
+
+    def done(self) -> bool:
+        raise NotImplementedError
+
+
+class _RingAllReduce(_Collective):
+    """Chunked, bucketed ring all-reduce (reduce-scatter + all-gather).
+
+    Buckets are independent ring pipelines striped across channels:
+    bucket b's home channel is ``b % channels``, so with two healthy
+    rails half the buckets flow on each. Within a bucket each rank has
+    at most one chunk in flight (recv step t gates send step t+1), so
+    per-bucket notifies always arrive in step order."""
+
+    def __init__(self, world, arrays: List[np.ndarray],
+                 op: str = "sum", phases: Tuple[str, ...] = ("rs", "ag")):
+        super().__init__(world)
+        n = world.n_ranks
+        assert len(arrays) == n
+        self.op = op
+        self.phases = phases
+        self.arrays = arrays
+        self.flat = [a.reshape(-1) for a in arrays]
+        self.dtype = self.flat[0].dtype
+        self.itemsize = self.dtype.itemsize
+        total = self.flat[0].size
+        # bucket so one chunk fits the staging slot
+        max_chunk_elems = world.max_chunk_bytes // self.itemsize
+        if total and max_chunk_elems == 0:
+            raise ValueError(
+                f"max_chunk_bytes={world.max_chunk_bytes} cannot hold one "
+                f"{self.dtype} element")
+        self.bucket_elems = min(total, max_chunk_elems * n)
+        self.n_buckets = ((total + self.bucket_elems - 1) // self.bucket_elems
+                          if self.bucket_elems else 0)
+        self.steps_per_bucket = len(phases) * max(n - 1, 0)
+        self.buckets_done = [0] * n
+        self.done_ranks = 0
+
+    # -- index helpers ------------------------------------------------------
+    def _chunk_bounds(self, bucket: int, chunk: int) -> Tuple[int, int]:
+        n = self.world.n_ranks
+        b0 = bucket * self.bucket_elems
+        b1 = min(b0 + self.bucket_elems, self.flat[0].size)
+        size = b1 - b0
+        per = (size + n - 1) // n
+        c0 = b0 + chunk * per
+        c1 = min(b0 + (chunk + 1) * per, b1)
+        return c0, max(c0, c1)
+
+    def _decode(self, step: int) -> Tuple[str, int]:
+        n1 = max(self.world.n_ranks - 1, 1)
+        return self.phases[step // n1], step % n1
+
+    def _send_for_step(self, rank: int, bucket: int, step: int) -> None:
+        if step >= self.steps_per_bucket:
+            self.buckets_done[rank] += 1
+            if self.buckets_done[rank] == self.n_buckets:
+                self.done_ranks += 1
+            return
+        n = self.world.n_ranks
+        phase, s = self._decode(step)
+        chunk = (rank - s) % n if phase == "rs" else (rank + 1 - s) % n
+        c0, c1 = self._chunk_bounds(bucket, chunk)
+        self.world.send(rank, (rank + 1) % n, self.flat[rank][c0:c1],
+                        tag=bucket * self.steps_per_bucket + step,
+                        home=bucket)
+
+    def start(self) -> None:
+        n = self.world.n_ranks
+        if n == 1 or self.steps_per_bucket == 0 or self.n_buckets == 0:
+            self.done_ranks = n
+            return
+        for r in range(n):
+            for b in range(self.n_buckets):
+                self._send_for_step(r, b, 0)
+
+    def on_notify(self, rank: int, peer: int, tag, ep, seq: int) -> None:
+        n = self.world.n_ranks
+        if peer != (rank - 1) % n or tag is None:
+            return
+        bucket, step = divmod(tag, self.steps_per_bucket)
+        phase, s = self._decode(step)
+        chunk = (rank - s - 1) % n if phase == "rs" else (rank - s) % n
+        c0, c1 = self._chunk_bounds(bucket, chunk)
+        stage = ep.staging_slot_view(
+            peer, seq, (c1 - c0) * self.itemsize).view(self.dtype)
+        if phase == "rs":
+            _reduce(self.flat[rank][c0:c1], stage, self.op)
+        else:
+            self.flat[rank][c0:c1] = stage
+        self._send_for_step(rank, bucket, step + 1)
+
+    def done(self) -> bool:
+        return self.done_ranks == self.world.n_ranks
+
+
+class _RingAllGather(_Collective):
+    """Ring all-gather over variable-size shards. Each shard's trip
+    around the ring is an independent chain (tag = shard index), so the
+    n shards stripe across channels and pipeline concurrently."""
+
+    def __init__(self, world, full: List[np.ndarray], sizes: List[int]):
+        super().__init__(world)
+        self.full = [f.reshape(-1) for f in full]
+        self.sizes = sizes
+        self.offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(int)
+        self.dtype = self.full[0].dtype
+        self.itemsize = self.dtype.itemsize
+        n = world.n_ranks
+        self.remaining = [n - 1] * n    # shards each rank still awaits
+        self.done_ranks = 0
+
+    def _forward(self, rank: int, shard: int) -> None:
+        n = self.world.n_ranks
+        nxt = (rank + 1) % n
+        if nxt == shard:
+            return  # the shard is back at its origin: chain complete
+        o0, o1 = self.offsets[shard], self.offsets[shard + 1]
+        self.world.send(rank, nxt, self.full[rank][o0:o1],
+                        tag=shard, home=shard)
+
+    def start(self) -> None:
+        n = self.world.n_ranks
+        if n == 1:
+            self.done_ranks = 1
+            return
+        for r in range(n):
+            self._forward(r, r)     # launch this rank's own shard
+
+    def on_notify(self, rank: int, peer: int, tag, ep, seq: int) -> None:
+        if peer != (rank - 1) % self.world.n_ranks or tag is None:
+            return
+        shard = tag
+        o0, o1 = self.offsets[shard], self.offsets[shard + 1]
+        stage = ep.staging_slot_view(
+            peer, seq, (o1 - o0) * self.itemsize).view(self.dtype)
+        self.full[rank][o0:o1] = stage
+        self.remaining[rank] -= 1
+        if self.remaining[rank] == 0:
+            self.done_ranks += 1
+        self._forward(rank, shard)
+
+    def done(self) -> bool:
+        return self.done_ranks == self.world.n_ranks
+
+
+class _PipelineBroadcast(_Collective):
+    """Chain broadcast root -> root+1 -> ... in pipelined chunks. Each
+    chunk travels the chain independently (tag = chunk index); the
+    per-peer send FIFO provides the flow control that used to be the
+    explicit pipeline-depth ratchet."""
+
+    def __init__(self, world, outs: List[np.ndarray], root: int):
+        super().__init__(world)
+        self.outs = [o.reshape(-1) for o in outs]
+        self.root = root
+        self.dtype = self.outs[0].dtype
+        self.itemsize = self.dtype.itemsize
+        per = world.max_chunk_bytes // self.itemsize
+        total = self.outs[0].size
+        self.chunks = [(i, min(i + per, total))
+                       for i in range(0, total, per)] or [(0, 0)]
+        n = world.n_ranks
+        self.remaining = [len(self.chunks)] * n
+        self.remaining[root] = 0
+        self.done_ranks = 1  # root is trivially done receiving
+
+    def start(self) -> None:
+        n = self.world.n_ranks
+        if n == 1:
+            return
+        nxt = (self.root + 1) % n
+        for ci, (c0, c1) in enumerate(self.chunks):
+            self.world.send(self.root, nxt, self.outs[self.root][c0:c1],
+                            tag=ci, home=ci)
+
+    def on_notify(self, rank: int, peer: int, tag, ep, seq: int) -> None:
+        n = self.world.n_ranks
+        if peer != (rank - 1) % n or tag is None:
+            return
+        c0, c1 = self.chunks[tag]
+        stage = ep.staging_slot_view(
+            peer, seq, (c1 - c0) * self.itemsize).view(self.dtype)
+        self.outs[rank][c0:c1] = stage
+        self.remaining[rank] -= 1
+        if self.remaining[rank] == 0:
+            self.done_ranks += 1
+        nxt = (rank + 1) % n
+        if nxt != self.root:
+            self.world.send(rank, nxt, self.outs[rank][c0:c1],
+                            tag=tag, home=tag)
+
+    def done(self) -> bool:
+        return self.done_ranks == self.world.n_ranks
+
+
+class _AllToAll(_Collective):
+    """Direct-write all-to-all (MoE dispatch traffic pattern). Each
+    (src, dst) pair is one message; pairs spread across channels by
+    ``(src + dst) % channels`` so a 2-rail world carries half the rows
+    on each rail."""
+
+    def __init__(self, world, mats: List[np.ndarray],
+                 outs: List[np.ndarray]):
+        super().__init__(world)
+        self.mats = mats
+        self.outs = outs
+        n = world.n_ranks
+        self.expected = [n - 1] * n
+        self.received = [0] * n
+        self.dtype = mats[0].dtype
+        self.rowbytes = mats[0][0].nbytes
+
+    def start(self) -> None:
+        n = self.world.n_ranks
+        for r in range(n):
+            self.outs[r][r] = self.mats[r][r]  # local row
+            for peer in range(n):
+                if peer == r:
+                    continue
+                self.world.send(r, peer, self.mats[r][peer],
+                                tag=r, home=r + peer)
+
+    def on_notify(self, rank: int, peer: int, tag, ep, seq: int) -> None:
+        stage = ep.staging_slot_view(peer, seq, self.rowbytes).view(self.dtype)
+        self.outs[rank][peer] = stage.reshape(self.outs[rank][peer].shape)
+        self.received[rank] += 1
+
+    def done(self) -> bool:
+        return all(r >= e for r, e in zip(self.received, self.expected))

@@ -1,0 +1,227 @@
+"""Channels: one per-rail communicator mesh + the chunk scheduler.
+
+A :class:`Channel` is a complete QP mesh over ONE rail of the cluster:
+every rank opens the rail's NIC, wires a QP to every peer, and routes
+that rail's completions. ``JcclWorld`` owns ``N = channels`` of these and
+stripes collective traffic across them through a
+:class:`ChannelScheduler` that tracks per-channel health and backlog and
+resteers chunks away from a channel whose SHIFT endpoint is degraded
+(FALLBACK — riding its backup rail) or down (FAILED / QP in error).
+
+Health is per (rank, peer) link, not per channel globally: a rail that
+died for one host pair can still carry other pairs' traffic.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Sequence
+
+from repro.core import verbs as V
+from repro.core.shift import RecvState, SendState, ShiftQP
+
+from .endpoint import IMM_SEQ_MASK, RankEndpoint
+
+#: link-health vocabulary, best to worst
+HEALTH_OK = "ok"
+HEALTH_DEGRADED = "degraded"
+HEALTH_DOWN = "down"
+
+
+def _qp_health(qp) -> str:
+    if isinstance(qp, ShiftQP):
+        if qp.send_state is SendState.FAILED:
+            return HEALTH_DOWN
+        if (qp.send_state is not SendState.DEFAULT
+                or qp.recv_state is not RecvState.DEFAULT):
+            return HEALTH_DEGRADED
+        return HEALTH_OK
+    if qp.state is V.QPState.ERR:
+        return HEALTH_DOWN
+    return HEALTH_OK
+
+
+class Channel:
+    """One rail's endpoint mesh + notify routing and per-rail counters."""
+
+    def __init__(self, world, index: int, libs: Sequence,
+                 nic_names: Sequence[str]):
+        self.world = world
+        self.index = index
+        self.nic_names = list(nic_names)
+        self.endpoints: List[RankEndpoint] = [
+            RankEndpoint(self, r, lib, nic_names[r])
+            for r, lib in enumerate(libs)]
+        n = len(self.endpoints)
+        # full QP mesh + app-level OOB route exchange
+        for i, j in itertools.combinations(range(n), 2):
+            qi, qj = self.endpoints[i].make_qp(j), self.endpoints[j].make_qp(i)
+            gi, ni = self.endpoints[i].lib.route_of(qi)
+            gj, nj = self.endpoints[j].lib.route_of(qj)
+            self.endpoints[i].lib.connect(qi, gj, nj)
+            self.endpoints[j].lib.connect(qj, gi, ni)
+        for ep in self.endpoints:
+            ep.attach_listener(lambda wcs, ep=ep: self._on_wcs(ep, wcs))
+            for peer in ep.qps:
+                for _ in range(world.recv_prepost):
+                    ep.post_recv_notify(peer)
+        # per-rail counters (world-level totals are sums over channels)
+        self.total_notifies = 0
+        self.order_violations = 0
+        self.duplicate_notifies = 0
+        self.chunks_delivered = 0
+        self.bytes_sent = 0
+
+    # ------------------------------------------------------------------
+    # data plane
+    # ------------------------------------------------------------------
+    def send(self, rank: int, peer: int, payload, tag) -> None:
+        """Send one tagged chunk rank -> peer on this rail. The tag is
+        returned to the active collective when the matching notify lands
+        (the world keys it by this channel + the FIFO sequence number)."""
+        ep = self.endpoints[rank]
+        seq = ep.send_chunk(peer, payload)
+        self.world._tags[(self.index, peer, rank, seq)] = tag
+        self.bytes_sent += payload.nbytes
+
+    def link_state(self, rank: int, peer: int) -> str:
+        """Worst-case health of the rank<->peer link on this rail."""
+        worst = HEALTH_OK
+        for a, b in ((rank, peer), (peer, rank)):
+            qp = self.endpoints[a].qps.get(b)
+            if qp is None:
+                continue
+            h = _qp_health(qp)
+            if h == HEALTH_DOWN:
+                return HEALTH_DOWN
+            if h == HEALTH_DEGRADED:
+                worst = HEALTH_DEGRADED
+        return worst
+
+    # ------------------------------------------------------------------
+    # completion routing
+    # ------------------------------------------------------------------
+    def _on_wcs(self, ep: RankEndpoint, wcs: List[V.WC]) -> None:
+        world = self.world
+        for wc in wcs:
+            if wc.is_error:
+                ep.errors.append(wc)
+                world.failed = True
+                world.fail_wc = wc
+                continue
+            if wc.opcode is V.WCOpcode.RDMA_WRITE:
+                peer = ep.qp_of_qpn.get(wc.qp_num)
+                if peer is not None:
+                    ep.on_send_complete(peer)
+                continue
+            if wc.opcode is V.WCOpcode.RECV_RDMA_WITH_IMM:
+                peer = ep.qp_of_qpn.get(wc.qp_num)
+                if peer is None:
+                    continue
+                seq = ep.recv_seq[peer]
+                self.total_notifies += 1
+                ep.post_recv_notify(peer)
+                # notification-ordering invariant (what SHIFT preserves):
+                # each fault counts once and is DROPPED — a duplicate
+                # doesn't consume a sequence slot, a skip resyncs
+                # expectation past the gap; the collective never sees a
+                # bad notify (it stalls loudly instead of corrupting data)
+                if wc.imm_data != seq & IMM_SEQ_MASK:
+                    self._notify_anomaly(ep, peer, seq, wc.imm_data)
+                    continue
+                ep.recv_seq[peer] = seq + 1
+                world._dispatch_notify(self, ep, peer, seq)
+
+    def _notify_anomaly(self, ep: RankEndpoint, peer: int, seq: int,
+                        imm: int) -> None:
+        """Classify a mismatched notify with BOUNDED bookkeeping: only
+        skipped-past seqs are remembered (see ``missing_notifies``), not
+        every imm ever delivered."""
+        delta = (imm - seq) & IMM_SEQ_MASK
+        missing = ep.missing_notifies[peer]
+        if delta >= 1 << 27:        # behind the in-order watermark
+            if imm in missing:      # a skipped notify arriving late
+                missing.discard(imm)
+                self.order_violations += 1
+            else:                   # already consumed once
+                self.duplicate_notifies += 1
+        else:                       # ahead: a gap was skipped — resync
+            self.order_violations += 1
+            if delta <= 4096:       # remember the gap (bounded by faults)
+                for s in range(seq, seq + delta):
+                    missing.add(s & IMM_SEQ_MASK)
+                    # the skipped chunks will never dispatch: reclaim
+                    # their tags and scheduler backlog so later picks
+                    # aren't biased by phantom in-flight chunks
+                    self.world._drop_tag(self, ep.rank, peer, s)
+            ep.recv_seq[peer] = seq + delta + 1
+        assert not self.world.strict_order, (
+            f"rank {ep.rank} ch{self.index}: notify out of order "
+            f"({imm} != {seq & IMM_SEQ_MASK})")
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        sched = self.world.scheduler
+        return {
+            "channel": self.index,
+            "nics": sorted(set(self.nic_names)),
+            "chunks_assigned": sched.assigned[self.index],
+            "chunks_delivered": self.chunks_delivered,
+            "bytes_sent": self.bytes_sent,
+            "total_notifies": self.total_notifies,
+            "order_violations": self.order_violations,
+            "duplicate_notifies": self.duplicate_notifies,
+        }
+
+
+class ChannelScheduler:
+    """Assigns chunks to channels: round-robin by the chunk's home channel
+    in the common case, resteered to the healthiest/least-backlogged
+    channel when the home link is degraded or down.
+
+    Deterministic: decisions depend only on virtual-clock-driven QP state
+    and the scheduler's own counters, so same-seed runs make identical
+    choices (the campaign fingerprint covers them).
+    """
+
+    def __init__(self, world):
+        self.world = world
+        self.n = len(world.channels)
+        self.assigned: List[int] = [0] * self.n
+        self.inflight: List[int] = [0] * self.n
+        self.resteered = 0
+
+    def pick(self, rank: int, peer: int, home: int) -> int:
+        home %= self.n
+        if self.n == 1:
+            self.assigned[0] += 1
+            self.inflight[0] += 1
+            return 0
+        states = [self.world.channels[c].link_state(rank, peer)
+                  for c in range(self.n)]
+        # prefer fully-healthy channels; fall back to degraded ones
+        # (FALLBACK still delivers, just on the backup rail); if every
+        # channel is down, post on the home anyway so the failure
+        # surfaces as an error instead of a silent stall.
+        pool = ([c for c in range(self.n) if states[c] == HEALTH_OK]
+                or [c for c in range(self.n) if states[c] == HEALTH_DEGRADED]
+                or list(range(self.n)))
+        if home in pool:
+            choice = home
+        else:
+            choice = min(pool, key=lambda c: (self.inflight[c],
+                                              (c - home) % self.n))
+            self.resteered += 1
+        self.assigned[choice] += 1
+        self.inflight[choice] += 1
+        return choice
+
+    def note_delivered(self, channel: int) -> None:
+        self.inflight[channel] -= 1
+
+    def snapshot(self) -> Dict[str, object]:
+        return {"assigned": list(self.assigned),
+                "inflight": list(self.inflight),
+                "resteered": self.resteered}

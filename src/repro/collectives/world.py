@@ -1,187 +1,38 @@
-"""JCCL communicator world: rank endpoints, QP mesh, staging buffers, and
-the event-driven collective engine (ring/direct algorithms).
+"""JCCL communicator world: a thin façade over N per-rail channels.
 
-Everything runs as actors on the cluster's deterministic event loop, so
-failures can be injected at ANY point inside a collective and the result
-is still reproducible. With ``ShiftLib`` endpoints, NIC/link failures are
-masked (the collective completes, possibly slower); with ``StandardLib``
-endpoints the collective aborts with ``CollectiveError`` — the paper's
-crash-stop baseline.
+``JcclWorld`` owns ``channels`` :class:`~repro.collectives.channel.Channel`
+meshes (one per host rail) plus a
+:class:`~repro.collectives.channel.ChannelScheduler` that stripes
+collective chunks across them. Everything runs as actors on the cluster's
+deterministic event loop, so failures can be injected at ANY point inside
+a collective and the result is still reproducible. With ``ShiftLib``
+endpoints, NIC/link failures are masked (the collective completes,
+possibly slower, with the scheduler resteering chunks off the degraded
+rail); with ``StandardLib`` endpoints the collective aborts with
+``CollectiveError`` — the paper's crash-stop baseline.
+
+Layout: per-rail endpoints live in ``endpoint.py``, channel mesh +
+scheduler in ``channel.py``, the collective algorithms (chunk schedulers)
+in ``algorithms.py``. This module is the public API.
 """
 
 from __future__ import annotations
 
-import itertools
-from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import verbs as V
 from repro.core.fabric import Cluster
-from repro.core.shift import ShiftLib, StandardLib, ShiftCQ
+from repro.core.shift import ShiftLib, StandardLib
+
+from .algorithms import (_AllToAll, _Collective, _PipelineBroadcast,
+                         _RingAllGather, _RingAllReduce)
+from .channel import Channel, ChannelScheduler
+from .endpoint import RankEndpoint, _ListenedCQ  # noqa: F401 (re-export)
 
 
 class CollectiveError(RuntimeError):
     pass
-
-
-class _ListenedCQ:
-    """StandardLib CQ with a completion-channel push listener (the ShiftCQ
-    equivalent of app_listener for the baseline library)."""
-
-    def __init__(self, ctx: V.Context, depth: int):
-        self.channel = V.ibv_create_comp_channel(ctx)
-        self.cq = V.ibv_create_cq(ctx, depth, self.channel)
-        self.channel.on_event(self._on_event)
-        V.ibv_req_notify_cq(self.cq)
-        self.app_listener: Optional[Callable[[List[V.WC]], None]] = None
-
-    def _on_event(self, cq: V.CQ) -> None:
-        V.ibv_req_notify_cq(cq)
-        self.drain()
-
-    def drain(self) -> None:
-        out = []
-        while True:
-            wcs = self.cq.poll(64)
-            if not wcs:
-                break
-            out.extend(wcs)
-        if out and self.app_listener is not None:
-            self.app_listener(out)
-
-
-class RankEndpoint:
-    """One collective rank: device/PD/MRs/CQ + a QP per peer."""
-
-    def __init__(self, world: "JcclWorld", rank: int, lib, nic: str):
-        self.world = world
-        self.rank = rank
-        self.lib = lib
-        self.nic = nic
-        self.ctx = lib.open_device(nic)
-        self.pd = lib.alloc_pd(self.ctx)
-        n = world.n_ranks
-        slot = world.max_chunk_bytes
-        self.K = world.src_slots
-        # Inbound staging: per peer, K slots addressed by message sequence
-        # (slot = seq % K). The staging depth EQUALS the sender's outbound
-        # FIFO depth, so the at-most-K in-flight messages to a peer always
-        # occupy distinct slots — credit-based flow control that stays
-        # correct even when a coalesced segment delivers a whole burst at
-        # one virtual instant (the old 2-slot parity scheme relied on
-        # inter-message event spacing and broke under doorbell coalescing).
-        self.staging = np.zeros(n * self.K * slot, dtype=np.uint8)
-        self.staging_mr = lib.reg_mr(self.pd, self.staging)
-        # Outbound FIFO: per peer, K slots. A slot may only be reused once
-        # the send that references it has COMPLETED (ACKed or synthesized):
-        # payloads are DMA-read at (re)transmit time, so reusing the slot
-        # of an unACKed send would corrupt a post-failover retransmission.
-        # This mirrors NCCL's completion-gated FIFO reuse.
-        self.src = np.zeros(n * self.K * slot, dtype=np.uint8)
-        self.src_mr = lib.reg_mr(self.pd, self.src)
-        self.send_completed: Dict[int, int] = {}
-        self.pending_sends: Dict[int, List] = {}
-        if isinstance(lib, ShiftLib):
-            self.cq: ShiftCQ = lib.create_cq(self.ctx, world.cq_depth)
-            self._listened = None
-        else:
-            self._listened = _ListenedCQ(self.ctx, world.cq_depth)
-            self.cq = self._listened.cq
-        self.qps: Dict[int, object] = {}       # peer rank -> QP
-        self.qp_of_qpn: Dict[int, int] = {}    # qpn -> peer rank
-        self.send_seq: Dict[int, int] = {}
-        self.recv_seq: Dict[int, int] = {}
-        self.seen_notifies: Dict[int, set] = {}  # peer -> imm values seen
-        self.errors: List[V.WC] = []
-        self._handlers: Dict[int, object] = {}  # active collective
-
-    # -- wiring ---------------------------------------------------------
-    def make_qp(self, peer: int):
-        if isinstance(self.lib, ShiftLib):
-            qp = self.lib.create_qp(self.pd, V.QPInitAttr(
-                send_cq=self.cq, recv_cq=self.cq,
-                cap=V.QPCap(self.world.qp_depth, self.world.qp_depth)))
-        else:
-            qp = self.lib.create_qp(self.pd, V.QPInitAttr(
-                send_cq=self.cq, recv_cq=self.cq,
-                cap=V.QPCap(self.world.qp_depth, self.world.qp_depth)))
-        self.qps[peer] = qp
-        self.qp_of_qpn[qp.qpn] = peer
-        self.send_seq[peer] = 0
-        self.recv_seq[peer] = 0
-        self.seen_notifies[peer] = set()
-        self.send_completed[peer] = 0
-        self.pending_sends[peer] = []
-        return qp
-
-    def attach_listener(self, fn: Callable[[List[V.WC]], None]) -> None:
-        if isinstance(self.lib, ShiftLib):
-            self.cq.app_listener = fn
-        else:
-            self._listened.app_listener = fn
-
-    # -- staging layout ---------------------------------------------------
-    def staging_slot_addr(self, peer: int, seq: int) -> int:
-        slot = self.world.max_chunk_bytes
-        off = (peer * self.K + seq % self.K) * slot
-        return self.staging_mr.addr + off
-
-    def staging_slot_view(self, peer: int, seq: int, nbytes: int) -> np.ndarray:
-        slot = self.world.max_chunk_bytes
-        off = (peer * self.K + seq % self.K) * slot
-        return self.staging[off:off + nbytes]
-
-    # -- data-plane helpers -------------------------------------------------
-    def post_recv_notify(self, peer: int) -> None:
-        self.lib.post_recv(self.qps[peer], V.RecvWR(wr_id=peer))
-
-    def send_chunk(self, peer: int, payload: np.ndarray) -> None:
-        """NCCL-Simple message: bulk WRITE (unsignaled) into the peer's
-        staging slot ``send_seq % K`` + WRITE_IMM notification (signaled).
-        If all outbound FIFO slots for this peer are in flight, the
-        payload is held until a completion frees one (completion-gated
-        reuse).
-
-        Ownership rule (zero-copy): a chunk handed to ``send_chunk`` must
-        stay byte-stable until it is copied into the outbound FIFO slot at
-        post time. The ring collectives guarantee this causally — any
-        later write to the same flat range is triggered by a notify that
-        is downstream of THIS chunk's delivery around the ring, so a
-        still-pending (unposted) send can never be overwritten. A held
-        view therefore suffices; no defensive copy."""
-        if self.send_seq[peer] - self.send_completed[peer] >= self.K:
-            self.pending_sends[peer].append(payload.view(np.uint8).ravel())
-            return
-        self._post_chunk(peer, payload.view(np.uint8).ravel())
-
-    def _post_chunk(self, peer: int, raw: np.ndarray) -> None:
-        nbytes = raw.nbytes
-        seq = self.send_seq[peer]
-        self.send_seq[peer] = seq + 1
-        src_off = (peer * self.K + seq % self.K) * self.world.max_chunk_bytes
-        self.src[src_off:src_off + nbytes] = raw
-        remote = self.world.endpoints[peer]
-        remote_addr = remote.staging_slot_addr(self.rank, seq)
-        qp = self.qps[peer]
-        if nbytes:
-            self.lib.post_send(qp, V.SendWR(
-                wr_id=seq, opcode=V.Opcode.WRITE,
-                sge=V.SGE(self.src_mr.addr + src_off, nbytes, self.src_mr.lkey),
-                remote_addr=remote_addr, rkey=remote.staging_mr.rkey,
-                send_flags=0))
-        self.lib.post_send(qp, V.SendWR(
-            wr_id=seq, opcode=V.Opcode.WRITE_IMM, sge=None,
-            remote_addr=0, rkey=remote.staging_mr.rkey,
-            imm_data=seq & 0x0FFFFFFF,
-            send_flags=V.SEND_FLAG_SIGNALED))
-
-    def on_send_complete(self, peer: int) -> None:
-        self.send_completed[peer] += 1
-        if self.pending_sends[peer] and (
-                self.send_seq[peer] - self.send_completed[peer] < self.K):
-            self._post_chunk(peer, self.pending_sends[peer].pop(0))
 
 
 class JcclWorld:
@@ -190,91 +41,104 @@ class JcclWorld:
     def __init__(self, cluster: Cluster, libs: Sequence, nic: str = "mlx5_0",
                  max_chunk_bytes: int = 1 << 22, qp_depth: int = 8192,
                  cq_depth: int = 1 << 17, recv_prepost: int = 64,
-                 src_slots: int = 4, strict_order: bool = True):
+                 src_slots: int = 4, strict_order: bool = True,
+                 channels: int = 1):
         self.cluster = cluster
         self.sim = cluster.sim
+        self.libs = list(libs)
         self.n_ranks = len(libs)
         # notification invariants (what SHIFT preserves across failover):
         # violations are always counted; strict_order additionally makes
         # an out-of-order notify fatal (the historical behaviour). The
         # scenario engine runs non-strict and asserts the counters post-run.
         self.strict_order = strict_order
-        self.order_violations = 0
-        self.duplicate_notifies = 0
-        self.total_notifies = 0
         self.max_chunk_bytes = max_chunk_bytes
         self.qp_depth = qp_depth
         self.cq_depth = cq_depth
         self.recv_prepost = recv_prepost
         self.src_slots = src_slots
-        self.endpoints: List[RankEndpoint] = [
-            RankEndpoint(self, r, lib, nic) for r, lib in enumerate(libs)]
-        # full QP mesh + app-level OOB route exchange
-        for i, j in itertools.combinations(range(self.n_ranks), 2):
-            qi, qj = self.endpoints[i].make_qp(j), self.endpoints[j].make_qp(i)
-            gi, ni = self.endpoints[i].lib.route_of(qi)
-            gj, nj = self.endpoints[j].lib.route_of(qj)
-            self.endpoints[i].lib.connect(qi, gj, nj)
-            self.endpoints[j].lib.connect(qj, gi, ni)
-        for ep in self.endpoints:
-            ep.attach_listener(lambda wcs, ep=ep: self._on_wcs(ep, wcs))
-            for peer in ep.qps:
-                for _ in range(recv_prepost):
-                    ep.post_recv_notify(peer)
+        self.n_channels = max(1, channels)
+        self.channels: List[Channel] = [
+            Channel(self, c, self.libs,
+                    [self._nic_name(lib, c, nic) for lib in self.libs])
+            for c in range(self.n_channels)]
+        self.scheduler = ChannelScheduler(self)
+        # (channel, receiver, sender, seq) -> in-flight chunk tag
+        self._tags: Dict[Tuple[int, int, int, int], object] = {}
         # settle shadow control verbs (no-op for StandardLib worlds)
         self.sim.run(until=self.sim.now + 0.05)
-        self._active: Optional["_Collective"] = None
+        self._active: Optional[_Collective] = None
         self.failed = False
-        self.fail_wc: Optional[V.WC] = None
+        self.fail_wc = None
+
+    def _nic_name(self, lib, channel: int, nic: str) -> str:
+        """Channel c rides NIC index c of each host; the single-channel
+        world keeps the historical explicit ``nic`` parameter."""
+        if self.n_channels == 1:
+            return nic
+        nics = self.cluster.hosts[lib.host].nics
+        if channel >= len(nics):
+            raise ValueError(
+                f"channels={self.n_channels} but host {lib.host} has only "
+                f"{len(nics)} NICs")
+        return nics[channel].name
+
+    # -- single-channel compatibility aliases ---------------------------
+    @property
+    def endpoints(self) -> List[RankEndpoint]:
+        """Channel 0's endpoint mesh (the historical single-rail view)."""
+        return self.channels[0].endpoints
+
+    @property
+    def total_notifies(self) -> int:
+        return sum(ch.total_notifies for ch in self.channels)
+
+    @property
+    def order_violations(self) -> int:
+        return sum(ch.order_violations for ch in self.channels)
+
+    @property
+    def duplicate_notifies(self) -> int:
+        return sum(ch.duplicate_notifies for ch in self.channels)
 
     # ------------------------------------------------------------------
-    # completion routing
+    # striped data plane
     # ------------------------------------------------------------------
-    def _on_wcs(self, ep: RankEndpoint, wcs: List[V.WC]) -> None:
-        for wc in wcs:
-            if wc.is_error:
-                ep.errors.append(wc)
-                self.failed = True
-                self.fail_wc = wc
-                continue
-            if wc.opcode is V.WCOpcode.RDMA_WRITE:
-                peer = ep.qp_of_qpn.get(wc.qp_num)
-                if peer is not None:
-                    ep.on_send_complete(peer)
-                continue
-            if wc.opcode is V.WCOpcode.RECV_RDMA_WITH_IMM:
-                peer = ep.qp_of_qpn.get(wc.qp_num)
-                if peer is None:
-                    continue
-                seq = ep.recv_seq[peer]
-                self.total_notifies += 1
-                ep.post_recv_notify(peer)
-                # notification-ordering invariant (what SHIFT preserves):
-                # each fault counts once and is DROPPED — a duplicate
-                # doesn't consume a sequence slot, a skip resyncs
-                # expectation past the gap; the collective never sees a
-                # bad notify (it stalls loudly instead of corrupting data)
-                if wc.imm_data != seq & 0x0FFFFFFF:
-                    if wc.imm_data in ep.seen_notifies[peer]:
-                        self.duplicate_notifies += 1
-                    else:
-                        self.order_violations += 1
-                        ep.recv_seq[peer] = (seq & ~0x0FFFFFFF) \
-                            + wc.imm_data + 1
-                    ep.seen_notifies[peer].add(wc.imm_data)
-                    assert not self.strict_order, (
-                        f"rank {ep.rank}: notify out of order "
-                        f"({wc.imm_data} != {seq})")
-                    continue
-                ep.recv_seq[peer] = seq + 1
-                ep.seen_notifies[peer].add(wc.imm_data)
-                if self._active is not None:
-                    self._active.on_notify(ep.rank, peer, seq)
+    def send(self, rank: int, peer: int, payload: np.ndarray, tag,
+             home: Optional[int] = None) -> int:
+        """Send one tagged chunk, striping across channels: ``home``
+        (default: the tag) names the chunk's preferred channel; the
+        scheduler resteers it if that channel's link is degraded or
+        down. Returns the channel the chunk actually took."""
+        if home is None:
+            home = tag if isinstance(tag, int) else 0
+        c = self.scheduler.pick(rank, peer, home)
+        self.channels[c].send(rank, peer, payload, tag)
+        return c
+
+    def _drop_tag(self, channel: Channel, rank: int, peer: int,
+                  seq: int) -> None:
+        """Forget a chunk whose notify was dropped by the anomaly path:
+        it will never dispatch, so its tag entry and the scheduler's
+        in-flight count must not linger (a leak here would bias every
+        later resteer decision against the channel)."""
+        tag = self._tags.pop((channel.index, rank, peer, seq), None)
+        if tag is not None:
+            self.scheduler.note_delivered(channel.index)
+
+    def _dispatch_notify(self, channel: Channel, ep: RankEndpoint,
+                         peer: int, seq: int) -> None:
+        tag = self._tags.pop((channel.index, ep.rank, peer, seq), None)
+        if tag is not None:
+            self.scheduler.note_delivered(channel.index)
+            channel.chunks_delivered += 1
+        if self._active is not None:
+            self._active.on_notify(ep.rank, peer, tag, ep, seq)
 
     # ------------------------------------------------------------------
     # collective driver
     # ------------------------------------------------------------------
-    def _run(self, coll: "_Collective", timeout: float) -> None:
+    def _run(self, coll: _Collective, timeout: float) -> None:
         if self._active is not None:
             raise CollectiveError("another collective is in flight")
         self._active = coll
@@ -296,7 +160,7 @@ class JcclWorld:
 
     @property
     def any_shift(self) -> bool:
-        return any(isinstance(ep.lib, ShiftLib) for ep in self.endpoints)
+        return any(isinstance(lib, ShiftLib) for lib in self.libs)
 
     # -- public API -------------------------------------------------------
     def allreduce(self, arrays: List[np.ndarray], op: str = "sum",
@@ -361,9 +225,9 @@ class JcclWorld:
                         for _ in range(self.n_ranks)], timeout=timeout)
 
     def stats_snapshot(self) -> Dict[str, object]:
-        """Aggregate SHIFT + notification stats for campaign reports."""
-        shift_libs = [ep.lib for ep in self.endpoints
-                      if isinstance(ep.lib, ShiftLib)]
+        """Aggregate SHIFT + notification + per-channel stats for
+        campaign reports."""
+        shift_libs = [lib for lib in self.libs if isinstance(lib, ShiftLib)]
         return {
             "fallbacks": sum(l.stats.fallbacks for l in shift_libs),
             "recoveries": sum(l.stats.recoveries for l in shift_libs),
@@ -376,23 +240,35 @@ class JcclWorld:
             "total_notifies": self.total_notifies,
             "order_violations": self.order_violations,
             "duplicate_notifies": self.duplicate_notifies,
-            "rank_errors": [len(ep.errors) for ep in self.endpoints],
+            "rank_errors": [sum(len(ch.endpoints[r].errors)
+                                for ch in self.channels)
+                            for r in range(self.n_ranks)],
+            "channels": [ch.stats() for ch in self.channels],
+            "scheduler": self.scheduler.snapshot(),
         }
 
 
 def build_world(n_ranks: int = 2, lib_kind: str = "shift",
                 nics_per_host: int = 2, probe_interval: float = 5e-3,
                 max_chunk_bytes: int = 1 << 16, strict_order: bool = True,
-                fast: bool = True,
+                fast: bool = True, channels: int = 1,
                 **world_kw) -> Tuple[Cluster, List, JcclWorld]:
     """Scenario-harness entry point: a fresh cluster + per-rank libs + a
     fully wired JcclWorld. Consolidates the setup previously copy-pasted
     across tests and benchmarks; the campaign engine drives it directly.
     ``fast`` selects the coalescing zero-copy datapath (default); pass
-    False to run on the legacy per-WQE event chain."""
+    False to run on the legacy per-WQE event chain. ``channels`` stripes
+    collectives across that many rails (requires ``nics_per_host >=
+    channels``); SHIFT backup placement is made rail-aware via
+    ``ShiftConfig.data_rails`` so channels prefer spare rails over each
+    other's default rails."""
+    from repro.core import verbs as V
     from repro.core.fabric import build_cluster
     from repro.core.shift import ShiftConfig
 
+    if channels > nics_per_host:
+        raise ValueError(f"channels={channels} > nics_per_host="
+                         f"{nics_per_host}")
     V.reset_registries()
     cluster = build_cluster(n_hosts=n_ranks, nics_per_host=nics_per_host)
     cluster.fast_datapath = fast
@@ -401,288 +277,13 @@ def build_world(n_ranks: int = 2, lib_kind: str = "shift",
         kv = None
         for r in range(n_ranks):
             lib = ShiftLib(cluster, f"host{r}", kv=kv,
-                           config=ShiftConfig(probe_interval=probe_interval))
+                           config=ShiftConfig(probe_interval=probe_interval,
+                                              data_rails=max(1, channels)))
             kv = lib.kv
             libs.append(lib)
     else:
         libs = [StandardLib(cluster, f"host{r}") for r in range(n_ranks)]
     world = JcclWorld(cluster, libs, max_chunk_bytes=max_chunk_bytes,
-                      strict_order=strict_order, **world_kw)
+                      strict_order=strict_order, channels=channels,
+                      **world_kw)
     return cluster, libs, world
-
-
-# ---------------------------------------------------------------------------
-# collective algorithms (event-driven actors)
-# ---------------------------------------------------------------------------
-
-
-def _reduce(dst: np.ndarray, src: np.ndarray, op: str) -> None:
-    if op == "sum":
-        np.add(dst, src, out=dst)
-    elif op == "max":
-        np.maximum(dst, src, out=dst)
-    else:
-        raise ValueError(op)
-
-
-class _Collective:
-    tolerates_failure = False
-
-    def __init__(self, world: JcclWorld):
-        self.world = world
-        self.tolerates_failure = world.any_shift
-
-    def start(self) -> None:
-        raise NotImplementedError
-
-    def on_notify(self, rank: int, peer: int, seq: int) -> None:
-        raise NotImplementedError
-
-    def done(self) -> bool:
-        raise NotImplementedError
-
-
-class _RingAllReduce(_Collective):
-    """Chunked, bucketed ring all-reduce (reduce-scatter + all-gather)."""
-
-    def __init__(self, world: JcclWorld, arrays: List[np.ndarray],
-                 op: str = "sum", phases: Tuple[str, ...] = ("rs", "ag")):
-        super().__init__(world)
-        n = world.n_ranks
-        assert len(arrays) == n
-        self.op = op
-        self.phases = phases
-        self.arrays = arrays
-        self.flat = [a.reshape(-1) for a in arrays]
-        self.dtype = self.flat[0].dtype
-        self.itemsize = self.dtype.itemsize
-        total = self.flat[0].size
-        # bucket so one chunk fits the staging slot
-        max_chunk_elems = world.max_chunk_bytes // self.itemsize
-        self.bucket_elems = min(total, max_chunk_elems * n)
-        self.n_buckets = (total + self.bucket_elems - 1) // self.bucket_elems
-        # per-rank progress
-        self.recv_step = [0] * n          # notifications processed
-        self.total_steps = self.n_buckets * len(phases) * max(n - 1, 0)
-        self.done_ranks = 0
-        self._completed = [False] * n
-
-    # -- index helpers ------------------------------------------------------
-    def _chunk_bounds(self, bucket: int, chunk: int) -> Tuple[int, int]:
-        n = self.world.n_ranks
-        b0 = bucket * self.bucket_elems
-        b1 = min(b0 + self.bucket_elems, self.flat[0].size)
-        size = b1 - b0
-        per = (size + n - 1) // n
-        c0 = b0 + chunk * per
-        c1 = min(b0 + (chunk + 1) * per, b1)
-        return c0, max(c0, c1)
-
-    def _decode(self, step: int) -> Tuple[int, str, int]:
-        n1 = max(self.world.n_ranks - 1, 1)
-        per_bucket = len(self.phases) * n1
-        bucket = step // per_bucket
-        rem = step % per_bucket
-        phase = self.phases[rem // n1]
-        s = rem % n1
-        return bucket, phase, s
-
-    def _send_for_step(self, rank: int, step: int) -> None:
-        if step >= self.total_steps:
-            if not self._completed[rank]:
-                self._completed[rank] = True
-                self.done_ranks += 1
-            return
-        n = self.world.n_ranks
-        bucket, phase, s = self._decode(step)
-        if phase == "rs":
-            chunk = (rank - s) % n
-        else:
-            chunk = (rank + 1 - s) % n
-        c0, c1 = self._chunk_bounds(bucket, chunk)
-        payload = self.flat[rank][c0:c1]
-        right = (rank + 1) % n
-        self.world.endpoints[rank].send_chunk(right, payload)
-
-    def start(self) -> None:
-        n = self.world.n_ranks
-        if n == 1 or self.total_steps == 0:
-            self.done_ranks = n
-            for i in range(n):
-                self._completed[i] = True
-            return
-        for r in range(n):
-            self._send_for_step(r, 0)
-
-    def on_notify(self, rank: int, peer: int, seq: int) -> None:
-        n = self.world.n_ranks
-        left = (rank - 1) % n
-        if peer != left:
-            return
-        step = self.recv_step[rank]
-        self.recv_step[rank] = step + 1
-        bucket, phase, s = self._decode(step)
-        if phase == "rs":
-            chunk = (rank - s - 1) % n
-        else:
-            chunk = (rank - s) % n
-        c0, c1 = self._chunk_bounds(bucket, chunk)
-        nbytes = (c1 - c0) * self.itemsize
-        ep = self.world.endpoints[rank]
-        stage = ep.staging_slot_view(left, seq, nbytes).view(self.dtype)
-        if phase == "rs":
-            _reduce(self.flat[rank][c0:c1], stage, self.op)
-        else:
-            self.flat[rank][c0:c1] = stage
-        self._send_for_step(rank, step + 1)
-
-    def done(self) -> bool:
-        return self.done_ranks == self.world.n_ranks
-
-
-class _RingAllGather(_Collective):
-    """Ring all-gather over variable-size shards."""
-
-    def __init__(self, world: JcclWorld, full: List[np.ndarray],
-                 sizes: List[int]):
-        super().__init__(world)
-        self.full = [f.reshape(-1) for f in full]
-        self.sizes = sizes
-        self.offsets = np.concatenate([[0], np.cumsum(sizes)]).astype(int)
-        self.dtype = self.full[0].dtype
-        self.itemsize = self.dtype.itemsize
-        n = world.n_ranks
-        self.total_steps = n - 1
-        self.recv_step = [0] * n
-        self.done_ranks = 0
-        self._completed = [False] * n
-
-    def _send(self, rank: int, step: int) -> None:
-        n = self.world.n_ranks
-        if step >= self.total_steps:
-            if not self._completed[rank]:
-                self._completed[rank] = True
-                self.done_ranks += 1
-            return
-        shard = (rank - step) % n
-        o0, o1 = self.offsets[shard], self.offsets[shard + 1]
-        self.world.endpoints[rank].send_chunk(
-            (rank + 1) % n, self.full[rank][o0:o1])
-
-    def start(self) -> None:
-        n = self.world.n_ranks
-        if n == 1:
-            self.done_ranks = 1
-            return
-        for r in range(n):
-            self._send(r, 0)
-
-    def on_notify(self, rank: int, peer: int, seq: int) -> None:
-        n = self.world.n_ranks
-        if peer != (rank - 1) % n:
-            return
-        step = self.recv_step[rank]
-        self.recv_step[rank] = step + 1
-        shard = (rank - 1 - step) % n
-        o0, o1 = self.offsets[shard], self.offsets[shard + 1]
-        ep = self.world.endpoints[rank]
-        stage = ep.staging_slot_view(peer, seq,
-                                     (o1 - o0) * self.itemsize).view(self.dtype)
-        self.full[rank][o0:o1] = stage
-        self._send(rank, step + 1)
-
-    def done(self) -> bool:
-        return self.done_ranks == self.world.n_ranks
-
-
-class _PipelineBroadcast(_Collective):
-    """Chain broadcast root -> root+1 -> ... in pipelined chunks."""
-
-    def __init__(self, world: JcclWorld, outs: List[np.ndarray], root: int):
-        super().__init__(world)
-        self.outs = [o.reshape(-1) for o in outs]
-        self.root = root
-        self.dtype = self.outs[0].dtype
-        self.itemsize = self.dtype.itemsize
-        per = world.max_chunk_bytes // self.itemsize
-        total = self.outs[0].size
-        self.chunks = [(i, min(i + per, total))
-                       for i in range(0, total, per)] or [(0, 0)]
-        n = world.n_ranks
-        self.recv_step = [0] * n
-        self.sent = [0] * n
-        self.done_ranks = 1  # root is trivially done receiving
-
-    def _order(self, rank: int) -> int:
-        return (rank - self.root) % self.world.n_ranks
-
-    def _forward(self, rank: int, step: int) -> None:
-        n = self.world.n_ranks
-        nxt = (rank + 1) % n
-        if self._order(nxt) == 0:  # wrapped back to root
-            return
-        if step >= len(self.chunks):
-            return
-        c0, c1 = self.chunks[step]
-        self.world.endpoints[rank].send_chunk(nxt, self.outs[rank][c0:c1])
-        self.sent[rank] = step + 1
-
-    def start(self) -> None:
-        if self.world.n_ranks == 1:
-            return
-        for step in range(min(2, len(self.chunks))):  # pipeline depth 2
-            self._forward(self.root, step)
-
-    def on_notify(self, rank: int, peer: int, seq: int) -> None:
-        if peer != (rank - 1) % self.world.n_ranks:
-            return
-        step = self.recv_step[rank]
-        self.recv_step[rank] = step + 1
-        c0, c1 = self.chunks[step]
-        ep = self.world.endpoints[rank]
-        stage = ep.staging_slot_view(peer, seq,
-                                     (c1 - c0) * self.itemsize).view(self.dtype)
-        self.outs[rank][c0:c1] = stage
-        self._forward(rank, step)
-        if step + 1 == len(self.chunks):
-            self.done_ranks += 1
-        # root keeps the pipeline full
-        if rank == (self.root + 1) % self.world.n_ranks and \
-                self.sent[self.root] < len(self.chunks):
-            self._forward(self.root, self.sent[self.root])
-
-    def done(self) -> bool:
-        return self.done_ranks == self.world.n_ranks
-
-
-class _AllToAll(_Collective):
-    """Direct-write all-to-all (MoE dispatch traffic pattern)."""
-
-    def __init__(self, world: JcclWorld, mats: List[np.ndarray],
-                 outs: List[np.ndarray]):
-        super().__init__(world)
-        self.mats = mats
-        self.outs = outs
-        n = world.n_ranks
-        self.expected = [n - 1] * n
-        self.received = [0] * n
-        self.dtype = mats[0].dtype
-        self.rowbytes = mats[0][0].nbytes
-
-    def start(self) -> None:
-        n = self.world.n_ranks
-        for r in range(n):
-            self.outs[r][r] = self.mats[r][r]  # local row
-            for peer in range(n):
-                if peer == r:
-                    continue
-                self.world.endpoints[r].send_chunk(peer, self.mats[r][peer])
-
-    def on_notify(self, rank: int, peer: int, seq: int) -> None:
-        ep = self.world.endpoints[rank]
-        stage = ep.staging_slot_view(peer, seq, self.rowbytes).view(self.dtype)
-        self.outs[rank][peer] = stage.reshape(self.outs[rank][peer].shape)
-        self.received[rank] += 1
-
-    def done(self) -> bool:
-        return all(r >= e for r, e in zip(self.received, self.expected))

@@ -249,6 +249,12 @@ class RNIC:
         self.active_flows: int = 0
         # Persistent background traffic (the paper's "busy backup RNIC").
         self.background_flows: int = 0
+        # Per-rail traffic accounting (verbs layer increments): payload
+        # bytes this NIC serialized onto the wire / DMA'd into host
+        # memory. Multi-rail busbw benchmarks and the channel scheduler's
+        # reports read these through Cluster.rail_bytes().
+        self.tx_bytes: int = 0
+        self.delivered_bytes: int = 0
         # Callbacks fired on state change (verbs layer hooks in for
         # fast local error detection).
         self.state_listeners: List[Callable[[bool], None]] = []
@@ -375,6 +381,21 @@ class Cluster:
             lat += 1e-6  # spine hop
         # switch forwarding delay
         return lat + 0.5e-6
+
+    # -- per-rail traffic accounting ------------------------------------------
+    def rail_bytes(self) -> Dict[int, Dict[str, int]]:
+        """Aggregate traffic per rail: rail index -> tx/delivered payload
+        bytes summed over every host's NIC on that rail. WRITE-class
+        payloads only (notifies and ACKs are header-sized and excluded),
+        so this is the busbw numerator."""
+        out: Dict[int, Dict[str, int]] = {}
+        for host in self.hosts.values():
+            for nic in host.nics:
+                d = out.setdefault(nic.index,
+                                   {"tx_bytes": 0, "delivered_bytes": 0})
+                d["tx_bytes"] += nic.tx_bytes
+                d["delivered_bytes"] += nic.delivered_bytes
+        return out
 
     # -- failure injection ----------------------------------------------------
     def fail_nic(self, gid: str) -> None:

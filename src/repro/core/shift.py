@@ -110,9 +110,26 @@ class ShiftConfig:
     shadow_verb_delay: float = 50e-6   # per-verb background execution cost
     actor_tick: float = 200e-6
     cycle_psn_stride: int = 1 << 16
+    # Rail-aware backup placement. ``data_rails`` is how many rails carry
+    # default (channelized-collective) traffic: a failing data rail
+    # prefers a SPARE rail (index >= data_rails) as its backup so two
+    # channels never fail over onto each other's default rail when a
+    # spare exists. With no spares (data_rails == NIC count) placement
+    # degrades to the historical next-rail rule — the Trilemma's
+    # hardware constraint: some rail must absorb the displaced traffic.
+    data_rails: int = 1
+    # explicit per-rail override: default NIC index -> backup NIC index
+    backup_overrides: Optional[Dict[int, int]] = None
 
-    @staticmethod
-    def backup_index(i: int, n: int) -> int:
+    def backup_index(self, i: int, n: int) -> int:
+        """Backup NIC index for a default NIC at rail ``i`` of ``n``."""
+        if self.backup_overrides:
+            ov = self.backup_overrides.get(i)
+            if ov is not None:
+                return ov % n
+        spares = n - max(self.data_rails, 1)
+        if spares > 0 and i < self.data_rails:
+            return self.data_rails + (i % spares)
         return (i + 1) % n
 
 
@@ -247,7 +264,7 @@ class ShiftContext:
         self.backup: Optional[V.Context] = None
         # shadow verb: open the backup device in the background
         nics = default.cluster.hosts[lib.host].nics
-        bidx = ShiftConfig.backup_index(default.nic.index, len(nics))
+        bidx = lib.config.backup_index(default.nic.index, len(nics))
         backup_nic = nics[bidx].name
 
         def _open() -> bool:
@@ -343,6 +360,16 @@ class ShiftCQ:
                 for wc in cq.poll(64):
                     route(wc, self)
             V.ibv_req_notify_cq(cq)
+        self.flush_app()
+
+    def flush_app(self) -> None:
+        """Deliver buffered app WCs to a push-mode consumer. Besides the
+        physical-drain path above, SHIFT calls this whenever it emits app
+        WCs with NO physical WC behind them (counter-synthesized
+        completions, propagated errors): those land in ``app_buffer``
+        outside any drain, and an event-driven app gated on completions
+        (JCCL's FIFO slot reuse) would deadlock waiting for a wakeup that
+        never comes."""
         if self.app_listener is not None and self.app_buffer:
             buf, self.app_buffer = self.app_buffer, []
             self.app_listener(buf)
@@ -712,6 +739,31 @@ class ShiftQP:
         self._await_first_success = True
         self.initiate_fallback()
 
+    def _revive_ctrl(self) -> None:
+        """Local repair after a BACKUP-NIC outage: an interface loss on
+        the backup rail flushes the control QP (which lives there) to ERR
+        even though this QP kept riding its default path. Re-arm it in
+        place, PSN-continuous (sq/rq PSNs preserved across the reset), so
+        a later fallback still has a control channel — production SHIFT
+        re-creates backup resources through the management network when
+        the NIC returns; the sim repairs lazily at the next fallback. If
+        the backup rail is still down, the revived QP errors again on the
+        first control send and the failure propagates (the true
+        double-rail outage, which must NOT be masked)."""
+        qp = self.ctrl
+        if qp is None or qp.state is not V.QPState.ERR \
+                or self.peer_backup is None:
+            return
+        sq_psn, rq_psn = qp.next_psn, qp.epsn
+        b_gid, _b_qpn, c_qpn = self.peer_backup
+        V.ibv_modify_qp(qp, V.QPAttr(qp_state=V.QPState.RESET))
+        V.ibv_modify_qp(qp, V.QPAttr(qp_state=V.QPState.INIT))
+        V.ibv_modify_qp(qp, V.QPAttr(qp_state=V.QPState.RTR, dest_gid=b_gid,
+                                     dest_qp_num=c_qpn, rq_psn=rq_psn))
+        V.ibv_modify_qp(qp, V.QPAttr(qp_state=V.QPState.RTS, sq_psn=sq_psn))
+        for _ in range(self.lib.config.ctrl_recv_depth):
+            self._post_ctrl_recv()
+
     def initiate_fallback(self) -> None:
         lib = self.lib
         if not self.ready:
@@ -728,6 +780,7 @@ class ShiftQP:
         self.cycle += 1
         self._reset_default()
         self._reset_backup()
+        self._revive_ctrl()
         # Drain before snapshotting counters / reposting: completed-but-
         # unpolled WCs (App. B.2's WC buffer) must count as progress.
         self._drain_cqs()
@@ -756,6 +809,7 @@ class ShiftQP:
         self.cycle += 1
         self._reset_default()
         self._reset_backup()
+        self._revive_ctrl()
         self._drain_cqs()
         self._repost_recvs(self.backup)
         self.recv_state = RecvState.FALLBACK
@@ -805,6 +859,9 @@ class ShiftQP:
         lib.stats.resubmitted_sends += n
         self.send_state = SendState.FALLBACK
         self._in_handshake = False
+        # synthesized completions have no physical WC to wake a push-mode
+        # consumer — deliver them now (see ShiftCQ.flush_app)
+        self.send_scq.flush_app()
         self._start_probing()
 
     def _repost_recvs(self, qp: V.QP) -> None:
@@ -1119,6 +1176,9 @@ class ShiftQP:
                 wc = V.WC(0, V.WCStatus.WR_FLUSH_ERR, V.WCOpcode.RECV,
                           qp_num=self.qpn)
                 self.recv_scq.app_buffer.append(wc)
+        self.send_scq.flush_app()
+        if self.recv_scq is not self.send_scq:
+            self.recv_scq.flush_app()
 
 
 # ---------------------------------------------------------------------------

@@ -689,6 +689,7 @@ class Context:
             return
         bw = self.nic.effective_bandwidth()
         ser = 0.0
+        tx = 0
         next_psn = qp.next_psn
         for wqe in wqes:
             if wqe.psn is None and not wqe.probe:
@@ -697,9 +698,11 @@ class Context:
             wqe.attempts += 1
             if wqe.length:
                 ser += PER_MESSAGE_OVERHEAD + wqe.length / bw
+                tx += wqe.length
             else:
                 ser += PER_MESSAGE_OVERHEAD
         qp.next_psn = next_psn
+        self.nic.tx_bytes += tx
         # serialization occupies the NIC (compute share before joining).
         # Payloads are NOT materialized here: the receiver DMA-reads the
         # source MR at delivery (the zero-copy handoff) — valid under the
@@ -850,6 +853,7 @@ class Context:
             if mr is not None and src_mr is not None:
                 mr.slice(wqe.remote_addr, total)[:] = src_mr.ro_view(
                     wqe.local_addr, total)
+                dst_nic.delivered_bytes += total
                 done += j - i
             else:
                 # merged lookup failed (or no source MR): fall back to
@@ -862,6 +866,7 @@ class Context:
                         return done
                     mrk.slice(wk.remote_addr, wk.length)[:] = srck.ro_view(
                         wk.local_addr, wk.length)
+                    dst_nic.delivered_bytes += wk.length
                     done += 1
             i = j
         return done
@@ -967,6 +972,7 @@ class Context:
         bw = self.nic.effective_bandwidth()
         qp._serializing += 1
         self.nic.active_flows += 1
+        self.nic.tx_bytes += wqe.length
         ser = PER_MESSAGE_OVERHEAD + (wqe.length / bw if wqe.length else 0.0)
         self.sim.call(ser, self._serialized, qp, wqe, payload, qp.epoch)
 
@@ -1043,6 +1049,7 @@ class Context:
                 if mr is None:
                     return "acc_err"
                 mr.slice(wqe.remote_addr, wqe.length)[:] = payload
+                dst_nic.delivered_bytes += wqe.length
             if wqe.opcode is Opcode.WRITE_IMM:
                 rwqe = _consume_recv(dqp)
                 if rwqe is None:
@@ -1065,6 +1072,7 @@ class Context:
                 if mr is None:
                     return "acc_err"
                 mr.slice(rwqe.addr, wqe.length)[:] = payload
+                dst_nic.delivered_bytes += wqe.length
             wc = WC(rwqe.wr_id, WCStatus.SUCCESS, WCOpcode.RECV,
                     byte_len=wqe.length, imm_data=None, qp_num=dqp.qpn)
             wc._rwqe = rwqe

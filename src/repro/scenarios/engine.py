@@ -1,15 +1,19 @@
 """Campaign engine: execute fault scenarios against ShiftLib workloads.
 
-Three workloads, in increasing weight:
+Workloads, in increasing weight:
 
 * ``pingpong`` — a paced one-directional NCCL-Simple stream (bulk WRITE +
   WRITE_IMM notify) between two hosts, with per-message payload
   verification. Source-slot reuse is completion-gated (mirroring
-  ``collectives.world.RankEndpoint``) so a post-failover retransmission
+  ``collectives.endpoint.RankEndpoint``) so a post-failover retransmission
   can never DMA-read a recycled slot.
 * ``allreduce`` — repeated ring all-reduces through ``JcclWorld`` until
   the scenario window closes, verifying the numeric result of every
-  round (payload-level exactly-once).
+  round (payload-level exactly-once). ``channels=N`` runs it striped
+  across N rails (per-channel stats land in ``RunResult.channel_stats``).
+* ``broadcast`` / ``all_to_all`` — the remaining collective shapes under
+  the same fault matrix, each with byte-exact payload verification per
+  round; both accept ``channels`` too.
 * ``ddp`` — a short data-parallel training run (``build_smoke_trainer``);
   scenario times are rebased onto the measured per-step collective time
   so faults land mid-all-reduce regardless of model size.
@@ -65,6 +69,9 @@ class RunResult:
     fault_log: List[Tuple[float, str, str]] = field(default_factory=list)
     lifecycle: List[Tuple[float, str, str]] = field(default_factory=list)
     violations: List[str] = field(default_factory=list)
+    # multi-rail channel accounting (None for channel-less workloads)
+    channel_stats: Optional[List[Dict[str, object]]] = None
+    resteered_chunks: int = 0
 
     @property
     def ok(self) -> bool:
@@ -81,6 +88,10 @@ class RunResult:
             tuple((round(t, 9), k, g) for t, k, g in self.fault_log),
             tuple((round(t, 9), e, h) for t, e, h in self.lifecycle),
             tuple(round(l, 9) for l in self.fallback_latencies),
+            self.resteered_chunks,
+            tuple((c["chunks_assigned"], c["chunks_delivered"])
+                  for c in self.channel_stats)
+            if self.channel_stats is not None else None,
         )
 
 
@@ -118,6 +129,9 @@ def _from_snapshot(snap: Dict[str, object], result: RunResult) -> None:
     result.order_violations = snap["order_violations"]
     result.duplicate_notifies = snap["duplicate_notifies"]
     result.app_errors = sum(snap["rank_errors"])
+    if len(snap.get("channels", ())) > 1:
+        result.channel_stats = snap["channels"]
+        result.resteered_chunks = snap["scheduler"]["resteered"]
 
 
 # ---------------------------------------------------------------------------
@@ -325,41 +339,41 @@ def run_pingpong(scenario: Scenario, seed: int = 0, n_msgs: int = 60,
 
 
 # ---------------------------------------------------------------------------
-# allreduce workload
+# world-based round workloads (allreduce / broadcast / all_to_all)
 # ---------------------------------------------------------------------------
 
 
-def run_allreduce(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
-                  elems: int = 1 << 14, max_rounds: int = 4000,
-                  probe_interval: float = 5e-3, fast: bool = True) -> RunResult:
+def _run_rounds(workload: str, scenario: Scenario, seed: int,
+                n_ranks: int, max_rounds: int, probe_interval: float,
+                fast: bool, channels: int, max_chunk_bytes: int,
+                round_fn) -> RunResult:
+    """Shared driver for JcclWorld round workloads: build the world,
+    schedule the fault timeline, run ``round_fn(world, rng, timeout) ->
+    payload mismatches`` until the traffic horizon/deadline, settle, and
+    harvest the world snapshot. Rounds are capped for wall time, but
+    traffic MUST span the fault timeline (+ probe margin) or recovery
+    could never fence (see ``_traffic_horizon``) and min_fallbacks
+    expectations would be vacuous."""
     from repro.collectives import CollectiveError, build_world
 
-    result = RunResult(scenario=scenario.name, workload="allreduce",
+    result = RunResult(scenario=scenario.name, workload=workload,
                        seed=seed)
     cluster, libs, world = build_world(
         n_ranks=n_ranks, probe_interval=probe_interval,
-        max_chunk_bytes=1 << 14, strict_order=False, fast=fast)
+        max_chunk_bytes=max_chunk_bytes, strict_order=False, fast=fast,
+        channels=channels)
     _observe(cluster, libs, result)
     t0 = cluster.sim.now
     scenario.schedule(cluster, t0)
     deadline = t0 + scenario.duration
     rng = np.random.RandomState(seed)
     mismatched = 0
-    # rounds are capped for wall time, but traffic MUST span the fault
-    # timeline (+ probe margin) or recovery could never fence (see
-    # _traffic_horizon) and min_fallbacks expectations would be vacuous
     horizon = t0 + min(scenario.duration,
                        _traffic_horizon(scenario, probe_interval))
     try:
         while cluster.sim.now < horizon or (
                 cluster.sim.now < deadline and result.rounds < max_rounds):
-            arrays = [rng.randn(elems).astype(np.float32)
-                      for _ in range(n_ranks)]
-            expect = np.sum(arrays, axis=0)
-            world.allreduce(arrays, timeout=scenario.duration + 1.0)
-            for arr in arrays:
-                if not np.allclose(arr, expect, atol=1e-4):
-                    mismatched += 1
+            mismatched += round_fn(world, rng, scenario.duration + 1.0)
             result.rounds += 1
         result.completed = result.rounds > 0
     except CollectiveError:
@@ -373,20 +387,76 @@ def run_allreduce(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
     return result
 
 
+def run_allreduce(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
+                  elems: int = 1 << 14, max_rounds: int = 4000,
+                  probe_interval: float = 5e-3, fast: bool = True,
+                  channels: int = 1) -> RunResult:
+    """Repeated ring all-reduces; every round's numeric result must equal
+    the true sum (payload-level exactly-once: a lost or doubled
+    contribution changes it)."""
+    def one_round(world, rng, timeout):
+        arrays = [rng.randn(elems).astype(np.float32)
+                  for _ in range(n_ranks)]
+        expect = np.sum(arrays, axis=0)
+        world.allreduce(arrays, timeout=timeout)
+        return sum(1 for arr in arrays
+                   if not np.allclose(arr, expect, atol=1e-4))
+
+    return _run_rounds("allreduce", scenario, seed, n_ranks, max_rounds,
+                       probe_interval, fast, channels, 1 << 14, one_round)
+
+
+def run_broadcast(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
+                  elems: int = 1 << 14, max_rounds: int = 4000,
+                  probe_interval: float = 5e-3, fast: bool = True,
+                  channels: int = 1, root: int = 0) -> RunResult:
+    """Repeated pipelined broadcasts; every round's outputs are compared
+    byte-for-byte against the root payload — a lost, duplicated or
+    misordered chunk shows up as a payload mismatch."""
+    def one_round(world, rng, timeout):
+        msg = rng.randn(elems).astype(np.float32)
+        outs = world.broadcast(msg, root=root, timeout=timeout)
+        return sum(1 for out in outs if not np.array_equal(out, msg))
+
+    return _run_rounds("broadcast", scenario, seed, n_ranks, max_rounds,
+                       probe_interval, fast, channels, 1 << 14, one_round)
+
+
+def run_alltoall(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
+                 row_elems: int = 1 << 12, max_rounds: int = 4000,
+                 probe_interval: float = 5e-3, fast: bool = True,
+                 channels: int = 1) -> RunResult:
+    """Repeated direct-write all-to-alls; the received matrix must be the
+    exact transpose of the sent rows every round (payload-level
+    exactly-once: a dropped or doubled row changes a cell)."""
+    def one_round(world, rng, timeout):
+        mats = [rng.randn(n_ranks, row_elems).astype(np.float32)
+                for _ in range(n_ranks)]
+        outs = world.all_to_all(mats, timeout=timeout)
+        return sum(1 for j in range(n_ranks) for i in range(n_ranks)
+                   if not np.array_equal(outs[j][i], mats[i][j]))
+
+    return _run_rounds("all_to_all", scenario, seed, n_ranks, max_rounds,
+                       probe_interval, fast, channels,
+                       max(1 << 14, row_elems * 4), one_round)
+
+
 # ---------------------------------------------------------------------------
 # ddp training workload
 # ---------------------------------------------------------------------------
 
 
 def run_ddp(scenario: Scenario, seed: int = 0, steps: int = 6,
-            n_ranks: int = 2, fast: bool = True) -> RunResult:
+            n_ranks: int = 2, fast: bool = True,
+            channels: int = 1) -> RunResult:
     from repro.collectives import build_world
     from repro.train.trainer import RestartNeeded, build_smoke_trainer
 
     result = RunResult(scenario=scenario.name, workload="ddp", seed=seed)
     cluster, libs, world = build_world(
         n_ranks=n_ranks, probe_interval=5e-4,
-        max_chunk_bytes=1 << 18, strict_order=False, fast=fast)
+        max_chunk_bytes=1 << 18, strict_order=False, fast=fast,
+        channels=channels)
     _observe(cluster, libs, result)
     ckpt_dir = tempfile.mkdtemp(prefix="repro-campaign-ckpt-")
     trainer = build_smoke_trainer(cluster, libs, steps=steps,
@@ -435,6 +505,8 @@ def run_ddp(scenario: Scenario, seed: int = 0, steps: int = 6,
 WORKLOADS: Dict[str, Callable[..., RunResult]] = {
     "pingpong": run_pingpong,
     "allreduce": run_allreduce,
+    "broadcast": run_broadcast,
+    "all_to_all": run_alltoall,
     "ddp": run_ddp,
 }
 

@@ -15,6 +15,12 @@ The four headline invariants (checked after EVERY run):
 4. **Bounded fallback latency** — every observed first-failed-WC to
    first-success interval is within the scenario's ``latency_bound``.
 
+Channelized (multi-rail) runs add per-channel checks: every channel's
+notify counters must be clean, chunk accounting must balance (every
+chunk the scheduler assigned was delivered), and scenarios that fault a
+rail under striped traffic assert the scheduler actually resteered
+chunks off it (``Scenario.min_resteers``).
+
 Scenario expectations (masked vs. propagated, minimum fallback count,
 recovery) are checked alongside: a fault-tolerance claim is vacuous if
 the fault never actually bit.
@@ -60,6 +66,26 @@ def check_invariants(result: RunResult, scenario: Scenario) -> List[str]:
     if result.order_violations:
         v.append(f"notification order violated: {result.order_violations} "
                  f"out-of-order notifies")
+
+    # -- per-channel accounting (multi-rail runs only) -----------------------
+    if result.channel_stats:
+        for c in result.channel_stats:
+            if c["order_violations"] or c["duplicate_notifies"]:
+                v.append(f"channel {c['channel']} notify invariants "
+                         f"violated: {c['order_violations']} ooo / "
+                         f"{c['duplicate_notifies']} dup")
+        if scenario.expect_masked and not result.aborted:
+            assigned = sum(c["chunks_assigned"] for c in result.channel_stats)
+            delivered = sum(c["chunks_delivered"]
+                            for c in result.channel_stats)
+            if assigned != delivered:
+                v.append(f"channel accounting broken: {assigned} chunks "
+                         f"assigned vs {delivered} delivered")
+        if (scenario.min_resteers
+                and result.resteered_chunks < scenario.min_resteers):
+            v.append(f"scheduler never resteered off the faulted rail: "
+                     f"{result.resteered_chunks} resteers < expected "
+                     f"{scenario.min_resteers}")
 
     # -- bounded fallback latency -------------------------------------------
     late = [l for l in result.fallback_latencies

@@ -147,6 +147,47 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
         tags=("nic", "control"),
     ),
     Scenario(
+        name="rail_kill_striped",
+        description="Rail-0 NIC of host0 dies permanently under "
+                    "channelized (2-rail striped) traffic: SHIFT masks "
+                    "the loss per-QP while the channel scheduler "
+                    "resteers chunks onto the healthy rail — per-channel "
+                    "stats must show the surviving channel carried them.",
+        actions=(A(2e-3, "nic_down", "host0/mlx5_0"),),
+        min_fallbacks=1, expect_recovery=False, min_resteers=1,
+        tags=("rail", "multirail", "permanent"),
+        workload_hints={"allreduce": {"channels": 2},
+                        "broadcast": {"channels": 2}},
+    ),
+    Scenario(
+        name="staggered_dual_rail_faults",
+        description="Rail 0 fails and recovers, then rail 1 fails and "
+                    "recovers — never overlapping, so every fault is "
+                    "maskable; a channelized world must resteer each "
+                    "channel in turn and re-balance after recovery.",
+        actions=(A(2e-3, "nic_down", "host0/mlx5_0"),
+                 A(20e-3, "nic_up", "host0/mlx5_0"),
+                 A(35e-3, "nic_down", "host0/mlx5_1"),
+                 A(50e-3, "nic_up", "host0/mlx5_1")),
+        duration=0.3,
+        min_fallbacks=1, expect_recovery=True, min_resteers=1,
+        tags=("rail", "multirail", "compound"),
+        workload_hints={"pingpong": {"n_msgs": 240},
+                        "allreduce": {"channels": 2}},
+    ),
+    Scenario(
+        name="rail_recovery_rebalance",
+        description="Rail 0 goes down mid-striped traffic and comes "
+                    "back: SHIFT recovers the channel's QPs onto the "
+                    "default rail and the scheduler re-balances chunks "
+                    "across both rails (recovery + resteer counters).",
+        actions=(A(2e-3, "nic_down", "host0/mlx5_0"),
+                 A(25e-3, "nic_up", "host0/mlx5_0")),
+        min_fallbacks=1, expect_recovery=True, min_resteers=1,
+        tags=("rail", "multirail"),
+        workload_hints={"allreduce": {"channels": 2}},
+    ),
+    Scenario(
         name="double_rail_outage",
         description="Default dies, then the backup dies during fallback: "
                     "no healthy path remains, so the error MUST be "

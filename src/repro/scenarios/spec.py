@@ -49,6 +49,11 @@ class Scenario:
     min_fallbacks: int = 0          # lower bound on observed fallbacks
     expect_recovery: bool = False   # traffic must return to the default NIC
     latency_bound: float = 20e-3    # max allowed fallback latency (virtual s)
+    # multi-rail: lower bound on chunks the channel scheduler must move
+    # off their home channel — only checked when the workload actually
+    # ran channelized (>1 channel), so single-rail workloads of the same
+    # scenario are unaffected
+    min_resteers: int = 0
     tags: Tuple[str, ...] = field(default=())
     # per-workload engine overrides, e.g. {"pingpong": {"n_msgs": 240}} —
     # lets a timeline demand a longer stream without changing the engine

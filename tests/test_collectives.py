@@ -82,8 +82,10 @@ def test_allreduce_survives_nic_failure_mid_collective():
     c, w = make_world(n_ranks=4, max_chunk_bytes=8192)
     n = 8192 * 6  # enough steps that the failure lands mid-collective
     arrays = [np.ones(n, dtype=np.float64) * (r + 1) for r in range(4)]
-    # kill host1's rail-0 NIC shortly after the collective starts
-    c.sim.at(c.sim.now + 3e-4, c.fail_nic, "host1/mlx5_0")
+    # kill host1's rail-0 NIC shortly after the collective starts (the
+    # bucket-parallel rings finish in ~230us of virtual time, so the
+    # fault must land well inside that window)
+    c.sim.at(c.sim.now + 1e-4, c.fail_nic, "host1/mlx5_0")
     w.allreduce(arrays)
     for a in arrays:
         np.testing.assert_allclose(a, 10.0)

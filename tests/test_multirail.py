@@ -1,0 +1,317 @@
+"""Multi-rail channelized JCCL: striping, rail-aware failover, scheduler
+resteering, bounded notify bookkeeping, and the new campaign workloads."""
+
+import numpy as np
+import pytest
+
+from repro.collectives import build_world
+from repro.core.shift import ShiftConfig, ShiftLib
+from repro.scenarios import SCENARIOS, run_scenario
+
+
+# ---------------------------------------------------------------------------
+# rail-aware backup placement (ShiftConfig.backup_index policy)
+# ---------------------------------------------------------------------------
+
+def test_backup_placement_default_is_next_rail():
+    cfg = ShiftConfig()
+    assert cfg.backup_index(0, 2) == 1
+    assert cfg.backup_index(0, 4) == 1
+
+
+def test_backup_placement_prefers_spare_rails():
+    # 2 data rails + 1 spare: both channels back up onto the spare, so
+    # neither fails over onto the other channel's default rail
+    cfg = ShiftConfig(data_rails=2)
+    assert cfg.backup_index(0, 3) == 2
+    assert cfg.backup_index(1, 3) == 2
+    # 2 data rails + 2 spares: spread across the spares
+    assert cfg.backup_index(0, 4) == 2
+    assert cfg.backup_index(1, 4) == 3
+    # no spares: mutual next-rail backup is the only option left
+    assert cfg.backup_index(0, 2) == 1
+    assert cfg.backup_index(1, 2) == 0
+
+
+def test_backup_placement_overrides_win():
+    cfg = ShiftConfig(data_rails=2, backup_overrides={0: 3})
+    assert cfg.backup_index(0, 4) == 3
+    assert cfg.backup_index(1, 4) == 3  # non-overridden falls to policy
+
+
+def test_build_world_places_backups_on_spare_rail():
+    cluster, libs, world = build_world(n_ranks=2, channels=2,
+                                       nics_per_host=3)
+    for ch in world.channels:
+        for ep in ch.endpoints:
+            assert ep.ctx.backup is not None
+            assert ep.ctx.backup.nic.name == "mlx5_2"
+
+
+def test_channels_cannot_exceed_rails():
+    with pytest.raises(ValueError):
+        build_world(n_ranks=2, channels=3, nics_per_host=2)
+
+
+# ---------------------------------------------------------------------------
+# striped collective correctness
+# ---------------------------------------------------------------------------
+
+def test_striped_allreduce_exact_multibucket():
+    _, _, world = build_world(n_ranks=4, channels=2,
+                              max_chunk_bytes=4096)
+    n = 4096 * 5 + 37  # several buckets + ragged tail
+    arrays = [np.arange(n, dtype=np.int64) * (r + 1) for r in range(4)]
+    expect = sum(a.copy() for a in arrays)
+    world.allreduce(arrays)
+    for a in arrays:
+        np.testing.assert_array_equal(a, expect)
+
+
+def test_striped_allreduce_uses_both_channels():
+    _, _, world = build_world(n_ranks=2, channels=2,
+                              max_chunk_bytes=4096)
+    arrays = [np.ones(4096 * 8, dtype=np.float32) * (r + 1)
+              for r in range(2)]
+    world.allreduce(arrays)
+    np.testing.assert_allclose(arrays[0], 3.0)
+    assigned = world.scheduler.assigned
+    assert all(a > 0 for a in assigned), assigned
+    assert world.scheduler.resteered == 0  # clean run: homes honoured
+    delivered = [ch.chunks_delivered for ch in world.channels]
+    assert delivered == assigned
+
+
+def test_striped_other_collectives_exact():
+    _, _, world = build_world(n_ranks=4, channels=2,
+                              max_chunk_bytes=1 << 14)
+    shards = [np.full(17 + r, r, dtype=np.float32) for r in range(4)]
+    full = world.all_gather(shards)
+    expect = np.concatenate(shards)
+    for f in full:
+        np.testing.assert_array_equal(f, expect)
+
+    msg = np.arange(50000, dtype=np.float32)  # several pipeline chunks
+    outs = world.broadcast(msg, root=2)
+    for o in outs:
+        np.testing.assert_array_equal(o, msg)
+
+    mats = [np.arange(4 * 8, dtype=np.int64).reshape(4, 8) + 100 * r
+            for r in range(4)]
+    outs = world.all_to_all(mats)
+    for j in range(4):
+        for i in range(4):
+            np.testing.assert_array_equal(outs[j][i], mats[i][j])
+
+    arrays = [np.arange(64, dtype=np.int64) for _ in range(4)]
+    owned = world.reduce_scatter(arrays)
+    per = 16
+    flat = np.arange(64, dtype=np.int64) * 4
+    for r in range(4):
+        own = (r + 1) % 4
+        np.testing.assert_array_equal(owned[r],
+                                      flat[own * per:(own + 1) * per])
+
+
+def test_striped_allreduce_exact_on_legacy_datapath():
+    _, _, world = build_world(n_ranks=2, channels=2,
+                              max_chunk_bytes=4096, fast=False)
+    arrays = [np.ones(4096 * 4, dtype=np.float64) * (r + 1)
+              for r in range(2)]
+    world.allreduce(arrays)
+    np.testing.assert_allclose(arrays[0], 3.0)
+    assert all(a > 0 for a in world.scheduler.assigned)
+
+
+# ---------------------------------------------------------------------------
+# virtual-time bandwidth: striping must roughly double busbw on 2 rails
+# ---------------------------------------------------------------------------
+
+def test_striped_stream_busbw_scales():
+    size, chunks = 1 << 15, 64
+
+    def busbw(channels):
+        cluster, _, world = build_world(n_ranks=2, channels=channels,
+                                        max_chunk_bytes=size)
+        payload = np.ones(size, dtype=np.uint8)
+        t0 = cluster.sim.now
+        for i in range(chunks):
+            world.send(0, 1, payload, tag=i)
+        while (sum(ch.chunks_delivered for ch in world.channels) < chunks
+               and cluster.sim.step()):
+            pass
+        return chunks * size / (cluster.sim.now - t0)
+
+    ratio = busbw(2) / busbw(1)
+    assert ratio >= 1.8, f"2-rail striping only {ratio:.2f}x"
+
+
+def test_rail_byte_accounting_splits_across_rails():
+    cluster, _, world = build_world(n_ranks=2, channels=2,
+                                    max_chunk_bytes=1 << 14)
+    arrays = [np.ones((1 << 14), dtype=np.float32) * (r + 1)
+              for r in range(2)]
+    world.allreduce(arrays)
+    rails = cluster.rail_bytes()
+    assert rails[0]["delivered_bytes"] > 0
+    assert rails[1]["delivered_bytes"] > 0
+    assert rails[0]["tx_bytes"] > 0 and rails[1]["tx_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# rail-aware failover + scheduler resteering
+# ---------------------------------------------------------------------------
+
+def test_rail_kill_mid_striped_allreduce_masked_and_resteered():
+    cluster, libs, world = build_world(n_ranks=2, channels=2,
+                                       max_chunk_bytes=4096,
+                                       probe_interval=5e-3)
+    n = 4096 * 16
+    # one warm round so both channels are demonstrably in use
+    warm = [np.ones(n, dtype=np.float64) for _ in range(2)]
+    world.allreduce(warm)
+    pre_assigned = list(world.scheduler.assigned)
+    assert all(a > 0 for a in pre_assigned)
+    # kill channel 0's rail on host0 mid-collective
+    cluster.sim.at(cluster.sim.now + 1e-4, cluster.fail_nic, "host0/mlx5_0")
+    arrays = [np.full(n, float(r + 1), dtype=np.float64) for r in range(2)]
+    world.allreduce(arrays)
+    for a in arrays:
+        np.testing.assert_allclose(a, 3.0)  # numerics exact
+    assert any(isinstance(lib, ShiftLib) and lib.stats.fallbacks > 0
+               for lib in libs)             # the fault actually bit
+    # several more rounds while rail 0 is dark: the scheduler must move
+    # chunk homes onto the surviving channel
+    for _ in range(4):
+        arrays = [np.full(n, float(r + 1), dtype=np.float64)
+                  for r in range(2)]
+        world.allreduce(arrays)
+        np.testing.assert_allclose(arrays[0], 3.0)
+    assert world.scheduler.resteered > 0
+    post_assigned = world.scheduler.assigned
+    moved = [post_assigned[c] - pre_assigned[c] for c in range(2)]
+    assert moved[1] > moved[0], (
+        f"surviving channel should carry the resteered chunks: {moved}")
+
+
+def test_scheduler_rebalances_after_recovery():
+    cluster, libs, world = build_world(n_ranks=2, channels=2,
+                                       max_chunk_bytes=4096,
+                                       probe_interval=2e-3)
+    n = 4096 * 8
+    cluster.fail_nic("host0/mlx5_0")
+    arrays = [np.ones(n, dtype=np.float64) for _ in range(2)]
+    world.allreduce(arrays)          # forces fallback + resteer
+    assert world.scheduler.resteered > 0
+    cluster.recover_nic("host0/mlx5_0")
+    # keep signaled traffic flowing so the probe + recovery fence land
+    for _ in range(8):
+        world.allreduce([np.ones(4096, dtype=np.float64)
+                         for _ in range(2)])
+        cluster.sim.run(until=cluster.sim.now + 2e-3)
+    assert any(isinstance(lib, ShiftLib) and lib.stats.recoveries > 0
+               for lib in libs)
+    pre = list(world.scheduler.assigned)
+    world.allreduce([np.ones(n, dtype=np.float64) for _ in range(2)])
+    post = world.scheduler.assigned
+    # after recovery, channel 0 carries home traffic again
+    assert post[0] > pre[0]
+
+
+def test_backup_nic_flap_then_default_failure_still_masked():
+    """A backup-rail outage (which flushes the control QP living there)
+    followed, after recovery, by a default-rail failure: SHIFT must
+    revive the control path and still mask (regression test for the
+    lazy ctrl-QP repair)."""
+    cluster, libs, world = build_world(n_ranks=2, channels=1,
+                                       max_chunk_bytes=4096,
+                                       probe_interval=2e-3)
+    n = 4096 * 8
+    # blip the backup rail while traffic rides the default
+    cluster.fail_nic("host0/mlx5_1")
+    world.allreduce([np.ones(n, dtype=np.float64) for _ in range(2)])
+    cluster.recover_nic("host0/mlx5_1")
+    cluster.sim.run(until=cluster.sim.now + 5e-3)
+    # now kill the default: fallback needs the (previously flushed) ctrl QP
+    cluster.sim.at(cluster.sim.now + 1e-4, cluster.fail_nic, "host0/mlx5_0")
+    arrays = [np.full(n, float(r + 1), dtype=np.float64) for r in range(2)]
+    world.allreduce(arrays)
+    np.testing.assert_allclose(arrays[0], 3.0)
+    assert any(isinstance(lib, ShiftLib) and lib.stats.fallbacks > 0
+               for lib in libs)
+    assert all(lib.stats.errors_propagated == 0 for lib in libs
+               if isinstance(lib, ShiftLib))
+
+
+# ---------------------------------------------------------------------------
+# bounded notify bookkeeping (the seen_notifies leak fix)
+# ---------------------------------------------------------------------------
+
+def test_notify_bookkeeping_stays_bounded():
+    _, _, world = build_world(n_ranks=2, channels=2,
+                              max_chunk_bytes=4096)
+    for _ in range(20):
+        arrays = [np.ones(4096 * 4, dtype=np.float32) for _ in range(2)]
+        world.allreduce(arrays)
+    # thousands of messages later, per-peer bookkeeping holds ZERO
+    # retained imm values in a clean run (the old seen-set grew by one
+    # entry per message forever)
+    for ch in world.channels:
+        for ep in ch.endpoints:
+            for peer, missing in ep.missing_notifies.items():
+                assert len(missing) == 0
+                assert ep.recv_seq[peer] > 0  # traffic actually flowed
+
+
+# ---------------------------------------------------------------------------
+# campaign integration: multirail scenarios + new workloads
+# ---------------------------------------------------------------------------
+
+def test_library_names_the_multirail_scenarios():
+    required = {"rail_kill_striped", "staggered_dual_rail_faults",
+                "rail_recovery_rebalance"}
+    assert required <= set(SCENARIOS)
+    for name in required:
+        assert SCENARIOS[name].min_resteers >= 1
+
+
+@pytest.mark.parametrize("name", ["rail_kill_striped",
+                                  "staggered_dual_rail_faults",
+                                  "rail_recovery_rebalance"])
+def test_multirail_scenarios_striped_allreduce(name):
+    r = run_scenario(SCENARIOS[name], workload="allreduce",
+                     max_rounds=1200)
+    assert r.ok, r.violations
+    assert r.payload_mismatches == 0
+    assert r.fallbacks >= SCENARIOS[name].min_fallbacks
+    assert r.resteered_chunks >= 1
+    assert r.channel_stats is not None and len(r.channel_stats) == 2
+    for c in r.channel_stats:
+        assert c["chunks_assigned"] == c["chunks_delivered"]
+
+
+def test_multirail_scenario_deterministic():
+    r1 = run_scenario(SCENARIOS["rail_kill_striped"], workload="allreduce",
+                      max_rounds=400, seed=3)
+    r2 = run_scenario(SCENARIOS["rail_kill_striped"], workload="allreduce",
+                      max_rounds=400, seed=3)
+    assert r1.fingerprint() == r2.fingerprint()
+
+
+@pytest.mark.parametrize("workload", ["broadcast", "all_to_all"])
+@pytest.mark.parametrize("name", ["baseline_clean", "sender_nic_down",
+                                  "failure_during_recovery"])
+def test_new_workloads_under_faults(name, workload):
+    r = run_scenario(SCENARIOS[name], workload=workload, max_rounds=800)
+    assert r.ok, r.violations
+    assert r.rounds > 0 and r.payload_mismatches == 0
+    assert r.fallbacks >= SCENARIOS[name].min_fallbacks
+
+
+@pytest.mark.parametrize("workload", ["broadcast", "all_to_all"])
+def test_new_workloads_unmaskable_aborts_loudly(workload):
+    r = run_scenario(SCENARIOS["double_rail_outage"], workload=workload,
+                     max_rounds=800)
+    assert r.ok, r.violations
+    assert r.aborted and r.errors_propagated >= 1
+    assert r.payload_mismatches == 0
