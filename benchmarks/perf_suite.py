@@ -40,6 +40,20 @@ Benchmarks
     floor — losing the striping is a correctness bug in the scheduler,
     not a perf regression.
 
+``quad_rail_busbw``
+    The same virtual-time busbw measurement at 4-rail scale: a paced
+    chunk stream striped across 4 channels vs the single-rail path
+    (absolute floor >= 3.4x), plus a degraded run where rails 0 and 2
+    are killed mid-stream — the adaptive scheduler must retain >= 1.7x
+    of single-rail busbw on the survivors (the 2/4-proportional-
+    degradation contract).
+
+``straggler_resteer_latency``
+    Virtual time from a 25x latency inflation on rail 0 to the first
+    chunk batch where the scheduler's share of NEW assignments on that
+    rail falls below 15% — the straggler-demotion reaction time.
+    Deterministic; gated on the 20% rule (lower is better).
+
 ``fallback_latency``
     Max virtual-time fallback latency over the sender_nic_down scenario
     in fast mode — a determinism canary: it must not drift at all.
@@ -76,12 +90,20 @@ GATED_RATIOS = {
     "campaign_pingpong.after.events_per_message": False,
     "campaign_pingpong.events_per_message_reduction": True,
     "multirail_busbw.busbw_ratio": True,
+    "quad_rail_busbw.busbw_ratio_quad": True,
+    "quad_rail_busbw.busbw_ratio_degraded": True,
+    "straggler_resteer_latency.detect_virtual_ms": False,
 }
 TOLERANCE = 0.20
-# Absolute floor (not baseline-relative): striping over 2 rails must
-# deliver >= 1.8x the single-rail pingpong busbw (virtual time, so this
-# is deterministic — a miss means the channel scheduler stopped striping)
+# Absolute floors (not baseline-relative), all in deterministic virtual
+# time: striping over 2 rails must deliver >= 1.8x the single-rail
+# pingpong busbw, 4 rails >= 3.4x, and with 2 of 4 rails dead the
+# adaptive scheduler must retain >= 1.7x of single-rail busbw on the
+# survivors — a miss means the scheduler stopped striping/adapting,
+# which is a correctness bug, not a perf regression.
 MULTIRAIL_MIN_RATIO = 1.8
+QUAD_MIN_RATIO = 3.4
+DEGRADED_MIN_RATIO = 1.7
 
 
 def bench_fig5_msg_rate(msg_size: int = 1 << 16, duration: float = 2.0):
@@ -205,6 +227,123 @@ def bench_multirail_busbw(size: int = 1 << 16, chunks: int = 512):
     }
 
 
+def _paced_stream(world, cluster, chunks: int, size: int,
+                  batch: int = 32) -> float:
+    """Drive a rank0 -> rank1 chunk stream in batches, waiting for each
+    batch to deliver before posting the next, so health transitions and
+    telemetry feedback influence later picks (an up-front burst would
+    freeze every assignment before the first completion). Returns the
+    elapsed VIRTUAL time (deterministic)."""
+    import numpy as np
+    payload = np.arange(size, dtype=np.uint8)
+    t0 = cluster.sim.now
+    sent = 0
+    while sent < chunks:
+        n = min(batch, chunks - sent)
+        for i in range(n):
+            world.send(0, 1, payload, tag=sent + i)
+        sent += n
+        while (sum(ch.chunks_delivered for ch in world.channels) < sent
+               and cluster.sim.step()):
+            pass
+    delivered = sum(ch.chunks_delivered for ch in world.channels)
+    if delivered != chunks:
+        # a busbw number over lost chunks would PASS the floors on a
+        # broken scheduler — fail loudly instead
+        raise RuntimeError(f"paced stream lost chunks: {delivered}/"
+                           f"{chunks} delivered")
+    return cluster.sim.now - t0
+
+
+def bench_quad_rail_busbw(size: int = 1 << 16, chunks: int = 512):
+    """4-rail busbw scaling + proportional degradation, virtual time.
+
+    ``quad`` stripes a paced stream across 4 channels on 4-NIC hosts
+    (floor: >= 3.4x single-rail). ``degraded`` kills rails 0 and 2
+    staggered mid-stream: SHIFT masks each loss while the adaptive
+    scheduler re-weights, and the surviving capacity must retain
+    >= 1.7x single-rail busbw (2/4-proportional degradation)."""
+    from repro.collectives import build_world
+
+    def one(channels, kills=()):
+        cluster, _, world = build_world(
+            n_ranks=2, channels=channels, nics_per_host=4,
+            max_chunk_bytes=size)
+        for at, target in kills:
+            cluster.schedule_fault(cluster.sim.now + at, "nic_down", target)
+        elapsed = _paced_stream(world, cluster, chunks, size)
+        return {
+            "busbw_gbps": round(chunks * size * 8 / elapsed / 1e9, 3),
+            "virtual_s": round(elapsed, 9),
+            "chunks_per_channel": [ch.chunks_delivered
+                                   for ch in world.channels],
+            "resteered": world.scheduler.resteered,
+        }
+
+    single = one(1)
+    quad = one(4)
+    degraded = one(4, kills=((2e-4, "rail:0"), (6e-4, "rail:2")))
+    return {
+        "config": {"size": size, "chunks": chunks,
+                   "note": "busbw over virtual time (deterministic); "
+                           "degraded = rails 0 and 2 killed staggered "
+                           "mid-stream (backups on rails 1/3)"},
+        "single_rail": single,
+        "quad_rail": quad,
+        "degraded_2of4": degraded,
+        "busbw_ratio_quad": round(quad["busbw_gbps"]
+                                  / single["busbw_gbps"], 3),
+        "busbw_ratio_degraded": round(degraded["busbw_gbps"]
+                                      / single["busbw_gbps"], 3),
+    }
+
+
+def bench_straggler_resteer(size: int = 1 << 14, batch: int = 16,
+                            batches: int = 200, inflate_after: int = 40):
+    """Straggler-demotion reaction time (virtual, deterministic).
+
+    A paced 2-channel stream runs; after ``inflate_after`` batches rail
+    0's links get 25x latency (alive, error-free). Reported is the
+    virtual time from the inflation to the end of the first batch whose
+    NEW assignments put <= 15% on the straggler rail."""
+    import numpy as np
+    from repro.collectives import build_world
+
+    cluster, libs, world = build_world(n_ranks=2, channels=2,
+                                       max_chunk_bytes=size)
+    payload = np.arange(size, dtype=np.uint8)
+    t_inflate = None
+    detect = None
+    prev = [0, 0]
+    sent = 0
+    for b in range(batches):
+        if b == inflate_after:
+            cluster.apply_fault("lat_inflate", "rail:0", 25.0)
+            t_inflate = cluster.sim.now
+        for i in range(batch):
+            world.send(0, 1, payload, tag=sent + i)
+        sent += batch
+        while (sum(ch.chunks_delivered for ch in world.channels) < sent
+               and cluster.sim.step()):
+            pass
+        delta = [world.scheduler.assigned[c] - prev[c] for c in range(2)]
+        prev = list(world.scheduler.assigned)
+        if (t_inflate is not None and detect is None
+                and delta[0] / max(sum(delta), 1) <= 0.15):
+            detect = cluster.sim.now - t_inflate
+            break
+    return {
+        "config": {"size": size, "batch": batch,
+                   "inflate": "rail:0 latency x25 (no health transition)",
+                   "threshold": "straggler share of new assignments <= 0.15"},
+        "detected": detect is not None,
+        "detect_virtual_ms": round(detect * 1e3, 4) if detect else None,
+        "fallbacks_during": sum(l.stats.fallbacks for l in libs),
+        "shares_final": [round(a / max(sum(world.scheduler.assigned), 1), 3)
+                         for a in world.scheduler.assigned],
+    }
+
+
 def bench_allreduce(n_ranks: int = 2, elems: int = 1 << 16,
                     rounds: int = 12):
     import numpy as np
@@ -244,17 +383,22 @@ def run_suite(quick: bool = False) -> dict:
     campaign = bench_campaign()
     allreduce = bench_allreduce(rounds=12)
     multirail = bench_multirail_busbw()
+    quad = bench_quad_rail_busbw()
+    straggler = bench_straggler_resteer()
     return {
         "schema": SCHEMA,
         "note": "before = pre-fast-path configuration (legacy per-WQE "
                 "event datapath); after = coalescing zero-copy datapath. "
-                "Wall-clock ratios are same-machine; events-per-message "
-                "and the multirail busbw ratio are deterministic.",
+                "Wall-clock ratios are same-machine; events-per-message, "
+                "the multirail/quad busbw ratios and the straggler "
+                "detection latency are deterministic.",
         "benchmarks": {
             "fig5_msg_rate_64k": fig5,
             "campaign_pingpong": campaign,
             "allreduce_bytes": allreduce,
             "multirail_busbw": multirail,
+            "quad_rail_busbw": quad,
+            "straggler_resteer_latency": straggler,
         },
     }
 
@@ -335,6 +479,30 @@ def emit(path: str, quick: bool = False,
     if mr["busbw_ratio"] < MULTIRAIL_MIN_RATIO:
         print(f"# PERF MULTIRAIL FLOOR: busbw_ratio {mr['busbw_ratio']} "
               f"< required {MULTIRAIL_MIN_RATIO}", flush=True)
+        return 1
+    qr = b["quad_rail_busbw"]
+    print(f"# perf: quad-rail busbw "
+          f"{qr['single_rail']['busbw_gbps']:.1f} -> "
+          f"{qr['quad_rail']['busbw_gbps']:.1f} Gbps "
+          f"({qr['busbw_ratio_quad']:.2f}x on 4 rails), 2/4 dead "
+          f"retains {qr['busbw_ratio_degraded']:.2f}x", flush=True)
+    if qr["busbw_ratio_quad"] < QUAD_MIN_RATIO:
+        print(f"# PERF QUAD FLOOR: busbw_ratio_quad "
+              f"{qr['busbw_ratio_quad']} < required {QUAD_MIN_RATIO}",
+              flush=True)
+        return 1
+    if qr["busbw_ratio_degraded"] < DEGRADED_MIN_RATIO:
+        print(f"# PERF DEGRADED FLOOR: busbw_ratio_degraded "
+              f"{qr['busbw_ratio_degraded']} < required "
+              f"{DEGRADED_MIN_RATIO}", flush=True)
+        return 1
+    sg = b["straggler_resteer_latency"]
+    print(f"# perf: straggler demotion detected in "
+          f"{sg['detect_virtual_ms']}ms virtual "
+          f"(fallbacks={sg['fallbacks_during']})", flush=True)
+    if not sg["detected"] or sg["fallbacks_during"]:
+        print("# PERF STRAGGLER: demotion not detected or caused a "
+              "health transition", flush=True)
         return 1
     # invariant violations fail UNCONDITIONALLY — no baseline needed: a
     # fast datapath that breaks exactly-once/zero-copy/ordering is a

@@ -9,7 +9,8 @@ layer (``channels=N`` stripes collectives across all host NICs with
 rail-aware SHIFT failover).
 """
 
-from .channel import Channel, ChannelScheduler          # noqa: F401
+from .channel import (Channel, ChannelScheduler,        # noqa: F401
+                      SchedulerConfig)
 from .endpoint import RankEndpoint                      # noqa: F401
 from .world import (CollectiveError, JcclWorld,         # noqa: F401
                     build_world)

@@ -1,21 +1,38 @@
-"""Channels: one per-rail communicator mesh + the chunk scheduler.
+"""Channels: one per-rail communicator mesh + the adaptive chunk scheduler.
 
 A :class:`Channel` is a complete QP mesh over ONE rail of the cluster:
 every rank opens the rail's NIC, wires a QP to every peer, and routes
 that rail's completions. ``JcclWorld`` owns ``N = channels`` of these and
 stripes collective traffic across them through a
-:class:`ChannelScheduler` that tracks per-channel health and backlog and
-resteers chunks away from a channel whose SHIFT endpoint is degraded
-(FALLBACK — riding its backup rail) or down (FAILED / QP in error).
+:class:`ChannelScheduler`.
+
+The scheduler is *telemetry-driven* (docs/scheduler.md has the full
+policy with a worked 4-rail example):
+
+* chunk assignment is weighted proportionally to each rail's **measured
+  busbw** (per-completion ``bytes/latency`` EWMA from
+  :class:`repro.core.fabric.RailTelemetry`) rather than backlog count,
+  so a degraded-but-alive rail gets a proportional share instead of
+  being either fully loaded or fully dark;
+* a slow-but-healthy rail is **demoted** (straggler routing) when its
+  completion-latency EWMA exceeds a configurable multiple of the
+  leave-one-out median across rails — no health transition required;
+* a rail returning from DOWN/DEGRADED is **re-admitted along a ramp**
+  instead of a cliff, so a freshly recovered path is not instantly
+  flooded with a backlog of home traffic.
 
 Health is per (rank, peer) link, not per channel globally: a rail that
-died for one host pair can still carry other pairs' traffic.
+died for one host pair can still carry other pairs' traffic.  All
+scheduler inputs are virtual-clock-driven, so same-seed runs make
+identical choices (the campaign fingerprint covers them).
 """
 
 from __future__ import annotations
 
 import itertools
-from typing import Dict, List, Sequence
+from dataclasses import dataclass
+from statistics import median
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import verbs as V
 from repro.core.shift import RecvState, SendState, ShiftQP
@@ -29,6 +46,7 @@ HEALTH_DOWN = "down"
 
 
 def _qp_health(qp) -> str:
+    """Map a QP's SHIFT/verbs state onto the link-health vocabulary."""
     if isinstance(qp, ShiftQP):
         if qp.send_state is SendState.FAILED:
             return HEALTH_DOWN
@@ -49,6 +67,9 @@ class Channel:
         self.world = world
         self.index = index
         self.nic_names = list(nic_names)
+        # rail index this channel's default path rides (telemetry key)
+        self.rail = world.cluster.nic_by_gid[
+            f"{libs[0].host}/{nic_names[0]}"].index
         self.endpoints: List[RankEndpoint] = [
             RankEndpoint(self, r, lib, nic_names[r])
             for r, lib in enumerate(libs)]
@@ -163,9 +184,11 @@ class Channel:
     # introspection
     # ------------------------------------------------------------------
     def stats(self) -> Dict[str, object]:
+        """Per-channel counters for campaign reports and invariants."""
         sched = self.world.scheduler
         return {
             "channel": self.index,
+            "rail": self.rail,
             "nics": sorted(set(self.nic_names)),
             "chunks_assigned": sched.assigned[self.index],
             "chunks_delivered": self.chunks_delivered,
@@ -176,52 +199,220 @@ class Channel:
         }
 
 
-class ChannelScheduler:
-    """Assigns chunks to channels: round-robin by the chunk's home channel
-    in the common case, resteered to the healthiest/least-backlogged
-    channel when the home link is degraded or down.
+@dataclass(frozen=True)
+class SchedulerConfig:
+    """Knobs for the adaptive :class:`ChannelScheduler`.
 
-    Deterministic: decisions depend only on virtual-clock-driven QP state
-    and the scheduler's own counters, so same-seed runs make identical
+    Pass via ``JcclWorld(..., sched=SchedulerConfig(...))`` (or
+    ``build_world(sched=...)``).  Every parameter is documented in
+    docs/scheduler.md with a worked 4-rail example.
+    """
+
+    #: weight of a DEGRADED channel (its SHIFT endpoints ride the backup
+    #: rail, which may be shared) relative to a mean healthy channel
+    degraded_weight: float = 0.25
+    #: demote a healthy rail whose completion-latency EWMA exceeds this
+    #: multiple of the leave-one-out median across the other rails
+    straggler_factor: float = 3.0
+    #: weight cap applied to a demoted straggler rail — deliberately
+    #: non-zero so completions keep flowing and recovery is observable
+    straggler_weight: float = 0.1
+    #: minimum latency samples (per rail) before straggler judgments
+    straggler_min_samples: int = 16
+    #: re-admission ramp length (virtual seconds) after a channel
+    #: returns to OK from DOWN/DEGRADED
+    ramp_time: float = 20e-3
+    #: weight multiplier at the start of the re-admission ramp
+    ramp_floor: float = 0.1
+    #: how many chunks past its proportional share a home channel may be
+    #: before the pick resteers (home-stickiness hysteresis)
+    share_slack: float = 2.0
+    #: decay applied to the recent-assignment counters once per closed
+    #: telemetry window (bounds the scheduler's memory of old traffic)
+    decay: float = 0.5
+
+
+class ChannelScheduler:
+    """Telemetry-driven weighted chunk-to-channel assignment.
+
+    Each pick computes a weight per channel for the (rank, peer) pair —
+    measured-busbw share for healthy rails, ``degraded_weight`` for
+    FALLBACK rails, 0 for dead ones, scaled by straggler demotion and
+    the recovery ramp — then honours the chunk's *home* channel unless
+    the home is over its proportional share by more than ``share_slack``
+    chunks (or unusable), in which case the chunk is resteered to the
+    most-behind channel (weighted deficit).  Share accounting uses
+    window-decayed counters so the policy reacts to the recent past,
+    not the whole run (a recovered rail is not flooded to make up for
+    its dark period).
+
+    Deterministic: every input (QP state, telemetry EWMAs, window
+    rolls) is virtual-clock-driven, so same-seed runs make identical
     choices (the campaign fingerprint covers them).
     """
 
-    def __init__(self, world):
+    def __init__(self, world, config: Optional[SchedulerConfig] = None):
         self.world = world
+        self.cfg = config or SchedulerConfig()
         self.n = len(world.channels)
         self.assigned: List[int] = [0] * self.n
         self.inflight: List[int] = [0] * self.n
         self.resteered = 0
+        # window-decayed recent-assignment counters (share accounting)
+        self.recent: List[float] = [0.0] * self.n
+        # introspection: last computed weights + straggler flags
+        self.last_weights: List[float] = [1.0 / self.n] * self.n
+        self.demoted: List[bool] = [False] * self.n
+        self._ramp_start: List[Optional[float]] = [None] * self.n
+        # channel-level impairment latch: set whenever ANY pair observes
+        # the channel off OK, cleared (starting ONE ramp) by the first
+        # pick that sees it healthy again — so later pairs' first
+        # post-recovery picks don't each restart the channel-wide ramp
+        self._impaired: List[bool] = [False] * self.n
+        self._win_seq = world.cluster.telemetry.window_seq
 
+    # ------------------------------------------------------------------
+    # weights
+    # ------------------------------------------------------------------
+    def _decay_recent(self) -> None:
+        """Decay recent-assignment counters once per closed telemetry
+        window (virtual-time driven, so fully deterministic)."""
+        tel = self.world.cluster.telemetry
+        tel.roll()
+        k = tel.window_seq - self._win_seq
+        if k:
+            self._win_seq = tel.window_seq
+            f = self.cfg.decay ** min(k, 64)
+            self.recent = [r * f for r in self.recent]
+
+    def _is_straggler(self, c: int, lats: List[Optional[float]],
+                      counts: List[int]) -> bool:
+        """Leave-one-out straggler test: rail ``c`` is demoted when its
+        latency EWMA exceeds ``straggler_factor`` x the median of the
+        OTHER rails' EWMAs (excluding ``c`` keeps a 2-rail straggler
+        from pulling the reference up toward itself)."""
+        cfg = self.cfg
+        if lats[c] is None or counts[c] < cfg.straggler_min_samples:
+            return False
+        others = [lats[o] for o in range(self.n)
+                  if o != c and lats[o] is not None
+                  and counts[o] >= cfg.straggler_min_samples]
+        if not others:
+            return False
+        return lats[c] > cfg.straggler_factor * median(others)
+
+    def channel_weights(self, rank: int, peer: int
+                        ) -> Tuple[List[str], List[float]]:
+        """Per-channel (states, weights) for one (rank, peer) pair.
+
+        Weights are NOT normalized here; a zero weight means the channel
+        is unusable for this pair. Also advances the per-channel ramp
+        bookkeeping (a transition back to OK starts a re-admission ramp).
+        """
+        cfg = self.cfg
+        world = self.world
+        tel = world.cluster.telemetry
+        now = world.sim.now
+        channels = world.channels
+        states = [ch.link_state(rank, peer) for ch in channels]
+        # ramp bookkeeping: a channel that left DOWN/DEGRADED re-admits
+        # gradually instead of jumping straight back to full weight. An
+        # already-running ramp is never restarted (no knock-back to the
+        # floor while it climbs).
+        for c, st in enumerate(states):
+            if st != HEALTH_OK:
+                self._impaired[c] = True
+                # any running ramp is moot while impaired — clearing it
+                # here guarantees a FLAPPING channel gets a fresh ramp
+                # on every recovery (a stale ramp from the previous
+                # recovery would otherwise read as already-expired)
+                self._ramp_start[c] = None
+            elif self._impaired[c]:
+                self._impaired[c] = False
+                self._ramp_start[c] = now
+        bus = [tel.busbw_ewma.get(channels[c].rail) for c in range(self.n)]
+        known = [bus[c] for c in range(self.n)
+                 if states[c] == HEALTH_OK and bus[c]]
+        mean_bw = sum(known) / len(known) if known else 0.0
+        lats = [tel.lat_ewma.get(channels[c].rail) for c in range(self.n)]
+        counts = [tel.samples.get(channels[c].rail, 0)
+                  for c in range(self.n)]
+        weights: List[float] = []
+        for c, st in enumerate(states):
+            if st == HEALTH_DOWN:
+                self.demoted[c] = False
+                weights.append(0.0)
+                continue
+            if st == HEALTH_DEGRADED:
+                self.demoted[c] = False
+                weights.append(cfg.degraded_weight)
+                continue
+            # healthy: proportional to measured busbw (no data -> mean)
+            base = (bus[c] / mean_bw) if (bus[c] and mean_bw) else 1.0
+            self.demoted[c] = self._is_straggler(c, lats, counts)
+            if self.demoted[c]:
+                base = min(base, cfg.straggler_weight)
+            t0 = self._ramp_start[c]
+            if t0 is not None:
+                dt = now - t0
+                if dt < cfg.ramp_time:
+                    base *= (cfg.ramp_floor
+                             + (1.0 - cfg.ramp_floor) * dt / cfg.ramp_time)
+                else:
+                    self._ramp_start[c] = None
+            weights.append(base)
+        self.last_weights = weights
+        return states, weights
+
+    # ------------------------------------------------------------------
+    # assignment
+    # ------------------------------------------------------------------
     def pick(self, rank: int, peer: int, home: int) -> int:
+        """Assign one chunk: the home channel while it is within its
+        proportional share, otherwise the most-behind usable channel."""
         home %= self.n
         if self.n == 1:
             self.assigned[0] += 1
             self.inflight[0] += 1
             return 0
-        states = [self.world.channels[c].link_state(rank, peer)
-                  for c in range(self.n)]
-        # prefer fully-healthy channels; fall back to degraded ones
-        # (FALLBACK still delivers, just on the backup rail); if every
-        # channel is down, post on the home anyway so the failure
-        # surfaces as an error instead of a silent stall.
-        pool = ([c for c in range(self.n) if states[c] == HEALTH_OK]
-                or [c for c in range(self.n) if states[c] == HEALTH_DEGRADED]
-                or list(range(self.n)))
-        if home in pool:
+        self._decay_recent()
+        _states, w = self.channel_weights(rank, peer)
+        pool = [c for c in range(self.n) if w[c] > 0.0]
+        if not pool:
+            # every channel is down: post on the home anyway so the
+            # failure surfaces as an error instead of a silent stall
             choice = home
         else:
-            choice = min(pool, key=lambda c: (self.inflight[c],
-                                              (c - home) % self.n))
-            self.resteered += 1
+            wsum = sum(w[c] for c in pool)
+            total = sum(self.recent[c] for c in pool) + 1.0
+            if (home in pool and self.recent[home]
+                    <= (w[home] / wsum) * total + self.cfg.share_slack):
+                choice = home
+            else:
+                # weighted deficit: most behind its target share wins;
+                # ties resolve to the nearest channel after home
+                choice = min(pool, key=lambda c: (
+                    self.recent[c] - (w[c] / wsum) * total,
+                    (c - home) % self.n))
+                if choice != home:
+                    self.resteered += 1
         self.assigned[choice] += 1
         self.inflight[choice] += 1
+        self.recent[choice] += 1.0
         return choice
 
     def note_delivered(self, channel: int) -> None:
+        """One chunk assigned to ``channel`` was delivered (frees backlog)."""
         self.inflight[channel] -= 1
 
     def snapshot(self) -> Dict[str, object]:
+        """Structured scheduler state for campaign reports. ``weights``
+        and ``demoted`` reflect the most recent pick's (rank, peer)
+        evaluation — health is per pair, so they are a sample, not a
+        channel-global truth."""
         return {"assigned": list(self.assigned),
                 "inflight": list(self.inflight),
-                "resteered": self.resteered}
+                "resteered": self.resteered,
+                "recent": [round(r, 3) for r in self.recent],
+                "weights": [round(x, 4) for x in self.last_weights],
+                "demoted": list(self.demoted)}

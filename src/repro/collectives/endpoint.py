@@ -101,8 +101,10 @@ class RankEndpoint:
 
     # -- wiring ---------------------------------------------------------
     def make_qp(self, peer: int):
-        # ShiftLib and StandardLib share the create_qp signature — the
-        # SHIFT magic is inside the returned QP object, not the call.
+        """Create (and index) this rank's QP toward ``peer`` on this rail.
+
+        ShiftLib and StandardLib share the create_qp signature — the
+        SHIFT magic is inside the returned QP object, not the call."""
         qp = self.lib.create_qp(self.pd, V.QPInitAttr(
             send_cq=self.cq, recv_cq=self.cq,
             cap=V.QPCap(self.world.qp_depth, self.world.qp_depth)))
@@ -117,6 +119,8 @@ class RankEndpoint:
         return qp
 
     def attach_listener(self, fn: Callable[[List[V.WC]], None]) -> None:
+        """Register the push-mode completion consumer for this rail's CQ
+        (the channel's WC router)."""
         if isinstance(self.lib, ShiftLib):
             self.cq.app_listener = fn
         else:
@@ -124,17 +128,22 @@ class RankEndpoint:
 
     # -- staging layout ---------------------------------------------------
     def staging_slot_addr(self, peer: int, seq: int) -> int:
+        """Registered address of the inbound staging slot for message
+        ``seq`` from ``peer`` (slot = seq % K, credit-aligned)."""
         slot = self.world.max_chunk_bytes
         off = (peer * self.K + seq % self.K) * slot
         return self.staging_mr.addr + off
 
     def staging_slot_view(self, peer: int, seq: int, nbytes: int) -> np.ndarray:
+        """View of the first ``nbytes`` of that staging slot (the
+        collective reads delivered chunk payloads through this)."""
         slot = self.world.max_chunk_bytes
         off = (peer * self.K + seq % self.K) * slot
         return self.staging[off:off + nbytes]
 
     # -- data-plane helpers -------------------------------------------------
     def post_recv_notify(self, peer: int) -> None:
+        """Pre-post one notify receive on the QP toward ``peer``."""
         self.lib.post_recv(self.qps[peer], V.RecvWR(wr_id=peer))
 
     def send_chunk(self, peer: int, payload: np.ndarray) -> int:
@@ -184,6 +193,8 @@ class RankEndpoint:
             send_flags=V.SEND_FLAG_SIGNALED))
 
     def on_send_complete(self, peer: int) -> None:
+        """One outbound chunk to ``peer`` completed: free its FIFO slot
+        and post the oldest held chunk, if any (completion-gated reuse)."""
         self.send_completed[peer] += 1
         if self.pending_sends[peer] and (
                 self.send_seq[peer] - self.send_completed[peer] < self.K):

@@ -27,12 +27,12 @@ from repro.core.shift import ShiftLib, StandardLib
 
 from .algorithms import (_AllToAll, _Collective, _PipelineBroadcast,
                          _RingAllGather, _RingAllReduce)
-from .channel import Channel, ChannelScheduler
+from .channel import Channel, ChannelScheduler, SchedulerConfig
 from .endpoint import RankEndpoint, _ListenedCQ  # noqa: F401 (re-export)
 
 
 class CollectiveError(RuntimeError):
-    pass
+    """A collective could not complete (crash-stop abort or timeout)."""
 
 
 class JcclWorld:
@@ -42,7 +42,8 @@ class JcclWorld:
                  max_chunk_bytes: int = 1 << 22, qp_depth: int = 8192,
                  cq_depth: int = 1 << 17, recv_prepost: int = 64,
                  src_slots: int = 4, strict_order: bool = True,
-                 channels: int = 1):
+                 channels: int = 1,
+                 sched: Optional[SchedulerConfig] = None):
         self.cluster = cluster
         self.sim = cluster.sim
         self.libs = list(libs)
@@ -62,7 +63,7 @@ class JcclWorld:
             Channel(self, c, self.libs,
                     [self._nic_name(lib, c, nic) for lib in self.libs])
             for c in range(self.n_channels)]
-        self.scheduler = ChannelScheduler(self)
+        self.scheduler = ChannelScheduler(self, config=sched)
         # (channel, receiver, sender, seq) -> in-flight chunk tag
         self._tags: Dict[Tuple[int, int, int, int], object] = {}
         # settle shadow control verbs (no-op for StandardLib worlds)
@@ -91,14 +92,17 @@ class JcclWorld:
 
     @property
     def total_notifies(self) -> int:
+        """Notify count summed over every channel."""
         return sum(ch.total_notifies for ch in self.channels)
 
     @property
     def order_violations(self) -> int:
+        """Out-of-order notify count summed over every channel."""
         return sum(ch.order_violations for ch in self.channels)
 
     @property
     def duplicate_notifies(self) -> int:
+        """Duplicate notify count summed over every channel."""
         return sum(ch.duplicate_notifies for ch in self.channels)
 
     # ------------------------------------------------------------------
@@ -160,11 +164,13 @@ class JcclWorld:
 
     @property
     def any_shift(self) -> bool:
+        """True if any rank runs ShiftLib (collectives tolerate faults)."""
         return any(isinstance(lib, ShiftLib) for lib in self.libs)
 
     # -- public API -------------------------------------------------------
     def allreduce(self, arrays: List[np.ndarray], op: str = "sum",
                   timeout: float = 120.0) -> List[np.ndarray]:
+        """Ring all-reduce ``arrays`` in place (one array per rank)."""
         coll = _RingAllReduce(self, arrays, op)
         self._run(coll, timeout)
         return arrays
@@ -188,6 +194,8 @@ class JcclWorld:
 
     def all_gather(self, shards: List[np.ndarray],
                    timeout: float = 120.0) -> List[np.ndarray]:
+        """Ring all-gather: every rank ends with the concatenation of
+        all ranks' (variable-size) shards."""
         full = [np.concatenate([np.zeros_like(s) for s in shards])
                 for _ in range(self.n_ranks)]
         for r, s in enumerate(shards):
@@ -199,6 +207,8 @@ class JcclWorld:
 
     def broadcast(self, array: np.ndarray, root: int = 0,
                   timeout: float = 120.0) -> List[np.ndarray]:
+        """Pipelined chain broadcast of ``array`` from ``root``; returns
+        one output per rank (the root's is a read-only alias)."""
         # Ownership rule: the root's entry is a READ-ONLY view of the
         # caller's array — the pipeline only ever reads the root slot
         # (non-roots get fresh writable buffers), so aliasing the input
@@ -221,6 +231,7 @@ class JcclWorld:
         return outs
 
     def barrier(self, timeout: float = 60.0) -> None:
+        """Block (in virtual time) until every rank reaches the barrier."""
         self.allreduce([np.zeros(self.n_ranks, dtype=np.float32)
                         for _ in range(self.n_ranks)], timeout=timeout)
 
@@ -245,6 +256,7 @@ class JcclWorld:
                             for r in range(self.n_ranks)],
             "channels": [ch.stats() for ch in self.channels],
             "scheduler": self.scheduler.snapshot(),
+            "telemetry": self.cluster.telemetry.snapshot(),
         }
 
 

@@ -1,3 +1,9 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""Core substrate: simulated fabric, verbs transport, SHIFT, trilemma.
+
+``fabric`` is the deterministic discrete-event network (hosts, RNICs,
+rail switches, failure injection, per-rail telemetry); ``verbs`` the RC
+transport engine behind a libibverbs-style API; ``shift`` the user-space
+cross-NIC fault-tolerance library the paper contributes; ``protocols``
+and ``trilemma`` the failover-semantics models backing its impossibility
+results; ``kvstore`` the out-of-band management-network store.
+"""

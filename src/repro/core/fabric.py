@@ -50,6 +50,7 @@ class Event:
         self._sim = sim
 
     def cancel(self) -> None:
+        """Mark this event dead; it will be skipped (lazy deletion)."""
         # cancelling an already-executed event is a no-op — it left the
         # heap when it fired, so it must not count toward _dead (phantom
         # counts would trigger compactions that remove nothing)
@@ -116,6 +117,7 @@ class Simulator:
         heapq.heappush(self._heap, (t, seq, None, fn, args))
 
     def at(self, time: float, fn: Callable, *args) -> Event:
+        """Schedule ``fn(*args)`` at absolute virtual ``time``."""
         return self.schedule(max(0.0, time - self.now), fn, *args)
 
     def _compact(self) -> None:
@@ -130,6 +132,7 @@ class Simulator:
         self._compactions += 1
 
     def peek_time(self) -> Optional[float]:
+        """Virtual time of the next live event (None if the heap is empty)."""
         heap = self._heap
         while heap and heap[0][2] is not None and heap[0][2].cancelled:
             heapq.heappop(heap)
@@ -177,6 +180,7 @@ class Simulator:
             self.now = until
 
     def run_until_idle(self, max_events: int = 50_000_000) -> None:
+        """Run until the event heap drains completely."""
         self.run(until=None, max_events=max_events)
 
 
@@ -195,10 +199,16 @@ class Link:
     bandwidth: float = 100 * GBPS  # bytes/sec
     latency: float = 2e-6  # seconds, one-way propagation
     up: bool = True
+    # pre-degradation values, remembered by the first bw_degrade /
+    # lat_inflate fault so the matching restore puts them back exactly
+    base_bandwidth: Optional[float] = None
+    base_latency: Optional[float] = None
 
 
 @dataclass
 class SwitchPort:
+    """One switch port: link + peer NIC + independent up/down state."""
+
     index: int
     up: bool = True
     link: Optional[Link] = None
@@ -217,6 +227,7 @@ class Switch:
         self._next_port = 0
 
     def attach(self, nic: "RNIC", link: Link) -> SwitchPort:
+        """Wire ``nic`` to the next free port via ``link``."""
         port = self.ports[self._next_port]
         self._next_port += 1
         port.link = link
@@ -261,6 +272,7 @@ class RNIC:
 
     # -- failure injection ---------------------------------------------------
     def set_up(self, up: bool) -> None:
+        """Change interface state, notifying registered state listeners."""
         if self.up == up:
             return
         self.up = up
@@ -276,6 +288,7 @@ class RNIC:
         return base / nflows
 
     def path_up(self) -> bool:
+        """True if NIC, cable, switch and port are all up."""
         return (
             self.up
             and self.link is not None
@@ -301,12 +314,133 @@ class Host:
         self._next_addr = 0x1000
 
     def add_nic(self, nic: RNIC) -> None:
+        """Attach one more RNIC (rail index = position)."""
         self.nics.append(nic)
 
     def alloc_addr(self, nbytes: int) -> int:
+        """Allocate a page-aligned MR base address in this host's space."""
         addr = self._next_addr
         self._next_addr += ((nbytes + 0xFFF) // 0x1000 + 1) * 0x1000
         return addr
+
+
+# ---------------------------------------------------------------------------
+# Per-rail telemetry (feeds the adaptive channel scheduler)
+# ---------------------------------------------------------------------------
+
+
+class RailTelemetry:
+    """Continuous per-rail traffic telemetry on the virtual clock.
+
+    Three signals per rail (= NIC index), all deterministic because they
+    are driven purely by virtual time and payload byte counts:
+
+    * **Delivered-byte-rate windows** — ``rates[rail]`` is the payload
+      bytes/second delivered over the last *measurement span* (at least
+      one ``window``, exact length = whenever the lazy roll happened),
+      computed from :meth:`Cluster.rail_bytes` deltas. Spans roll
+      lazily on access, so no periodic actor is needed and idle
+      periods cost nothing; because sampling is lazy there is no
+      boundary-aligned sample, and dividing by the true span is what
+      keeps the rate honest (no traffic time-shifted across windows).
+    * **Completion-latency EWMA** — ``lat_ewma[rail]`` tracks post-to-ACK
+      latency of payload-carrying send WQEs, fed by the verbs engine at
+      ACK arrival (both datapaths). The channel scheduler's straggler
+      demotion compares a rail's EWMA against the leave-one-out median
+      of its peers.
+    * **Per-completion busbw EWMA** — ``busbw_ewma[rail]`` tracks
+      ``bytes / latency`` per completion: a load-independent estimate of
+      the rail's service capacity (a saturated AND an underloaded rail
+      both report their true per-chunk service rate). The scheduler
+      weights chunk assignment proportionally to this signal.
+
+    SHIFT lifecycle hooks (:meth:`note_lifecycle`) reset a rail's EWMAs
+    on fallback/recovery so pre-fault readings don't linger as stale
+    truth while the rail's physical path has changed.
+    """
+
+    def __init__(self, cluster: "Cluster", window: float = 250e-6,
+                 alpha: float = 0.2):
+        self.cluster = cluster
+        self.window = window
+        self.alpha = alpha
+        self.lat_ewma: Dict[int, float] = {}
+        self.busbw_ewma: Dict[int, float] = {}
+        self.samples: Dict[int, int] = {}
+        self.rates: Dict[int, float] = {}
+        #: monotone counter of closed windows (the scheduler decays its
+        #: recent-assignment counters once per closed window)
+        self.window_seq = 0
+        self._win_start = cluster.sim.now
+        self._win_base: Dict[int, int] = {}
+
+    # -- completion feed (verbs layer) ----------------------------------
+    def note_completion(self, rail: int, nbytes: int,
+                        latency: float) -> None:
+        """Record one payload send completion on ``rail``.
+
+        Called by the verbs engine at ACK arrival for payload-carrying
+        WQEs (``nbytes > 0``); notifies/probes are header-sized and
+        excluded so the busbw EWMA is not diluted."""
+        if latency <= 0.0 or nbytes <= 0:
+            return
+        self.roll()
+        a = self.alpha
+        bw = nbytes / latency
+        prev_lat = self.lat_ewma.get(rail)
+        self.lat_ewma[rail] = (latency if prev_lat is None
+                               else (1 - a) * prev_lat + a * latency)
+        prev_bw = self.busbw_ewma.get(rail)
+        self.busbw_ewma[rail] = (bw if prev_bw is None
+                                 else (1 - a) * prev_bw + a * bw)
+        self.samples[rail] = self.samples.get(rail, 0) + 1
+
+    # -- lifecycle feed (SHIFT layer) -----------------------------------
+    def note_lifecycle(self, event: str, rail: int) -> None:
+        """SHIFT fallback/recovery on a QP whose default NIC sits on
+        ``rail``: the rail's physical path just changed, so its EWMAs are
+        reset and re-learned from post-transition completions."""
+        if event in ("fallback", "recovery", "failed"):
+            self.lat_ewma.pop(rail, None)
+            self.busbw_ewma.pop(rail, None)
+            self.samples[rail] = 0
+
+    # -- windowed delivered-byte rates ----------------------------------
+    def roll(self) -> None:
+        """Close the measurement span once >= one window has elapsed
+        (lazy, idempotent). The rate divides the byte delta by the TRUE
+        span (boundary to now) — the delta is sampled now, so dividing
+        by a window-aligned span would attribute open-window traffic to
+        the closed window (time-shifted rates)."""
+        now = self.cluster.sim.now
+        elapsed = now - self._win_start
+        if elapsed < self.window:
+            return
+        cur = {rail: d["delivered_bytes"]
+               for rail, d in self.cluster.rail_bytes().items()}
+        for rail, v in cur.items():
+            self.rates[rail] = (v - self._win_base.get(rail, 0)) / elapsed
+        self._win_base = cur
+        self._win_start = now
+        self.window_seq += int(elapsed / self.window)
+
+    def rate(self, rail: int) -> float:
+        """Delivered bytes/second of ``rail`` over the last closed
+        measurement span (>= one window)."""
+        self.roll()
+        return self.rates.get(rail, 0.0)
+
+    def snapshot(self) -> Dict[str, object]:
+        """Structured copy of every signal (campaign/benchmark reports)."""
+        self.roll()
+        return {
+            "window_s": self.window,
+            "window_seq": self.window_seq,
+            "rates_bytes_per_s": dict(self.rates),
+            "lat_ewma_s": dict(self.lat_ewma),
+            "busbw_ewma_bytes_per_s": dict(self.busbw_ewma),
+            "samples": dict(self.samples),
+        }
 
 
 # ---------------------------------------------------------------------------
@@ -340,14 +474,20 @@ class Cluster:
         # applied-fault audit trail: (virtual time, kind, nic gid)
         self.fault_log: List[Tuple[float, str, str]] = []
         self.fault_listeners: List[Callable[[float, str, str], None]] = []
+        # per-rail telemetry (byte-rate windows + latency/busbw EWMAs);
+        # the verbs engine and SHIFT feed it, the channel scheduler and
+        # benchmarks read it
+        self.telemetry = RailTelemetry(self)
 
     # -- construction ---------------------------------------------------------
     def add_host(self, name: str) -> Host:
+        """Create and register a host."""
         h = Host(name, self)
         self.hosts[name] = h
         return h
 
     def add_switch(self, name: str, n_ports: int = 64) -> Switch:
+        """Create and register a rail/ToR switch."""
         s = Switch(name, n_ports)
         self.switches[name] = s
         return s
@@ -355,6 +495,7 @@ class Cluster:
     def add_nic(self, host: Host, name: str, switch: Switch,
                 bandwidth: float = 100 * GBPS, latency: float = 2e-6,
                 pcie_bandwidth: Optional[float] = None) -> RNIC:
+        """Create a NIC on ``host``, cable it to ``switch``, register it."""
         nic = RNIC(name, host, index=len(host.nics),
                    pcie_bandwidth=pcie_bandwidth or 14 * GBPS * 8)
         host.add_nic(nic)
@@ -375,6 +516,7 @@ class Cluster:
         return src.path_up() and dst.path_up()
 
     def path_latency(self, src: RNIC, dst: RNIC) -> float:
+        """One-way propagation latency src -> dst (links + hops)."""
         lat = (src.link.latency if src.link else 0.0) + (
             dst.link.latency if dst.link else 0.0)
         if src.switch is not dst.switch:
@@ -399,32 +541,38 @@ class Cluster:
 
     # -- failure injection ----------------------------------------------------
     def fail_nic(self, gid: str) -> None:
+        """Take the NIC at ``gid`` down (interface loss)."""
         self._record_fault("nic_down", gid)
         self.nic_by_gid[gid].set_up(False)
 
     def recover_nic(self, gid: str) -> None:
+        """Bring the NIC at ``gid`` back up."""
         self._record_fault("nic_up", gid)
         self.nic_by_gid[gid].set_up(True)
 
     def fail_switch_port(self, gid: str) -> None:
+        """Take down the switch port the NIC at ``gid`` connects to."""
         nic = self.nic_by_gid[gid]
         if nic.switch_port:
             self._record_fault("port_down", gid)
             nic.switch_port.up = False
 
     def recover_switch_port(self, gid: str) -> None:
+        """Bring that switch port back up."""
         nic = self.nic_by_gid[gid]
         if nic.switch_port:
             self._record_fault("port_up", gid)
             nic.switch_port.up = True
 
     def fail_link(self, gid: str) -> None:
+        """Pull the cable of the NIC at ``gid``."""
         nic = self.nic_by_gid[gid]
         if nic.link:
             self._record_fault("link_down", gid)
             nic.link.up = False
 
     def recover_link(self, gid: str) -> None:
+        """Re-seat that cable."""
         nic = self.nic_by_gid[gid]
         if nic.link:
             self._record_fault("link_up", gid)
@@ -435,14 +583,67 @@ class Cluster:
         self.sim.at(down_at, self.fail_nic, gid)
         self.sim.at(up_at, self.recover_nic, gid)
 
+    # -- partial degradation (the rail stays UP, just slower) ----------------
+    def degrade_link_bw(self, gid: str, factor: float = 0.25) -> None:
+        """Cut a link's bandwidth to ``factor`` of its original value.
+
+        The interface stays up and error-free — no QP sees a failure —
+        so only *telemetry* (measured busbw) can reveal the degradation.
+        This is the `degraded-but-alive rail` the adaptive scheduler
+        must load proportionally instead of all-or-nothing."""
+        nic = self.nic_by_gid[gid]
+        if nic.link:
+            self._record_fault(f"bw_degrade:{factor:g}", gid)
+            link = nic.link
+            if link.base_bandwidth is None:
+                link.base_bandwidth = link.bandwidth
+            link.bandwidth = link.base_bandwidth * factor
+
+    def restore_link_bw(self, gid: str) -> None:
+        """Undo :meth:`degrade_link_bw` (restores the original bandwidth)."""
+        nic = self.nic_by_gid[gid]
+        if nic.link and nic.link.base_bandwidth is not None:
+            self._record_fault("bw_restore", gid)
+            nic.link.bandwidth = nic.link.base_bandwidth
+
+    def inflate_link_latency(self, gid: str, factor: float = 25.0) -> None:
+        """Multiply a link's propagation latency by ``factor``.
+
+        Models a congested/misrouted path: completions still succeed
+        (keep the factor small enough that the RC ack timeout is not
+        exceeded) but per-completion latency rises — the straggler
+        signal the scheduler demotes on, with NO health transition."""
+        nic = self.nic_by_gid[gid]
+        if nic.link:
+            self._record_fault(f"lat_inflate:{factor:g}", gid)
+            link = nic.link
+            if link.base_latency is None:
+                link.base_latency = link.latency
+            link.latency = link.base_latency * factor
+
+    def restore_link_latency(self, gid: str) -> None:
+        """Undo :meth:`inflate_link_latency` (restores the original)."""
+        nic = self.nic_by_gid[gid]
+        if nic.link and nic.link.base_latency is not None:
+            self._record_fault("lat_restore", gid)
+            nic.link.latency = nic.link.base_latency
+
     # -- composable fault-injection hooks (scenario engine entry points) -----
     # Uniform fault vocabulary: every injectable event is a (kind, target)
-    # pair, where target is a NIC GID ("host0/mlx5_0") or a rail selector
-    # ("rail:0" = NIC index 0 of every host — correlated rail failure).
+    # pair — target is a NIC GID ("host0/mlx5_0") or a rail selector
+    # ("rail:0" = NIC index 0 of every host — correlated rail failure) —
+    # plus an optional magnitude ``arg`` for the degradation kinds
+    # (bw_degrade: bandwidth fraction, lat_inflate: latency multiplier).
     FAULT_KINDS = ("nic_down", "nic_up", "port_down", "port_up",
-                   "link_down", "link_up")
+                   "link_down", "link_up",
+                   "bw_degrade", "bw_restore", "lat_inflate", "lat_restore")
 
     def _record_fault(self, kind: str, gid: str) -> None:
+        """Append to the audit trail and fire the fault listeners.
+        Parametric faults arrive with their magnitude baked into the
+        kind (``bw_degrade:0.05``, ``lat_inflate:25``) so the trail —
+        and every fingerprint built from it — distinguishes injections
+        that differ only in magnitude."""
         self.fault_log.append((self.sim.now, kind, gid))
         for cb in list(self.fault_listeners):
             cb(self.sim.now, kind, gid)
@@ -461,23 +662,36 @@ class Cluster:
                     for nic in host.nics if nic.index == k]
         return [target]
 
-    def apply_fault(self, kind: str, target: str) -> None:
+    def apply_fault(self, kind: str, target: str,
+                    arg: Optional[float] = None) -> None:
         """Apply one fault action now. Rail selectors expand to every
-        matching NIC (same virtual instant -> correlated failure)."""
+        matching NIC (same virtual instant -> correlated failure).
+        ``arg`` parameterizes the degradation kinds (``bw_degrade``:
+        bandwidth fraction, ``lat_inflate``: latency multiplier) and is
+        ignored by the binary up/down kinds."""
         fn = {
             "nic_down": self.fail_nic, "nic_up": self.recover_nic,
             "port_down": self.fail_switch_port,
             "port_up": self.recover_switch_port,
             "link_down": self.fail_link, "link_up": self.recover_link,
+            "bw_restore": self.restore_link_bw,
+            "lat_restore": self.restore_link_latency,
         }.get(kind)
-        if fn is None:
+        parametric = {"bw_degrade": self.degrade_link_bw,
+                      "lat_inflate": self.inflate_link_latency}.get(kind)
+        if fn is None and parametric is None:
             raise ValueError(f"unknown fault kind {kind!r} "
                              f"(expected one of {self.FAULT_KINDS})")
         for gid in self.resolve_targets(target):
-            fn(gid)
+            if parametric is not None:
+                parametric(gid) if arg is None else parametric(gid, arg)
+            else:
+                fn(gid)
 
-    def schedule_fault(self, at: float, kind: str, target: str) -> None:
-        self.sim.at(at, self.apply_fault, kind, target)
+    def schedule_fault(self, at: float, kind: str, target: str,
+                       arg: Optional[float] = None) -> None:
+        """Schedule :meth:`apply_fault` at virtual time ``at``."""
+        self.sim.at(at, self.apply_fault, kind, target, arg)
 
 
 # ---------------------------------------------------------------------------

@@ -30,14 +30,17 @@ class KVStore:
 
     # -- synchronous surface (background-thread context) -------------------
     def put(self, key: str, value: Any) -> None:
+        """Publish ``key`` -> ``value`` (e.g. a default->backup mapping)."""
         self.n_puts += 1
         self._data[key] = value
 
     def get(self, key: str) -> Optional[Any]:
+        """Fetch ``key``'s value, or None if not (yet) published."""
         self.n_gets += 1
         return self._data.get(key)
 
     def contains(self, key: str) -> bool:
+        """True if ``key`` has been published."""
         return key in self._data
 
     # -- async retry-until-ready -------------------------------------------

@@ -31,6 +31,8 @@ from . import verbs as V
 
 
 class Protocol(enum.Enum):
+    """The training-communication protocols of the paper's Table 1."""
+
     NCCL_SIMPLE = "nccl_simple"      # Write* + Write_Imm notify
     NVSHMEM_ATOMIC = "nvshmem"       # Write* + Atomic notify
     MSCCLPP_ATOMIC = "msccl++"       # same semantics as NVSHMEM
@@ -39,6 +41,8 @@ class Protocol(enum.Enum):
 
 
 class FailoverClass(enum.Enum):
+    """Whether a protocol's in-flight WQEs may be retransmitted (§3.2)."""
+
     SAFE = "safe"                # retransmission-safe under SHIFT
     UNSAFE_ATOMIC = "unsafe_atomic"
     UNSAFE_PACKED = "unsafe_packed"
@@ -91,13 +95,16 @@ class LLChannel:
 
     @staticmethod
     def pack(data: int, seq: int) -> bytes:
+        """Pack 4B data + 4B flag into one 8-byte LL write."""
         return int(data).to_bytes(4, "little") + int(
             LLChannel.FLAG_BASE + seq).to_bytes(4, "little")
 
     def slot_addr(self, i: int) -> int:
+        """Byte address of LL slot ``i`` (circular)."""
         return self.mr.addr + 8 * (i % self.n_slots)
 
     def read_slot(self, i: int) -> tuple:
+        """Read slot ``i`` back as a (data, flag) pair."""
         raw = bytes(self.mr.slice(self.slot_addr(i), 8))
         data = int.from_bytes(raw[:4], "little")
         flag = int.from_bytes(raw[4:], "little")

@@ -90,6 +90,9 @@ def _wrap_delta(a: int, b: int) -> int:
 
 
 class SendState(enum.Enum):
+    """Send-side SHIFT states (Fig. 4): Default -> Fallback ->
+    WaitSignaled -> WaitDrained -> Default; FAILED is terminal."""
+
     DEFAULT = 1
     FALLBACK = 2
     WAIT_SIGNALED = 3
@@ -98,12 +101,19 @@ class SendState(enum.Enum):
 
 
 class RecvState(enum.Enum):
+    """Receive-side SHIFT states: Default <-> Fallback."""
+
     DEFAULT = 1
     FALLBACK = 2
 
 
 @dataclass
 class ShiftConfig:
+    """SHIFT tunables: probing cadence, control-plane costs, rail-aware
+    backup placement (``data_rails`` / ``backup_overrides``) — see
+    docs/scheduler.md for how placement interacts with the channel
+    scheduler at >2-rail scale."""
+
     probe_interval: float = 20e-3
     ctrl_recv_depth: int = 8
     protect_atomics: bool = True
@@ -135,6 +145,9 @@ class ShiftConfig:
 
 @dataclass
 class ShiftStats:
+    """Per-library counters (fallbacks, recoveries, probes, zero-copy
+    audit) the scenario invariants assert on after every run."""
+
     fallbacks: int = 0
     recoveries: int = 0
     probes_sent: int = 0
@@ -170,48 +183,62 @@ class StandardLib:
         self.host = host
 
     def open_device(self, nic: str) -> V.Context:
+        """ibv_open_device on this host."""
         return V.ibv_open_device(self.cluster, self.host, nic)
 
     def alloc_pd(self, ctx) -> V.PD:
+        """ibv_alloc_pd."""
         return V.ibv_alloc_pd(ctx)
 
     def reg_mr(self, pd, buf: np.ndarray) -> V.MR:
+        """ibv_reg_mr."""
         return V.ibv_reg_mr(pd, buf)
 
     def create_cq(self, ctx, depth: int) -> V.CQ:
+        """ibv_create_cq."""
         return V.ibv_create_cq(ctx, depth)
 
     def create_qp(self, pd, init: V.QPInitAttr) -> V.QP:
+        """ibv_create_qp."""
         return V.ibv_create_qp(pd, init)
 
     def modify_qp(self, qp, attr: V.QPAttr) -> None:
+        """ibv_modify_qp."""
         V.ibv_modify_qp(qp, attr)
 
     def query_qp(self, qp) -> V.QPAttr:
+        """ibv_query_qp."""
         return V.ibv_query_qp(qp)
 
     def post_send(self, qp, wr: V.SendWR) -> None:
+        """ibv_post_send."""
         V.ibv_post_send(qp, wr)
 
     def post_send_chain(self, qp, wrs: Sequence[V.SendWR]) -> None:
+        """ibv_post_send with a wr.next chain (one doorbell)."""
         V.ibv_post_send_chain(qp, wrs)
 
     def post_recv(self, qp, wr: V.RecvWR) -> None:
+        """ibv_post_recv."""
         V.ibv_post_recv(qp, wr)
 
     def poll_cq(self, cq, n: int) -> List[V.WC]:
+        """ibv_poll_cq."""
         return V.ibv_poll_cq(cq, n)
 
     def route_of(self, qp) -> Tuple[str, int]:
+        """(gid, qpn) route peers use to connect to ``qp``."""
         return qp.ctx.nic.gid, qp.qpn
 
     def connect(self, qp, peer_gid: str, peer_qpn: int) -> None:
+        """Drive the INIT/RTR/RTS dance toward a peer route."""
         self.modify_qp(qp, V.QPAttr(qp_state=V.QPState.INIT))
         self.modify_qp(qp, V.QPAttr(qp_state=V.QPState.RTR, dest_gid=peer_gid,
                                     dest_qp_num=peer_qpn, rq_psn=0))
         self.modify_qp(qp, V.QPAttr(qp_state=V.QPState.RTS, sq_psn=0))
 
     def settle(self, duration: float = 0.1) -> None:
+        """Run the virtual clock forward (control-plane settling)."""
         self.cluster.sim.run(until=self.cluster.sim.now + duration)
 
 
@@ -258,6 +285,9 @@ class _ControlActor:
 
 
 class ShiftContext:
+    """App-facing device context: default NIC now, backup opened by the
+    background actor (shadow ibv_open_device)."""
+
     def __init__(self, lib: "ShiftLib", default: V.Context):
         self.lib = lib
         self.default = default
@@ -275,6 +305,8 @@ class ShiftContext:
 
 
 class ShiftPD:
+    """App-facing PD: default PD now, backup allocated in the background."""
+
     def __init__(self, lib: "ShiftLib", sctx: ShiftContext):
         self.lib = lib
         self.sctx = sctx
@@ -352,6 +384,8 @@ class ShiftCQ:
         self.process_physical()
 
     def process_physical(self) -> None:
+        """Drain both physical CQs through SHIFT's WC router, then
+        deliver any buffered app WCs to a push-mode consumer."""
         route = self.lib._route_wc
         for cq in (self.default, self.backup):
             if cq is None:
@@ -375,6 +409,7 @@ class ShiftCQ:
             self.app_listener(buf)
 
     def poll(self, n: int) -> List[V.WC]:
+        """App-facing ibv_poll_cq over the routed WC buffer."""
         self.process_physical()
         buf = self.app_buffer
         if not buf:
@@ -490,6 +525,8 @@ class ShiftQP:
     # connection setup
     # ------------------------------------------------------------------
     def modify(self, attr: V.QPAttr) -> None:
+        """App-facing ibv_modify_qp: drives the default QP and kicks
+        the background backup/control-QP connection at RTR."""
         if attr.qp_state is V.QPState.RTR:
             # the paper measures extra ibv_query_qp cost here (Fig. 7):
             # SHIFT snapshots attributes to be able to reset after fallback
@@ -545,6 +582,8 @@ class ShiftQP:
             self._n_atomics -= 1
 
     def post_send(self, wr: V.SendWR) -> None:
+        """App-facing ibv_post_send, routed by the send-state machine
+        (default QP, key-patched backup QP, or withheld doorbell)."""
         if self.send_state is SendState.FAILED:
             raise V.VerbsError("SHIFT QP failed (unmaskable error)")
         rec = _SendRec(next(self._seq), wr)
@@ -635,6 +674,7 @@ class ShiftQP:
         self.default.ring_sq_doorbell()
 
     def post_recv(self, wr: V.RecvWR) -> None:
+        """App-facing ibv_post_recv, routed by the receive state."""
         rec = _RecvRec(next(self._seq))
         self.recv_fifo.append(rec)
         if self.recv_state is RecvState.DEFAULT:
@@ -726,6 +766,8 @@ class ShiftQP:
     # fallback: State 1 -> State 2  (§4.3.2)
     # ------------------------------------------------------------------
     def on_default_error(self, wc: V.WC) -> None:
+        """An error WC surfaced on the default path: enter fallback (or
+        abort an in-progress recovery)."""
         if self.send_state in (SendState.FALLBACK, SendState.FAILED):
             return  # flush residue of an already-handled failure
         if self._awaiting_ack or self._in_handshake:
@@ -765,6 +807,10 @@ class ShiftQP:
             self._post_ctrl_recv()
 
     def initiate_fallback(self) -> None:
+        """State 1 -> 2 (§4.3.2): reset both QPs at the next cycle PSN,
+        re-arm receives on the backup, send CTRL_NOTIFY with the recv
+        counter. Refused (error propagated) if backup resources are not
+        ready or atomics are in flight (retransmission-safe check)."""
         lib = self.lib
         if not self.ready:
             self._propagate_errors("backup resources not ready")
@@ -1054,6 +1100,9 @@ class ShiftQP:
     # WC routing hooks (called by ShiftLib._route_wc)
     # ------------------------------------------------------------------
     def on_send_wc(self, rec: _SendRec, wc: V.WC) -> None:
+        """Route one physical send WC: error -> fallback/propagate;
+        success -> retire the rec (and unsignaled predecessors), track
+        fallback latency, emit the app WC, complete the recovery fence."""
         if wc.is_error:
             if wc.qp_num == self.default.qpn:
                 self.on_default_error(wc)
@@ -1103,6 +1152,9 @@ class ShiftQP:
             self._on_fence_complete()
 
     def on_recv_wc(self, rec: _RecvRec, wc: V.WC) -> None:
+        """Route one physical recv WC: bump the receive counter (the
+        handshake's progress proof) and surface it app-side, renumbered
+        to the app-facing QPN (opacity)."""
         if wc.is_error:
             # recv flush errors accompany a send-side error; fallback is
             # driven from the send side (footnote 3)
@@ -1214,9 +1266,15 @@ class ShiftLib:
 
     def add_event_listener(self,
                            cb: Callable[[str, "ShiftQP"], None]) -> None:
+        """Observe lifecycle events: cb(event, qp) with event in
+        {"fallback", "recovery", "failed"}."""
         self.event_listeners.append(cb)
 
     def _emit_event(self, event: str, qp: "ShiftQP") -> None:
+        # feed the fabric's per-rail telemetry first: a fallback/recovery
+        # changes which physical path the QP's traffic rides, so the
+        # default rail's latency/busbw EWMAs are stale and must re-learn
+        self.cluster.telemetry.note_lifecycle(event, qp.default.ctx.nic.index)
         for cb in list(self.event_listeners):
             cb(event, qp)
 
@@ -1231,43 +1289,57 @@ class ShiftLib:
 
     # -- control verbs (recorded + shadowed) --------------------------------
     def open_device(self, nic: str) -> ShiftContext:
+        """ibv_open_device + shadow open of the policy-chosen backup NIC."""
         return ShiftContext(self, V.ibv_open_device(self.cluster, self.host, nic))
 
     def alloc_pd(self, sctx: ShiftContext) -> ShiftPD:
+        """ibv_alloc_pd + shadow backup PD."""
         return ShiftPD(self, sctx)
 
     def reg_mr(self, spd: ShiftPD, buf: np.ndarray) -> ShiftMR:
+        """ibv_reg_mr + shadow backup registration (same VA, new keys)."""
         return ShiftMR(self, spd, buf)
 
     def create_cq(self, sctx: ShiftContext, depth: int) -> ShiftCQ:
+        """ibv_create_cq + shadow backup CQ behind one app-facing CQ."""
         return ShiftCQ(self, sctx, depth)
 
     def create_qp(self, spd: ShiftPD, init: V.QPInitAttr) -> ShiftQP:
+        """ibv_create_qp + shadow backup data/control QPs."""
         return ShiftQP(self, spd, init)
 
     def modify_qp(self, sqp: ShiftQP, attr: V.QPAttr) -> None:
+        """ibv_modify_qp on the app-facing SHIFT QP."""
         sqp.modify(attr)
 
     def query_qp(self, sqp: ShiftQP) -> V.QPAttr:
+        """ibv_query_qp of the default QP (opacity)."""
         return V.ibv_query_qp(sqp.default)
 
     # -- data verbs ----------------------------------------------------------
     def post_send(self, sqp: ShiftQP, wr: V.SendWR) -> None:
+        """ibv_post_send through the SHIFT state machine."""
         sqp.post_send(wr)
 
     def post_send_chain(self, sqp: ShiftQP, wrs: Sequence[V.SendWR]) -> None:
+        """Chained ibv_post_send (one doorbell) through SHIFT."""
         sqp.post_send_chain(wrs)
 
     def post_recv(self, sqp: ShiftQP, wr: V.RecvWR) -> None:
+        """ibv_post_recv through the SHIFT receive state."""
         sqp.post_recv(wr)
 
     def poll_cq(self, scq: ShiftCQ, n: int) -> List[V.WC]:
+        """ibv_poll_cq over the routed app-facing WC buffer."""
         return scq.poll(n)
 
     def route_of(self, sqp: ShiftQP) -> Tuple[str, int]:
+        """(gid, qpn) of the DEFAULT path — what peers connect to."""
         return sqp.default.ctx.nic.gid, sqp.default.qpn
 
     def connect(self, sqp: ShiftQP, peer_gid: str, peer_qpn: int) -> None:
+        """INIT/RTR/RTS toward a peer; backup wiring happens in the
+        background off the KV store."""
         self.modify_qp(sqp, V.QPAttr(qp_state=V.QPState.INIT))
         self.modify_qp(sqp, V.QPAttr(qp_state=V.QPState.RTR,
                                      dest_gid=peer_gid, dest_qp_num=peer_qpn,
@@ -1275,6 +1347,7 @@ class ShiftLib:
         self.modify_qp(sqp, V.QPAttr(qp_state=V.QPState.RTS, sq_psn=0))
 
     def settle(self, duration: float = 0.1) -> None:
+        """Run the virtual clock so background control work completes."""
         self.cluster.sim.run(until=self.cluster.sim.now + duration)
 
     # -- WC routing ------------------------------------------------------

@@ -39,37 +39,49 @@ class Memory:
         self._m: Dict[int, int] = {}
 
     def read(self, a: int) -> int:
+        """Load address ``a`` (0 if never written)."""
         return self._m.get(a, 0)
 
     def write(self, a: int, v: int) -> None:
+        """Store ``v`` at address ``a``."""
         self._m[a] = v
 
 
 @dataclass(frozen=True)
 class Write:
+    """One-sided RDMA Write (idempotent)."""
+
     a: int
     v: int
 
 
 @dataclass(frozen=True)
 class Read:
+    """One-sided RDMA Read (idempotent, no memory effect)."""
+
     a: int
 
 
 @dataclass(frozen=True)
 class FADD:
+    """Fetch-and-add (non-idempotent: Lemma 3.2)."""
+
     a: int
     delta: int
 
 
 @dataclass(frozen=True)
 class CAS:
+    """Compare-and-swap (non-idempotent under ABA: Lemma C.3)."""
+
     a: int
     exp: int
     new: int
 
 
 def exec_op(m: Memory, op) -> Optional[int]:
+    """Execute one operation against ``m``; returns the fetched value
+    for Read/FADD/CAS, None for Write."""
     if isinstance(op, Write):
         m.write(op.a, op.v)
         return None
@@ -91,6 +103,8 @@ def exec_op(m: Memory, op) -> Optional[int]:
 
 
 class Ev(enum.Enum):
+    """Trace-event vocabulary of Appendix C."""
+
     SEND = "EvSend"
     COMPLETION = "EvCompletion"
     TIMEOUT = "EvTimeout"
@@ -104,6 +118,8 @@ class Ev(enum.Enum):
 
 @dataclass(frozen=True)
 class Event:
+    """One trace event: a kind plus the operation/payload it concerns."""
+
     kind: Ev
     op: object = None
     payload: Tuple = ()
@@ -188,6 +204,7 @@ def decision_violates(decide: Callable[[Trace], bool]) -> str:
 
 
 def fadd_non_idempotent(a: int = 0, delta: int = 5) -> bool:
+    """Lemma 3.2 witness: executing FADD twice != executing it once."""
     m1, m2 = Memory(), Memory()
     exec_op(m1, FADD(a, delta))
     exec_op(m2, FADD(a, delta))

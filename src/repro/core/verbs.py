@@ -40,6 +40,8 @@ from .fabric import Cluster, RNIC
 
 
 class Opcode(enum.Enum):
+    """Send-side RDMA work-request opcodes."""
+
     WRITE = "RDMA_WRITE"
     WRITE_IMM = "RDMA_WRITE_WITH_IMM"
     SEND = "SEND"
@@ -53,6 +55,8 @@ TWO_SIDED_OPCODES = (Opcode.SEND, Opcode.WRITE_IMM)
 
 
 class QPState(enum.Enum):
+    """RC queue-pair state machine states."""
+
     RESET = "RESET"
     INIT = "INIT"
     RTR = "RTR"
@@ -61,6 +65,8 @@ class QPState(enum.Enum):
 
 
 class WCStatus(enum.Enum):
+    """Work-completion status codes (subset of ibv_wc_status)."""
+
     SUCCESS = "IBV_WC_SUCCESS"
     RETRY_EXC_ERR = "IBV_WC_RETRY_EXC_ERR"
     RNR_RETRY_EXC_ERR = "IBV_WC_RNR_RETRY_EXC_ERR"
@@ -71,6 +77,8 @@ class WCStatus(enum.Enum):
 
 
 class WCOpcode(enum.Enum):
+    """Work-completion opcodes (what kind of WR completed)."""
+
     SEND = "IBV_WC_SEND"
     RDMA_WRITE = "IBV_WC_RDMA_WRITE"
     RDMA_READ = "IBV_WC_RDMA_READ"
@@ -109,7 +117,7 @@ class _SegmentTimeout:
 
 
 class VerbsError(RuntimeError):
-    pass
+    """A verbs call failed (bad state, full queue, invalid key, ...)."""
 
 
 # ---------------------------------------------------------------------------
@@ -119,6 +127,8 @@ class VerbsError(RuntimeError):
 
 @dataclass
 class SGE:
+    """Scatter/gather element: one registered-memory range."""
+
     addr: int
     length: int
     lkey: int
@@ -126,6 +136,8 @@ class SGE:
 
 @dataclass
 class SendWR:
+    """A send work request (ibv_send_wr, single-SGE subset)."""
+
     wr_id: int
     opcode: Opcode
     sge: Optional[SGE] = None
@@ -139,12 +151,16 @@ class SendWR:
 
 @dataclass
 class RecvWR:
+    """A receive work request (ibv_recv_wr, single-SGE subset)."""
+
     wr_id: int
     sge: Optional[SGE] = None
 
 
 @dataclass
 class WC:
+    """A work completion (ibv_wc)."""
+
     wr_id: int
     status: WCStatus
     opcode: WCOpcode
@@ -155,6 +171,7 @@ class WC:
 
     @property
     def is_error(self) -> bool:
+        """True unless the status is SUCCESS."""
         return self.status is not WCStatus.SUCCESS
 
 
@@ -167,7 +184,8 @@ class SendWQE:
     __slots__ = ("idx", "wr_id", "opcode", "local_addr", "length", "lkey",
                  "remote_addr", "rkey", "imm_data", "signaled", "fence",
                  "compare_add", "swap", "psn", "attempts", "acked",
-                 "completed", "status", "probe", "timeout_ev", "batch")
+                 "completed", "status", "probe", "timeout_ev", "batch",
+                 "tx_time")
 
     def __init__(self, idx: int, wr: SendWR):
         self.idx = idx
@@ -193,6 +211,9 @@ class SendWQE:
         self.acked = self.completed = self.probe = False
         # batch: _SegmentTimeout of the coalesced segment in flight
         self.psn = self.status = self.timeout_ev = self.batch = None
+        # tx_time: virtual time of the FIRST serialization attempt —
+        # completion latency (telemetry) spans retransmissions
+        self.tx_time = None
 
     def to_wr(self) -> SendWR:
         """Reconstruct a WR from this WQE (SHIFT's 'copying inherent WQEs')."""
@@ -206,6 +227,8 @@ class SendWQE:
 
 
 class RecvWQE:
+    """Driver-converted receive WR, resident in the RQ ring."""
+
     __slots__ = ("idx", "wr_id", "addr", "length", "lkey", "consumed",
                  "completed", "status")
 
@@ -220,6 +243,7 @@ class RecvWQE:
         self.status: Optional[WCStatus] = None
 
     def to_wr(self) -> RecvWR:
+        """Reconstruct a WR from this WQE (SHIFT recv resubmission)."""
         sge = SGE(self.addr, self.length, self.lkey) if (
             self.length or self.lkey) else None
         return RecvWR(self.wr_id, sge)
@@ -258,6 +282,7 @@ class MR:
         pd.ctx.register_mr(self)
 
     def slice(self, addr: int, length: int) -> np.ndarray:
+        """Writable view of registered memory at absolute ``addr``."""
         off = addr - self.addr
         if off < 0 or off + length > self.length:
             raise VerbsError("MR bounds")
@@ -278,6 +303,8 @@ class MR:
 
 
 class PD:
+    """Protection domain (scopes MRs and QPs to one device context)."""
+
     def __init__(self, ctx: "Context"):
         self.ctx = ctx
         self.mrs: List[MR] = []
@@ -293,6 +320,7 @@ class CompChannel:
         self.pending: List["CQ"] = []
 
     def on_event(self, cb: Callable[["CQ"], None]) -> None:
+        """Register the completion-event callback (the 'blocked thread')."""
         self.callback = cb
 
     def _fire(self, cq: "CQ") -> None:
@@ -303,6 +331,8 @@ class CompChannel:
 
 
 class CQ:
+    """Completion queue with optional event-channel arming."""
+
     def __init__(self, ctx: "Context", depth: int,
                  channel: Optional[CompChannel] = None):
         self.ctx = ctx
@@ -313,6 +343,7 @@ class CQ:
         self.armed = False
 
     def push(self, wc: WC) -> None:
+        """Append a WC; fires the comp channel if armed (one per arm)."""
         if len(self.entries) >= self.depth:
             raise VerbsError(f"CQ overflow (depth={self.depth})")
         self.entries.append(wc)
@@ -321,6 +352,7 @@ class CQ:
             self.channel._fire(self)
 
     def poll(self, n: int) -> List[WC]:
+        """Drain up to ``n`` completions."""
         entries = self.entries
         if not entries:
             return []
@@ -334,12 +366,16 @@ class CQ:
 
 @dataclass
 class QPCap:
+    """Queue-pair ring capacities."""
+
     max_send_wr: int = 512
     max_recv_wr: int = 256
 
 
 @dataclass
 class QPInitAttr:
+    """QP creation attributes (ibv_qp_init_attr subset)."""
+
     send_cq: CQ = None
     recv_cq: CQ = None
     cap: QPCap = field(default_factory=QPCap)
@@ -404,6 +440,7 @@ class QP:
     # state transitions
     # ------------------------------------------------------------------
     def modify(self, attr: QPAttr) -> None:
+        """ibv_modify_qp: drive the RESET/INIT/RTR/RTS/ERR transitions."""
         st = attr.qp_state
         if st is QPState.RESET:
             self._reset()
@@ -473,6 +510,8 @@ class QP:
     # execution fence depends on that)
     # ------------------------------------------------------------------
     def post_send_wqe(self, wr: SendWR, ring: bool = True) -> SendWQE:
+        """Convert ``wr`` into a ring WQE; ``ring=False`` withholds the
+        doorbell (SHIFT's execution fence depends on the separation)."""
         if self.state not in (QPState.RTS,):
             if self.state is QPState.ERR:
                 raise VerbsError("post_send on QP in ERR state")
@@ -525,6 +564,7 @@ class QP:
         self.ctx._engine_kick(self)
 
     def post_recv_wqe(self, wr: RecvWR, ring: bool = True) -> RecvWQE:
+        """Convert ``wr`` into an RQ ring WQE (doorbell separable)."""
         idx = self.rq_tail
         if idx - self.rq_consumed >= self.cap.max_recv_wr:
             raise VerbsError("recv queue full")
@@ -607,10 +647,12 @@ class Context:
 
     # -- registries -----------------------------------------------------
     def register_qp(self, qp: QP) -> None:
+        """Index a QP by qpn locally and by (gid, qpn) on the wire."""
         self.qps[qp.qpn] = qp
         _qp_registry[(self.nic.gid, qp.qpn)] = qp
 
     def register_mr(self, mr: MR) -> None:
+        """Index an MR by rkey and lkey for wire-side lookups."""
         _mr_registry[(self.nic.host.name, mr.rkey)] = mr
         _mr_registry_lkey[(self.nic.host.name, mr.lkey)] = mr
 
@@ -691,11 +733,14 @@ class Context:
         ser = 0.0
         tx = 0
         next_psn = qp.next_psn
+        now = self.sim.now
         for wqe in wqes:
             if wqe.psn is None and not wqe.probe:
                 wqe.psn = next_psn
                 next_psn += 1
             wqe.attempts += 1
+            if wqe.tx_time is None:
+                wqe.tx_time = now
             if wqe.length:
                 ser += PER_MESSAGE_OVERHEAD + wqe.length / bw
                 tx += wqe.length
@@ -913,6 +958,10 @@ class Context:
             wqe.completed = True
             wqe.status = ok
             any_done = True
+            if wqe.length and not wqe.probe and wqe.tx_time is not None:
+                # per-rail completion telemetry (payload WQEs only)
+                self.cluster.telemetry.note_completion(
+                    src_nic.index, wqe.length, self.sim.now - wqe.tx_time)
             if wqe.timeout_ev is not None:
                 wqe.timeout_ev.cancel()
                 wqe.timeout_ev = None
@@ -963,6 +1012,8 @@ class Context:
             wqe.psn = qp.next_psn
             qp.next_psn += 1
         wqe.attempts += 1
+        if wqe.tx_time is None:
+            wqe.tx_time = self.sim.now
         # DMA-read the payload out of registered memory at transmit time
         payload = None
         if wqe.opcode in _PAYLOAD_OPCODES and wqe.length:
@@ -1142,6 +1193,10 @@ class Context:
             mr = self._local_mr(wqe.lkey)
             mr.slice(wqe.local_addr, n)[:] = np.frombuffer(
                 bytes(read_data[:n]), dtype=np.uint8)
+        if wqe.length and not wqe.probe and wqe.tx_time is not None:
+            # per-rail completion telemetry (payload WQEs only)
+            self.cluster.telemetry.note_completion(
+                src_nic.index, wqe.length, self.sim.now - wqe.tx_time)
         qp._complete_send(wqe, WCStatus.SUCCESS)
 
     def _send_nak_access(self, src_qp: QP, wqe: SendWQE, dst_nic: RNIC,
@@ -1220,10 +1275,12 @@ def reset_registries() -> None:
 
 
 def ibv_get_device_list(cluster: Cluster, host: str) -> List[str]:
+    """Device names available on ``host``."""
     return [nic.name for nic in cluster.hosts[host].nics]
 
 
 def ibv_open_device(cluster: Cluster, host: str, nic_name: str) -> Context:
+    """Open a device context on ``host``'s NIC named ``nic_name``."""
     for nic in cluster.hosts[host].nics:
         if nic.name == nic_name:
             return Context(cluster, nic)
@@ -1231,39 +1288,49 @@ def ibv_open_device(cluster: Cluster, host: str, nic_name: str) -> Context:
 
 
 def ibv_alloc_pd(ctx: Context) -> PD:
+    """Allocate a protection domain on ``ctx``."""
     return PD(ctx)
 
 
 def ibv_reg_mr(pd: PD, buf: np.ndarray, addr: Optional[int] = None) -> MR:
+    """Register ``buf`` (1-D uint8) as an MR; ``addr`` pins the VA
+    (SHIFT's backup registration reuses the default MR's address)."""
     return MR(pd, buf, addr=addr)
 
 
 def ibv_create_comp_channel(ctx: Context) -> CompChannel:
+    """Create a completion event channel."""
     return CompChannel(ctx)
 
 
 def ibv_create_cq(ctx: Context, depth: int,
                   channel: Optional[CompChannel] = None) -> CQ:
+    """Create a CQ of ``depth`` entries, optionally on a comp channel."""
     return CQ(ctx, depth, channel)
 
 
 def ibv_req_notify_cq(cq: CQ) -> None:
+    """Arm the CQ for one completion event."""
     cq.armed = True
 
 
 def ibv_create_qp(pd: PD, init: QPInitAttr) -> QP:
+    """Create an RC queue pair."""
     return QP(pd, init)
 
 
 def ibv_modify_qp(qp: QP, attr: QPAttr) -> None:
+    """Apply a state transition / attribute change to ``qp``."""
     qp.modify(attr)
 
 
 def ibv_query_qp(qp: QP) -> QPAttr:
+    """Snapshot ``qp``'s current attributes."""
     return qp.query()
 
 
 def ibv_post_send(qp: QP, wr: SendWR) -> SendWQE:
+    """Post one send WR with an immediate doorbell."""
     return qp.post_send_wqe(wr, ring=True)
 
 
@@ -1273,10 +1340,12 @@ def ibv_post_send_chain(qp: QP, wrs: Sequence[SendWR]) -> List[SendWQE]:
 
 
 def ibv_post_recv(qp: QP, wr: RecvWR) -> RecvWQE:
+    """Post one receive WR with an immediate doorbell."""
     return qp.post_recv_wqe(wr, ring=True)
 
 
 def ibv_poll_cq(cq: CQ, n: int) -> List[WC]:
+    """Poll up to ``n`` completions off ``cq``."""
     return cq.poll(n)
 
 

@@ -346,7 +346,7 @@ def run_pingpong(scenario: Scenario, seed: int = 0, n_msgs: int = 60,
 def _run_rounds(workload: str, scenario: Scenario, seed: int,
                 n_ranks: int, max_rounds: int, probe_interval: float,
                 fast: bool, channels: int, max_chunk_bytes: int,
-                round_fn) -> RunResult:
+                round_fn, nics_per_host: Optional[int] = None) -> RunResult:
     """Shared driver for JcclWorld round workloads: build the world,
     schedule the fault timeline, run ``round_fn(world, rng, timeout) ->
     payload mismatches`` until the traffic horizon/deadline, settle, and
@@ -361,7 +361,8 @@ def _run_rounds(workload: str, scenario: Scenario, seed: int,
     cluster, libs, world = build_world(
         n_ranks=n_ranks, probe_interval=probe_interval,
         max_chunk_bytes=max_chunk_bytes, strict_order=False, fast=fast,
-        channels=channels)
+        channels=channels,
+        nics_per_host=nics_per_host or max(2, channels))
     _observe(cluster, libs, result)
     t0 = cluster.sim.now
     scenario.schedule(cluster, t0)
@@ -390,7 +391,8 @@ def _run_rounds(workload: str, scenario: Scenario, seed: int,
 def run_allreduce(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
                   elems: int = 1 << 14, max_rounds: int = 4000,
                   probe_interval: float = 5e-3, fast: bool = True,
-                  channels: int = 1) -> RunResult:
+                  channels: int = 1,
+                  nics_per_host: Optional[int] = None) -> RunResult:
     """Repeated ring all-reduces; every round's numeric result must equal
     the true sum (payload-level exactly-once: a lost or doubled
     contribution changes it)."""
@@ -403,13 +405,15 @@ def run_allreduce(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
                    if not np.allclose(arr, expect, atol=1e-4))
 
     return _run_rounds("allreduce", scenario, seed, n_ranks, max_rounds,
-                       probe_interval, fast, channels, 1 << 14, one_round)
+                       probe_interval, fast, channels, 1 << 14, one_round,
+                       nics_per_host=nics_per_host)
 
 
 def run_broadcast(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
                   elems: int = 1 << 14, max_rounds: int = 4000,
                   probe_interval: float = 5e-3, fast: bool = True,
-                  channels: int = 1, root: int = 0) -> RunResult:
+                  channels: int = 1, root: int = 0,
+                  nics_per_host: Optional[int] = None) -> RunResult:
     """Repeated pipelined broadcasts; every round's outputs are compared
     byte-for-byte against the root payload — a lost, duplicated or
     misordered chunk shows up as a payload mismatch."""
@@ -419,13 +423,15 @@ def run_broadcast(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
         return sum(1 for out in outs if not np.array_equal(out, msg))
 
     return _run_rounds("broadcast", scenario, seed, n_ranks, max_rounds,
-                       probe_interval, fast, channels, 1 << 14, one_round)
+                       probe_interval, fast, channels, 1 << 14, one_round,
+                       nics_per_host=nics_per_host)
 
 
 def run_alltoall(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
                  row_elems: int = 1 << 12, max_rounds: int = 4000,
                  probe_interval: float = 5e-3, fast: bool = True,
-                 channels: int = 1) -> RunResult:
+                 channels: int = 1,
+                 nics_per_host: Optional[int] = None) -> RunResult:
     """Repeated direct-write all-to-alls; the received matrix must be the
     exact transpose of the sent rows every round (payload-level
     exactly-once: a dropped or doubled row changes a cell)."""
@@ -438,7 +444,8 @@ def run_alltoall(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
 
     return _run_rounds("all_to_all", scenario, seed, n_ranks, max_rounds,
                        probe_interval, fast, channels,
-                       max(1 << 14, row_elems * 4), one_round)
+                       max(1 << 14, row_elems * 4), one_round,
+                       nics_per_host=nics_per_host)
 
 
 # ---------------------------------------------------------------------------
@@ -478,7 +485,7 @@ def run_ddp(scenario: Scenario, seed: int = 0, steps: int = 6,
                 lib.config.probe_interval = max(per_step / 4, 1e-5)
             for act in scenario.actions:
                 cluster.schedule_fault(cluster.sim.now + act.at * scale,
-                                       act.kind, act.target)
+                                       act.kind, act.target, act.arg)
         result.rounds = step
 
     try:

@@ -17,9 +17,14 @@ The four headline invariants (checked after EVERY run):
 
 Channelized (multi-rail) runs add per-channel checks: every channel's
 notify counters must be clean, chunk accounting must balance (every
-chunk the scheduler assigned was delivered), and scenarios that fault a
+chunk the scheduler assigned was delivered), scenarios that fault a
 rail under striped traffic assert the scheduler actually resteered
-chunks off it (``Scenario.min_resteers``).
+chunks off it (``Scenario.min_resteers``), and proportional-share
+scenarios bound each channel's final share of assigned chunks
+(``Scenario.share_bounds``) — a degraded/straggler rail must be neither
+fully loaded nor fully dark. ``Scenario.max_fallbacks`` caps health
+transitions: degradation faults must be absorbed by the scheduler
+alone.
 
 Scenario expectations (masked vs. propagated, minimum fallback count,
 recovery) are checked alongside: a fault-tolerance claim is vacuous if
@@ -86,6 +91,23 @@ def check_invariants(result: RunResult, scenario: Scenario) -> List[str]:
             v.append(f"scheduler never resteered off the faulted rail: "
                      f"{result.resteered_chunks} resteers < expected "
                      f"{scenario.min_resteers}")
+        # proportional-share bounds (the adaptive scheduler's contract:
+        # a degraded/straggler rail keeps a bounded, non-zero share
+        # instead of being fully loaded or fully dark)
+        if scenario.share_bounds:
+            total = sum(c["chunks_assigned"] for c in result.channel_stats)
+            for ch, (lo, hi) in scenario.share_bounds.items():
+                if ch >= len(result.channel_stats):
+                    # the run used fewer channels than the scenario's
+                    # widest configuration (e.g. a 2-rail workload of a
+                    # 4-rail scenario): the bound is vacuous, like a
+                    # rail selector that matches nothing
+                    continue
+                share = (result.channel_stats[ch]["chunks_assigned"]
+                         / max(total, 1))
+                if not lo <= share <= hi:
+                    v.append(f"channel {ch} share {share:.3f} outside "
+                             f"proportional bounds [{lo}, {hi}]")
 
     # -- bounded fallback latency -------------------------------------------
     late = [l for l in result.fallback_latencies
@@ -106,6 +128,11 @@ def check_invariants(result: RunResult, scenario: Scenario) -> List[str]:
         if result.fallbacks < scenario.min_fallbacks:
             v.append(f"fault did not bite: {result.fallbacks} fallbacks "
                      f"< expected {scenario.min_fallbacks}")
+        if (scenario.max_fallbacks is not None
+                and result.fallbacks > scenario.max_fallbacks):
+            v.append(f"degradation caused a health transition: "
+                     f"{result.fallbacks} fallbacks > allowed "
+                     f"{scenario.max_fallbacks}")
         # recovery needs probe cycles the short ddp window doesn't have
         if (scenario.expect_recovery and result.workload != "ddp"
                 and result.recoveries < 1):

@@ -3,13 +3,20 @@
 All scenarios assume the standard rail-optimized testbed
 (``build_cluster(n_hosts>=2, nics_per_host=2)``): NIC ``mlx5_0`` of every
 host on rail 0 (the default data rail), ``mlx5_1`` on rail 1 (SHIFT's
-backup). Times are virtual seconds after workload start; the pingpong
-workload paces one message per 200us, so the 2ms-40ms window is dense
-mid-stream traffic.
+backup). Multi-rail scenarios request wider hosts via
+``workload_hints`` (e.g. ``{"allreduce": {"channels": 4,
+"nics_per_host": 4}}``); rail selectors that match nothing on a
+narrower workload are no-ops, so every scenario stays runnable under
+every workload. Times are virtual seconds after workload start; the
+pingpong workload paces one message per 200us, so the 2ms-40ms window
+is dense mid-stream traffic.
 
 Naming convention: what fails, then how. ``expect_masked=False`` marks
 the boundary of fault tolerance — scenarios SHIFT must *propagate*, not
-mask (the Trilemma: no healthy path left).
+mask (the Trilemma: no healthy path left). Degradation scenarios
+(``max_fallbacks=0``) mark the opposite boundary: faults the adaptive
+scheduler must absorb with NO health transition at all (see
+docs/scheduler.md and docs/scenarios.md).
 """
 
 from __future__ import annotations
@@ -185,6 +192,54 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
                  A(25e-3, "nic_up", "host0/mlx5_0")),
         min_fallbacks=1, expect_recovery=True, min_resteers=1,
         tags=("rail", "multirail"),
+        workload_hints={"allreduce": {"channels": 2}},
+    ),
+    Scenario(
+        name="quad_rail_staggered_kill",
+        description="4-rail striped traffic; rails 0 and 2 die 18ms "
+                    "apart (their SHIFT backups land on the surviving "
+                    "rails 1/3). Each loss is masked per-QP while the "
+                    "adaptive scheduler re-weights: the dead channels' "
+                    "cumulative share must collapse to a bounded "
+                    "minority while the survivors carry the bulk — the "
+                    "2/4-proportional-degradation contract.",
+        actions=(A(2e-3, "nic_down", "rail:0"),
+                 A(20e-3, "nic_down", "rail:2")),
+        min_fallbacks=2, expect_recovery=False, min_resteers=1,
+        share_bounds={0: (0.005, 0.20), 2: (0.005, 0.30),
+                      1: (0.25, 0.60), 3: (0.25, 0.60)},
+        tags=("rail", "multirail", "quad", "permanent"),
+        workload_hints={"allreduce": {"channels": 4, "nics_per_host": 4,
+                                      "elems": 1 << 15}},
+    ),
+    Scenario(
+        name="slow_rail_straggler",
+        description="Rail 0's links get 25x propagation latency — "
+                    "alive, error-free, just slow (a congested or "
+                    "misrouted path). The scheduler's latency-EWMA "
+                    "straggler demotion must cut the rail's share to "
+                    "the configured floor with ZERO health transitions "
+                    "(no fallback, no probe, no error WC).",
+        actions=(A(2e-3, "lat_inflate", "rail:0", 25.0),),
+        min_fallbacks=0, max_fallbacks=0, expect_recovery=False,
+        min_resteers=1,
+        share_bounds={0: (0.01, 0.30), 1: (0.70, 0.99)},
+        tags=("rail", "multirail", "degradation", "straggler"),
+        workload_hints={"allreduce": {"channels": 2}},
+    ),
+    Scenario(
+        name="degraded_rail_proportional_share",
+        description="Rail 0's links drop to 1/20 bandwidth with NO "
+                    "errors: only measured busbw reveals it. The "
+                    "scheduler must give the degraded-but-alive rail a "
+                    "proportional minority share — neither fully "
+                    "loaded nor fully dark — again with zero health "
+                    "transitions.",
+        actions=(A(2e-3, "bw_degrade", "rail:0", 0.05),),
+        min_fallbacks=0, max_fallbacks=0, expect_recovery=False,
+        min_resteers=1,
+        share_bounds={0: (0.02, 0.45), 1: (0.55, 0.98)},
+        tags=("rail", "multirail", "degradation"),
         workload_hints={"allreduce": {"channels": 2}},
     ),
     Scenario(

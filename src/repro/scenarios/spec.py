@@ -24,11 +24,16 @@ from repro.core import fabric
 
 @dataclass(frozen=True)
 class FaultAction:
-    """One scheduled fault: apply ``kind`` to ``target`` at t0 + ``at``."""
+    """One scheduled fault: apply ``kind`` to ``target`` at t0 + ``at``.
+
+    ``arg`` parameterizes the partial-degradation kinds (``bw_degrade``:
+    bandwidth fraction, ``lat_inflate``: latency multiplier) and is
+    ``None`` for the binary up/down kinds."""
 
     at: float      # seconds after workload start
     kind: str      # one of fabric.Cluster.FAULT_KINDS
     target: str    # NIC GID or "rail:<k>" selector
+    arg: Optional[float] = None  # magnitude for degradation kinds
 
     def __post_init__(self):
         if self.kind not in fabric.Cluster.FAULT_KINDS:
@@ -54,6 +59,14 @@ class Scenario:
     # ran channelized (>1 channel), so single-rail workloads of the same
     # scenario are unaffected
     min_resteers: int = 0
+    # upper bound on fallbacks: degradation scenarios (straggler, partial
+    # bandwidth loss) must be handled by the SCHEDULER alone, with no
+    # SHIFT health transition at all (None disables the check)
+    max_fallbacks: Optional[int] = None
+    # proportional-share invariants: channel index -> (min, max) bounds
+    # on its final share of assigned chunks; checked only on channelized
+    # runs (the proportional-degradation contract, see docs/scheduler.md)
+    share_bounds: Optional[Dict[int, Tuple[float, float]]] = None
     tags: Tuple[str, ...] = field(default=())
     # per-workload engine overrides, e.g. {"pingpong": {"n_msgs": 240}} —
     # lets a timeline demand a longer stream without changing the engine
@@ -62,14 +75,15 @@ class Scenario:
     def schedule(self, cluster, t0: float) -> None:
         """Rebase the timeline onto the cluster's virtual clock."""
         for act in self.actions:
-            cluster.schedule_fault(t0 + act.at, act.kind, act.target)
+            cluster.schedule_fault(t0 + act.at, act.kind, act.target,
+                                   act.arg)
 
 
-def actions(triples: Iterable[Tuple[float, str, str]]) -> Tuple[FaultAction, ...]:
-    """Wrap raw (time, kind, target) triples — e.g. the output of the
-    fabric generators — into a sorted, immutable action timeline."""
-    acts = tuple(FaultAction(at=t, kind=k, target=tgt)
-                 for t, k, tgt in sorted(triples))
+def actions(triples: Iterable[Tuple]) -> Tuple[FaultAction, ...]:
+    """Wrap raw (time, kind, target[, arg]) tuples — e.g. the output of
+    the fabric generators — into a sorted, immutable action timeline."""
+    acts = tuple(FaultAction(t[0], t[1], t[2], t[3] if len(t) > 3 else None)
+                 for t in sorted(triples, key=lambda x: x[:3]))
     return acts
 
 

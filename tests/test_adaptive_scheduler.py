@@ -1,0 +1,227 @@
+"""Adaptive channel scheduler: busbw-proportional assignment, straggler
+demotion, recovery ramp, 4-rail scale, and the degradation fault kinds."""
+
+import numpy as np
+import pytest
+
+from repro.collectives import SchedulerConfig, build_world
+from repro.core.shift import ShiftLib
+from repro.scenarios import SCENARIOS, FaultAction, run_scenario
+
+
+def _allreduce_rounds(world, rounds, elems=1 << 14):
+    for _ in range(rounds):
+        arrays = [np.ones(elems, dtype=np.float32) * (r + 1)
+                  for r in range(world.n_ranks)]
+        world.allreduce(arrays)
+        np.testing.assert_allclose(arrays[0], 3.0)
+
+
+# ---------------------------------------------------------------------------
+# degradation fault kinds (fabric)
+# ---------------------------------------------------------------------------
+
+def test_bw_degrade_and_restore_roundtrip():
+    cluster, _, _ = build_world(n_ranks=2)
+    link = cluster.nic_by_gid["host0/mlx5_0"].link
+    orig = link.bandwidth
+    cluster.apply_fault("bw_degrade", "host0/mlx5_0", 0.25)
+    assert link.bandwidth == pytest.approx(orig * 0.25)
+    cluster.apply_fault("bw_degrade", "host0/mlx5_0", 0.5)
+    assert link.bandwidth == pytest.approx(orig * 0.5)  # vs ORIGINAL
+    cluster.apply_fault("bw_restore", "host0/mlx5_0")
+    assert link.bandwidth == pytest.approx(orig)
+    # the audit trail records the magnitude (operators debugging a
+    # violated degradation scenario can recover what was injected)
+    kinds = [k for _, k, _ in cluster.fault_log]
+    assert kinds == ["bw_degrade:0.25", "bw_degrade:0.5", "bw_restore"]
+
+
+def test_lat_inflate_and_restore_roundtrip():
+    cluster, _, _ = build_world(n_ranks=2)
+    link = cluster.nic_by_gid["host1/mlx5_0"].link
+    orig = link.latency
+    cluster.apply_fault("lat_inflate", "rail:0", 25.0)
+    assert link.latency == pytest.approx(orig * 25.0)
+    cluster.apply_fault("lat_restore", "rail:0")
+    assert link.latency == pytest.approx(orig)
+
+
+def test_fault_action_accepts_arg():
+    act = FaultAction(1e-3, "bw_degrade", "rail:0", 0.1)
+    assert act.arg == 0.1
+    with pytest.raises(ValueError):
+        FaultAction(1e-3, "make_it_slow", "rail:0", 0.1)
+
+
+# ---------------------------------------------------------------------------
+# proportional assignment + straggler demotion (no health transitions)
+# ---------------------------------------------------------------------------
+
+def test_clean_quad_rail_run_is_balanced_and_unsteered():
+    _, _, world = build_world(n_ranks=2, channels=4, nics_per_host=4,
+                              max_chunk_bytes=1 << 14)
+    _allreduce_rounds(world, 6, elems=1 << 15)
+    assigned = world.scheduler.assigned
+    assert all(a > 0 for a in assigned)
+    assert max(assigned) - min(assigned) <= 4, assigned
+    assert world.scheduler.resteered == 0
+
+
+def test_straggler_rail_demoted_without_fallback():
+    cluster, libs, world = build_world(n_ranks=2, channels=2,
+                                       max_chunk_bytes=1 << 14)
+    _allreduce_rounds(world, 3)
+    pre = list(world.scheduler.assigned)
+    cluster.apply_fault("lat_inflate", "rail:0", 25.0)
+    _allreduce_rounds(world, 30)
+    moved = [world.scheduler.assigned[c] - pre[c] for c in range(2)]
+    share0 = moved[0] / sum(moved)
+    assert share0 < 0.2, f"straggler share {share0:.3f} not demoted"
+    assert moved[0] > 0, "straggler must keep a trickle (never fully dark)"
+    assert world.scheduler.demoted[0] and not world.scheduler.demoted[1]
+    # the whole point: NO health transition was involved
+    assert all(l.stats.fallbacks == 0 for l in libs
+               if isinstance(l, ShiftLib))
+
+
+def test_straggler_readmitted_after_latency_restored():
+    cluster, _, world = build_world(n_ranks=2, channels=2,
+                                    max_chunk_bytes=1 << 14)
+    cluster.apply_fault("lat_inflate", "rail:0", 25.0)
+    _allreduce_rounds(world, 25)
+    assert world.scheduler.demoted[0]
+    cluster.apply_fault("lat_restore", "rail:0")
+    _allreduce_rounds(world, 40)          # EWMA decays on fresh samples
+    pre = list(world.scheduler.assigned)
+    _allreduce_rounds(world, 10)
+    moved = [world.scheduler.assigned[c] - pre[c] for c in range(2)]
+    assert not world.scheduler.demoted[0]
+    assert moved[0] / sum(moved) > 0.35   # back to a near-equal share
+
+
+def test_bw_degraded_rail_gets_proportional_share():
+    cluster, libs, world = build_world(n_ranks=2, channels=2,
+                                       max_chunk_bytes=1 << 14)
+    _allreduce_rounds(world, 3)
+    pre = list(world.scheduler.assigned)
+    cluster.apply_fault("bw_degrade", "rail:0", 0.05)
+    _allreduce_rounds(world, 30)
+    moved = [world.scheduler.assigned[c] - pre[c] for c in range(2)]
+    share0 = moved[0] / sum(moved)
+    # neither fully loaded (0.5) nor fully dark (0.0): proportional
+    assert 0.03 < share0 < 0.45, f"share {share0:.3f} not proportional"
+    assert all(l.stats.fallbacks == 0 for l in libs
+               if isinstance(l, ShiftLib))
+
+
+# ---------------------------------------------------------------------------
+# recovery ramp (re-admission is gradual, not a cliff)
+# ---------------------------------------------------------------------------
+
+def test_recovered_rail_readmits_along_a_ramp():
+    cluster, libs, world = build_world(
+        n_ranks=2, channels=2, max_chunk_bytes=4096, probe_interval=2e-3,
+        sched=SchedulerConfig(ramp_time=50e-3))
+    cluster.fail_nic("host0/mlx5_0")
+    _allreduce_rounds(world, 4, elems=4096)
+    assert world.scheduler.resteered > 0
+    cluster.recover_nic("host0/mlx5_0")
+    # keep signaled traffic flowing so probe + recovery fence complete
+    for _ in range(8):
+        _allreduce_rounds(world, 1, elems=1024)
+        cluster.sim.run(until=cluster.sim.now + 2e-3)
+    assert any(l.stats.recoveries > 0 for l in libs
+               if isinstance(l, ShiftLib))
+    # phase A: immediately after recovery the ramp throttles channel 0
+    pre = list(world.scheduler.assigned)
+    _allreduce_rounds(world, 6, elems=1 << 14)
+    moved_a = [world.scheduler.assigned[c] - pre[c] for c in range(2)]
+    # phase B: after the ramp window the channel is fully re-admitted
+    cluster.sim.run(until=cluster.sim.now + 60e-3)
+    pre = list(world.scheduler.assigned)
+    _allreduce_rounds(world, 6, elems=1 << 14)
+    moved_b = [world.scheduler.assigned[c] - pre[c] for c in range(2)]
+    share_a = moved_a[0] / max(sum(moved_a), 1)
+    share_b = moved_b[0] / max(sum(moved_b), 1)
+    assert share_a < share_b + 1e-9, (share_a, share_b)
+    assert share_b > 0.35, f"post-ramp share {share_b:.3f} too low"
+
+
+def test_flapping_rail_gets_a_fresh_ramp_each_recovery():
+    """A rail that fails again mid-ramp must start a NEW ramp on its
+    next recovery — a stale ramp timestamp from the first recovery
+    would read as already-expired and re-admit the channel at full
+    weight (the cliff the ramp exists to prevent)."""
+    cluster, libs, world = build_world(
+        n_ranks=2, channels=2, max_chunk_bytes=4096, probe_interval=2e-3,
+        sched=SchedulerConfig(ramp_time=50e-3))
+
+    def recover_and_traffic():
+        cluster.recover_nic("host0/mlx5_0")
+        for _ in range(10):
+            _allreduce_rounds(world, 1, elems=1024)
+            cluster.sim.run(until=cluster.sim.now + 2e-3)
+
+    cluster.fail_nic("host0/mlx5_0")
+    _allreduce_rounds(world, 3, elems=4096)
+    recover_and_traffic()                      # first recovery: ramp starts
+    assert world.scheduler._ramp_start[0] is not None
+    cluster.fail_nic("host0/mlx5_0")           # dies again mid-ramp
+    _allreduce_rounds(world, 3, elems=4096)
+    assert world.scheduler._ramp_start[0] is None   # stale ramp cleared
+    cluster.sim.run(until=cluster.sim.now + 100e-3)  # outlast ramp_time
+    recover_and_traffic()                      # second recovery
+    _allreduce_rounds(world, 2, elems=4096)
+    assert world.scheduler._ramp_start[0] is not None, \
+        "second recovery must start a fresh ramp, not inherit a stale one"
+    assert sum(l.stats.recoveries for l in libs) >= 2
+
+
+# ---------------------------------------------------------------------------
+# 4-rail scenarios through the campaign engine
+# ---------------------------------------------------------------------------
+
+def test_library_names_the_adaptive_scenarios():
+    required = {"quad_rail_staggered_kill", "slow_rail_straggler",
+                "degraded_rail_proportional_share"}
+    assert required <= set(SCENARIOS)
+    for name in required:
+        assert SCENARIOS[name].min_resteers >= 1
+        assert SCENARIOS[name].share_bounds
+
+
+def test_quad_rail_staggered_kill_proportional_degradation():
+    r = run_scenario(SCENARIOS["quad_rail_staggered_kill"],
+                     workload="allreduce", max_rounds=1200)
+    assert r.ok, r.violations
+    assert r.payload_mismatches == 0
+    assert r.fallbacks >= 2 and r.errors_propagated == 0
+    assert r.channel_stats is not None and len(r.channel_stats) == 4
+    total = sum(c["chunks_assigned"] for c in r.channel_stats)
+    shares = [c["chunks_assigned"] / total for c in r.channel_stats]
+    # dead channels collapse to a bounded minority; survivors carry
+    # the bulk (the 2/4-proportional-degradation invariant)
+    assert shares[0] < 0.20 and shares[2] < 0.30, shares
+    assert shares[1] > 0.25 and shares[3] > 0.25, shares
+    for c in r.channel_stats:
+        assert c["chunks_assigned"] == c["chunks_delivered"]
+
+
+@pytest.mark.parametrize("name", ["slow_rail_straggler",
+                                  "degraded_rail_proportional_share"])
+def test_degradation_scenarios_no_health_transition(name):
+    r = run_scenario(SCENARIOS[name], workload="allreduce",
+                     max_rounds=1200)
+    assert r.ok, r.violations
+    assert r.fallbacks == 0 and r.recoveries == 0
+    assert r.resteered_chunks >= 1
+    assert r.payload_mismatches == 0
+
+
+def test_adaptive_scenarios_deterministic():
+    r1 = run_scenario(SCENARIOS["slow_rail_straggler"],
+                      workload="allreduce", max_rounds=400, seed=11)
+    r2 = run_scenario(SCENARIOS["slow_rail_straggler"],
+                      workload="allreduce", max_rounds=400, seed=11)
+    assert r1.fingerprint() == r2.fingerprint()

@@ -1,0 +1,31 @@
+"""Tier-1 enforcement of the pydocstyle-lite docstring gate: every
+public module/class/function/method under ``repro.collectives`` and
+``repro.core`` must carry a docstring (tools/check_docstrings.py)."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
+
+import check_docstrings
+
+
+def test_collectives_and_core_fully_documented():
+    problems = check_docstrings.check()
+    assert not problems, "\n".join(problems)
+
+
+def test_checker_flags_missing_docstrings(tmp_path):
+    pkg = tmp_path / "pkg"
+    pkg.mkdir()
+    (pkg / "mod.py").write_text(
+        "def documented():\n    \"\"\"ok\"\"\"\n\n"
+        "def naked():\n    pass\n\n"
+        "class C:\n    \"\"\"ok\"\"\"\n"
+        "    def m(self):\n        pass\n"
+        "    def _private(self):\n        pass\n")
+    problems = check_docstrings.check(packages=("pkg",), root=tmp_path)
+    assert any("undocumented module mod" in p for p in problems)
+    assert any("undocumented function naked" in p for p in problems)
+    assert any("undocumented method C.m" in p for p in problems)
+    assert not any("_private" in p for p in problems)

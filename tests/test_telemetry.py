@@ -1,0 +1,188 @@
+"""RailTelemetry unit tests: EWMA math, window rolling, lifecycle
+resets — plus the scheduler-share property tests (shares sum to 1 and
+are monotone in measured busbw)."""
+
+import numpy as np
+import pytest
+
+from hyp_compat import given, settings, st
+
+from repro.collectives import build_world
+from repro.core.fabric import Cluster, RailTelemetry, build_cluster
+
+
+# ---------------------------------------------------------------------------
+# EWMA math
+# ---------------------------------------------------------------------------
+
+def test_latency_ewma_follows_formula():
+    c = Cluster()
+    tel = RailTelemetry(c, window=1e-3, alpha=0.25)
+    lats = [10e-6, 20e-6, 5e-6, 40e-6]
+    expect = None
+    for lat in lats:
+        tel.note_completion(0, 1024, lat)
+        expect = lat if expect is None else 0.75 * expect + 0.25 * lat
+    assert tel.lat_ewma[0] == pytest.approx(expect)
+    assert tel.samples[0] == len(lats)
+
+
+def test_busbw_ewma_is_bytes_over_latency():
+    c = Cluster()
+    tel = RailTelemetry(c, alpha=0.5)
+    tel.note_completion(1, 8192, 8e-6)          # 1.024 GB/s
+    assert tel.busbw_ewma[1] == pytest.approx(8192 / 8e-6)
+    tel.note_completion(1, 8192, 16e-6)         # halve the rate
+    assert tel.busbw_ewma[1] == pytest.approx(
+        0.5 * (8192 / 8e-6) + 0.5 * (8192 / 16e-6))
+
+
+def test_degenerate_samples_ignored():
+    c = Cluster()
+    tel = RailTelemetry(c)
+    tel.note_completion(0, 0, 1e-6)      # header-sized: excluded
+    tel.note_completion(0, 1024, 0.0)    # zero latency: excluded
+    assert 0 not in tel.lat_ewma and tel.samples.get(0, 0) == 0
+
+
+def test_rails_are_independent():
+    c = Cluster()
+    tel = RailTelemetry(c)
+    tel.note_completion(0, 1024, 10e-6)
+    tel.note_completion(3, 1024, 50e-6)
+    assert tel.lat_ewma[0] == pytest.approx(10e-6)
+    assert tel.lat_ewma[3] == pytest.approx(50e-6)
+
+
+# ---------------------------------------------------------------------------
+# delivered-byte-rate windows (rail_bytes deltas)
+# ---------------------------------------------------------------------------
+
+def test_window_rate_from_rail_byte_deltas():
+    c = build_cluster(n_hosts=2, nics_per_host=2)
+    tel = RailTelemetry(c, window=1e-3)
+    nic = c.hosts["host0"].nics[0]
+    nic.delivered_bytes += 125_000
+    c.sim.run(until=1.5e-3)                   # span rolls lazily at 1.5ms
+    # the rate divides by the TRUE span (no window-boundary sample
+    # exists under lazy rolling, so dividing by 1ms would time-shift
+    # open-window traffic into the closed window)
+    assert tel.rate(0) == pytest.approx(125_000 / 1.5e-3)
+    assert tel.rate(1) == 0.0
+    assert tel.window_seq == 1
+
+
+def test_multiple_elapsed_windows_average_and_bump_seq():
+    c = build_cluster(n_hosts=2, nics_per_host=2)
+    tel = RailTelemetry(c, window=1e-3)
+    nic = c.hosts["host0"].nics[1]
+    nic.delivered_bytes += 4000
+    c.sim.run(until=4.2e-3)                   # 4 windows elapsed
+    assert tel.rate(1) == pytest.approx(4000 / 4.2e-3)  # true-span average
+    assert tel.window_seq == 4
+    # a later span with no traffic zeroes the rate
+    c.sim.run(until=5.5e-3)
+    assert tel.rate(1) == 0.0
+    assert tel.window_seq == 5
+
+
+def test_rate_not_time_shifted_into_closed_window():
+    """Bytes delivered only in the OPEN window must not be reported at
+    the closed-window boundary rate (the roll() attribution contract)."""
+    c = build_cluster(n_hosts=2, nics_per_host=2)
+    tel = RailTelemetry(c, window=250e-6)
+    nic = c.hosts["host0"].nics[0]
+    c.sim.run(until=1.7 * 250e-6)             # window 1 closed, 0 bytes
+    nic.delivered_bytes += 2000               # arrives mid-open-window
+    assert tel.rate(0) == pytest.approx(2000 / (1.7 * 250e-6))
+    # NOT 2000 / 250e-6 == 8 MB/s attributed to the silent window
+
+
+def test_lifecycle_reset_clears_stale_ewmas():
+    c = Cluster()
+    tel = RailTelemetry(c)
+    tel.note_completion(0, 4096, 5e-6)
+    tel.note_lifecycle("fallback", 0)
+    assert 0 not in tel.lat_ewma and 0 not in tel.busbw_ewma
+    assert tel.samples[0] == 0
+    tel.note_completion(0, 4096, 9e-6)        # re-learns from scratch
+    assert tel.lat_ewma[0] == pytest.approx(9e-6)
+
+
+def test_cluster_owns_a_telemetry_instance():
+    c = build_cluster()
+    assert isinstance(c.telemetry, RailTelemetry)
+    snap = c.telemetry.snapshot()
+    assert set(snap) >= {"rates_bytes_per_s", "lat_ewma_s",
+                         "busbw_ewma_bytes_per_s", "window_seq"}
+
+
+# ---------------------------------------------------------------------------
+# scheduler share properties (sum to 1, monotone in measured busbw)
+# ---------------------------------------------------------------------------
+
+_WORLD = None
+
+
+def _quad_world():
+    """One 4-channel world reused across property examples (telemetry is
+    overwritten per example; the weight computation itself is stateless
+    in the absence of health transitions)."""
+    global _WORLD
+    if _WORLD is None:
+        _WORLD = build_world(n_ranks=2, channels=4, nics_per_host=4,
+                             max_chunk_bytes=4096)
+    return _WORLD
+
+
+def _shares(world, busbw):
+    tel = world.cluster.telemetry
+    tel.busbw_ewma = {c: busbw[c] for c in range(4)}
+    tel.lat_ewma = {c: 10e-6 for c in range(4)}     # no stragglers
+    tel.samples = {c: 100 for c in range(4)}
+    _states, w = world.scheduler.channel_weights(0, 1)
+    total = sum(w)
+    assert total > 0
+    return [x / total for x in w]
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.floats(min_value=1e6, max_value=1e12,
+                          allow_nan=False, allow_infinity=False),
+                min_size=4, max_size=4))
+def test_shares_sum_to_one_and_order_by_busbw(busbw):
+    """Normalized shares sum to 1.0 and preserve the busbw ordering."""
+    _, _, world = _quad_world()
+    shares = _shares(world, busbw)
+    assert sum(shares) == pytest.approx(1.0)
+    assert all(s > 0 for s in shares)
+    for i in range(4):
+        for j in range(4):
+            if busbw[i] >= busbw[j]:
+                assert shares[i] >= shares[j] - 1e-9
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.floats(min_value=1e6, max_value=1e12,
+                          allow_nan=False, allow_infinity=False),
+                min_size=4, max_size=4),
+       st.integers(min_value=0, max_value=3),
+       st.floats(min_value=1.1, max_value=100.0))
+def test_share_monotone_in_own_busbw(busbw, rail, factor):
+    """Raising one rail's measured busbw never lowers its share."""
+    _, _, world = _quad_world()
+    before = _shares(world, busbw)[rail]
+    bumped = list(busbw)
+    bumped[rail] = bumped[rail] * factor
+    after = _shares(world, bumped)[rail]
+    assert after >= before - 1e-9
+
+
+def test_weights_proportional_to_busbw_exactly():
+    """With equal latency and no faults, shares equal busbw shares."""
+    _, _, world = _quad_world()
+    busbw = [1e9, 2e9, 3e9, 2e9]
+    shares = _shares(world, busbw)
+    total = sum(busbw)
+    for c in range(4):
+        assert shares[c] == pytest.approx(busbw[c] / total)
