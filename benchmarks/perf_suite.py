@@ -54,6 +54,18 @@ Benchmarks
     rail falls below 15% — the straggler-demotion reaction time.
     Deterministic; gated on the 20% rule (lower is better).
 
+``ddp_overlap_speedup``
+    Total VIRTUAL gradient-collective time of the smoke trainer with
+    bucketed gradients, sequential (one bucket all-reduced at a time)
+    vs overlapped (every bucket issued as an ``allreduce_async`` work,
+    all handles awaited together). Deterministic; gated on the 20% rule
+    AND an absolute >= 1.2x floor — losing the overlap means the async
+    work-handle engine stopped overlapping, which is a correctness bug
+    in the DDP rebuild, not a perf regression. Loss trajectories of the
+    two modes must match exactly (bucket bounds are engine-aligned, so
+    overlapped is byte-identical to sequential); a mismatch fails the
+    benchmark outright.
+
 ``fallback_latency``
     Max virtual-time fallback latency over the sender_nic_down scenario
     in fast mode — a determinism canary: it must not drift at all.
@@ -93,6 +105,7 @@ GATED_RATIOS = {
     "quad_rail_busbw.busbw_ratio_quad": True,
     "quad_rail_busbw.busbw_ratio_degraded": True,
     "straggler_resteer_latency.detect_virtual_ms": False,
+    "ddp_overlap_speedup.speedup": True,
 }
 TOLERANCE = 0.20
 # Absolute floors (not baseline-relative), all in deterministic virtual
@@ -104,6 +117,9 @@ TOLERANCE = 0.20
 MULTIRAIL_MIN_RATIO = 1.8
 QUAD_MIN_RATIO = 3.4
 DEGRADED_MIN_RATIO = 1.7
+# bucketed-overlapped DDP must beat the sequential-bucketed baseline by
+# this factor on virtual comm time (the ISSUE-5 acceptance floor)
+DDP_OVERLAP_MIN_RATIO = 1.2
 
 
 def bench_fig5_msg_rate(msg_size: int = 1 << 16, duration: float = 2.0):
@@ -344,6 +360,58 @@ def bench_straggler_resteer(size: int = 1 << 14, batch: int = 16,
     }
 
 
+def bench_ddp_overlap(steps: int = 2, bucket_bytes: int = 1 << 16):
+    """Bucketed DDP gradient sync: sequential vs overlapped, in VIRTUAL
+    time (deterministic). Both modes run the same smoke trainer on a
+    2-rank 2-channel world with the same engine-aligned gradient
+    buckets; sequential waits each bucket's all-reduce before issuing
+    the next, overlapped issues every bucket as an async work and waits
+    on all handles. The loss trajectories must match exactly — the
+    bucket alignment makes overlapped byte-identical to sequential —
+    and the overlap must deliver >= 1.2x on virtual comm time."""
+    import shutil
+    import tempfile
+
+    from repro.collectives import build_world
+    from repro.train.trainer import build_smoke_trainer
+
+    def one(overlap):
+        cluster, libs, world = build_world(n_ranks=2, channels=2,
+                                           max_chunk_bytes=1 << 14)
+        ckpt = tempfile.mkdtemp(prefix="repro-bench-ddp-")
+        try:
+            trainer = build_smoke_trainer(cluster, libs, steps=steps,
+                                          ckpt_dir=ckpt,
+                                          bucket_bytes=bucket_bytes,
+                                          overlap=overlap)
+            run = trainer.train(world)
+        finally:
+            shutil.rmtree(ckpt, ignore_errors=True)
+        raw_losses = [l for _, _, l in run.timeline]
+        return {
+            "comm_virtual_ms": round(run.comm_time * 1e3, 6),
+            "peak_concurrent_works": run.peak_works,
+            "steps": run.final_step,
+            "losses": [round(l, 6) for l in raw_losses],
+        }, raw_losses
+
+    seq, seq_losses = one(False)
+    ovl, ovl_losses = one(True)
+    return {
+        "config": {"steps": steps, "bucket_bytes": bucket_bytes,
+                   "note": "virtual comm time of the smoke trainer's "
+                           "gradient all-reduces; sequential waits each "
+                           "bucket, overlapped waits all async handles"},
+        "sequential": seq,
+        "overlapped": ovl,
+        # compared UNROUNDED: a one-ulp reduction-order divergence must
+        # fail the gate (the JSON "losses" fields are display-rounded)
+        "losses_identical": seq_losses == ovl_losses,
+        "speedup": round(seq["comm_virtual_ms"] / ovl["comm_virtual_ms"],
+                         3),
+    }
+
+
 def bench_allreduce(n_ranks: int = 2, elems: int = 1 << 16,
                     rounds: int = 12):
     import numpy as np
@@ -385,6 +453,7 @@ def run_suite(quick: bool = False) -> dict:
     multirail = bench_multirail_busbw()
     quad = bench_quad_rail_busbw()
     straggler = bench_straggler_resteer()
+    ddp_overlap = bench_ddp_overlap()
     return {
         "schema": SCHEMA,
         "note": "before = pre-fast-path configuration (legacy per-WQE "
@@ -399,6 +468,7 @@ def run_suite(quick: bool = False) -> dict:
             "multirail_busbw": multirail,
             "quad_rail_busbw": quad,
             "straggler_resteer_latency": straggler,
+            "ddp_overlap_speedup": ddp_overlap,
         },
     }
 
@@ -503,6 +573,21 @@ def emit(path: str, quick: bool = False,
     if not sg["detected"] or sg["fallbacks_during"]:
         print("# PERF STRAGGLER: demotion not detected or caused a "
               "health transition", flush=True)
+        return 1
+    dd = b["ddp_overlap_speedup"]
+    print(f"# perf: ddp overlap comm "
+          f"{dd['sequential']['comm_virtual_ms']:.3f}ms -> "
+          f"{dd['overlapped']['comm_virtual_ms']:.3f}ms virtual "
+          f"({dd['speedup']:.2f}x, "
+          f"{dd['overlapped']['peak_concurrent_works']} works in flight)",
+          flush=True)
+    if not dd["losses_identical"]:
+        print("# PERF DDP OVERLAP: overlapped losses diverged from the "
+              "sequential baseline (byte-identity broken)", flush=True)
+        return 1
+    if dd["speedup"] < DDP_OVERLAP_MIN_RATIO:
+        print(f"# PERF DDP OVERLAP FLOOR: speedup {dd['speedup']} < "
+              f"required {DDP_OVERLAP_MIN_RATIO}", flush=True)
         return 1
     # invariant violations fail UNCONDITIONALLY — no baseline needed: a
     # fast datapath that breaks exactly-once/zero-copy/ordering is a

@@ -5,8 +5,10 @@ full suite completes in minutes; each module's ``main()`` runs the full
 configuration standalone).
 
 ``--smoke`` runs a reduced deterministic subset — the fault-scenario
-campaign (pingpong workload over the full library), fig6 and fig7 — and
-exits non-zero on any invariant violation: the fast CI pass.
+campaign (pingpong workload over the full library), the concurrent-
+collective overlap smoke (overlap_allreduce + bucketed-overlapped DDP
+with >= 4 works in flight) and fig7 — and exits non-zero on any
+invariant violation: the fast CI pass.
 
 ``--bench-json PATH`` additionally runs the tracked perf suite
 (``benchmarks/perf_suite.py``), writes its JSON to PATH, and exits
@@ -100,6 +102,35 @@ def campaign_rows(smoke: bool = False, fast: bool = True):
     return out
 
 
+def overlap_rows(fast: bool = True):
+    """Concurrent-collective smoke: the overlap_allreduce workload (>= 4
+    async works per round, faults landing mid-overlap) over a
+    representative scenario subset, plus — fast mode only, the trainer
+    is too heavy for the legacy event chain in a smoke pass — the
+    bucketed-overlapped DDP workload with ``bucket_bytes`` small enough
+    to force >= 4 concurrent gradient buckets per step. The invariants
+    fail any run that never actually overlapped."""
+    from repro.scenarios import SCENARIOS, run_scenario
+
+    cells = [("overlap_allreduce", n, {"max_rounds": 400, "fast": fast})
+             for n in ("baseline_clean", "sender_nic_down",
+                       "link_flap_train", "rail_kill_striped",
+                       "double_rail_outage")]
+    if fast:
+        cells += [("ddp_bucketed", n, {"fast": fast})
+                  for n in ("baseline_clean", "sender_nic_down")]
+    out = []
+    for workload, name, kw in cells:
+        r = run_scenario(SCENARIOS[name], workload=workload, **kw)
+        lat_us = max(r.fallback_latencies) * 1e6 if r.fallback_latencies \
+            else float("nan")
+        status = "ok" if r.ok else _violation_status(r.violations)
+        out.append((f"overlap/{r.scenario}/{r.workload}", lat_us,
+                    f"{status}|fb={r.fallbacks}|peak={r.peak_concurrency}|"
+                    f"events={r.event_count}"))
+    return out
+
+
 def matrix_markdown(fast: bool = True, max_rounds: int = 1200):
     """Run the FULL scenario x workload campaign matrix and render it as
     a GitHub-flavoured markdown table (one row per scenario, one column
@@ -108,7 +139,8 @@ def matrix_markdown(fast: bool = True, max_rounds: int = 1200):
     continuously re-verified, not aspirational."""
     from repro.scenarios import SCENARIOS, Campaign
 
-    workloads = ("pingpong", "allreduce", "broadcast", "all_to_all")
+    workloads = ("pingpong", "allreduce", "overlap_allreduce",
+                 "broadcast", "all_to_all")
     campaign = Campaign(
         list(SCENARIOS.values()), workloads=workloads,
         workload_kw={w: ({"fast": fast} if w == "pingpong"
@@ -158,6 +190,8 @@ def main(smoke: bool = False, bench_json: str = None,
         sections = [
             ("campaign (fault scenarios)",
              lambda: campaign_rows(smoke=True, fast=fast)),
+            ("overlap (concurrent collectives + bucketed DDP)",
+             lambda: overlap_rows(fast=fast)),
             ("fig7 (verb overhead)", fig7_verbs_rows),
         ]
     else:
@@ -190,8 +224,8 @@ def main(smoke: bool = False, bench_json: str = None,
 if __name__ == "__main__":
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--smoke", action="store_true",
-                        help="fast deterministic CI subset "
-                             "(campaign + fig6 + fig7)")
+                        help="fast deterministic CI subset (campaign + "
+                             "concurrent-collective overlap + fig7)")
     parser.add_argument("--bench-json", default=None, metavar="PATH",
                         help="run the tracked perf suite, write JSON to "
                              "PATH, fail on >20%% regression vs the "

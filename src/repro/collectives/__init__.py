@@ -12,5 +12,5 @@ rail-aware SHIFT failover).
 from .channel import (Channel, ChannelScheduler,        # noqa: F401
                       SchedulerConfig)
 from .endpoint import RankEndpoint                      # noqa: F401
-from .world import (CollectiveError, JcclWorld,         # noqa: F401
+from .world import (CollectiveError, JcclWorld, Work,   # noqa: F401
                     build_world)

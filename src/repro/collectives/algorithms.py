@@ -3,11 +3,19 @@
 Every algorithm is an event-driven actor: ``start()`` launches the first
 wave of chunks, ``on_notify`` consumes one delivered chunk and launches
 its successors, ``done()`` reports completion. Chunks go out through
-``JcclWorld.send(rank, peer, payload, tag, home)``: the *tag* identifies
+``_Collective._send(rank, peer, payload, tag, home)``, which forwards to
+``JcclWorld.send`` with this collective's id (cid): the *tag* identifies
 the chunk to the algorithm when the matching notify lands (so arrival
-order across channels does not matter), and *home* is the chunk's
-preferred channel — the scheduler honours it while the channel is
-healthy and resteers it otherwise.
+order across channels does not matter), *home* is the chunk's preferred
+channel — the scheduler honours it while the channel is healthy and
+resteers it otherwise — and the *cid* namespaces the tag so any number of
+collectives can be live at once without their notifies cross-dispatching.
+
+Defense in depth: the world only routes a notify to the collective whose
+cid stamped the chunk, AND every ``on_notify`` rejects foreign input
+(wrong ring predecessor, out-of-range or missing tag). A stray notify is
+dropped — the collective stalls loudly (timeout) instead of corrupting
+its output buffers.
 
 Striping units (each unit's chunk chain is ordered; units are
 independent, so they ride different rails concurrently):
@@ -16,12 +24,14 @@ independent, so they ride different rails concurrently):
   ring pipeline on its home channel.
 * all-gather — **shards**: each shard's trip around the ring is a chain.
 * broadcast — **chunks**: each pipeline chunk travels the root chain.
-* all-to-all — **pairs**: each (src, dst) row picks a channel by pair.
+* all-to-all — **row chunks**: each (src, dst) row is split into
+  ``max_chunk_bytes`` chunks with per-chunk tags/home channels, so one
+  large MoE row stripes across rails like the ring collectives do.
 """
 
 from __future__ import annotations
 
-from typing import List, Tuple
+from typing import List, Optional, Tuple
 
 import numpy as np
 
@@ -40,7 +50,15 @@ class _Collective:
 
     def __init__(self, world):
         self.world = world
+        #: collective id — assigned by ``JcclWorld._launch`` before
+        #: ``start()``; namespaces every chunk tag this actor sends
+        self.cid: Optional[int] = None
         self.tolerates_failure = world.any_shift
+
+    def _send(self, rank: int, peer: int, payload: np.ndarray, tag,
+              home: int) -> None:
+        """Send one chunk stamped with this collective's cid."""
+        self.world.send(rank, peer, payload, tag, home=home, cid=self.cid)
 
     def start(self) -> None:
         raise NotImplementedError
@@ -111,9 +129,9 @@ class _RingAllReduce(_Collective):
         phase, s = self._decode(step)
         chunk = (rank - s) % n if phase == "rs" else (rank + 1 - s) % n
         c0, c1 = self._chunk_bounds(bucket, chunk)
-        self.world.send(rank, (rank + 1) % n, self.flat[rank][c0:c1],
-                        tag=bucket * self.steps_per_bucket + step,
-                        home=bucket)
+        self._send(rank, (rank + 1) % n, self.flat[rank][c0:c1],
+                   tag=bucket * self.steps_per_bucket + step,
+                   home=bucket)
 
     def start(self) -> None:
         n = self.world.n_ranks
@@ -126,8 +144,10 @@ class _RingAllReduce(_Collective):
 
     def on_notify(self, rank: int, peer: int, tag, ep, seq: int) -> None:
         n = self.world.n_ranks
-        if peer != (rank - 1) % n or tag is None:
+        if peer != (rank - 1) % n or not isinstance(tag, int):
             return
+        if not 0 <= tag < self.n_buckets * self.steps_per_bucket:
+            return  # foreign tag: not one of this collective's chunks
         bucket, step = divmod(tag, self.steps_per_bucket)
         phase, s = self._decode(step)
         chunk = (rank - s - 1) % n if phase == "rs" else (rank - s) % n
@@ -166,8 +186,8 @@ class _RingAllGather(_Collective):
         if nxt == shard:
             return  # the shard is back at its origin: chain complete
         o0, o1 = self.offsets[shard], self.offsets[shard + 1]
-        self.world.send(rank, nxt, self.full[rank][o0:o1],
-                        tag=shard, home=shard)
+        self._send(rank, nxt, self.full[rank][o0:o1],
+                   tag=shard, home=shard)
 
     def start(self) -> None:
         n = self.world.n_ranks
@@ -177,9 +197,13 @@ class _RingAllGather(_Collective):
         for r in range(n):
             self._forward(r, r)     # launch this rank's own shard
 
+
     def on_notify(self, rank: int, peer: int, tag, ep, seq: int) -> None:
-        if peer != (rank - 1) % self.world.n_ranks or tag is None:
+        n = self.world.n_ranks
+        if peer != (rank - 1) % n or not isinstance(tag, int):
             return
+        if not 0 <= tag < n:
+            return  # foreign tag: no such shard
         shard = tag
         o0, o1 = self.offsets[shard], self.offsets[shard + 1]
         stage = ep.staging_slot_view(
@@ -221,13 +245,15 @@ class _PipelineBroadcast(_Collective):
             return
         nxt = (self.root + 1) % n
         for ci, (c0, c1) in enumerate(self.chunks):
-            self.world.send(self.root, nxt, self.outs[self.root][c0:c1],
-                            tag=ci, home=ci)
+            self._send(self.root, nxt, self.outs[self.root][c0:c1],
+                       tag=ci, home=ci)
 
     def on_notify(self, rank: int, peer: int, tag, ep, seq: int) -> None:
         n = self.world.n_ranks
-        if peer != (rank - 1) % n or tag is None:
+        if peer != (rank - 1) % n or not isinstance(tag, int):
             return
+        if not 0 <= tag < len(self.chunks):
+            return  # foreign tag: no such pipeline chunk
         c0, c1 = self.chunks[tag]
         stage = ep.staging_slot_view(
             peer, seq, (c1 - c0) * self.itemsize).view(self.dtype)
@@ -237,18 +263,25 @@ class _PipelineBroadcast(_Collective):
             self.done_ranks += 1
         nxt = (rank + 1) % n
         if nxt != self.root:
-            self.world.send(rank, nxt, self.outs[rank][c0:c1],
-                            tag=tag, home=tag)
+            self._send(rank, nxt, self.outs[rank][c0:c1],
+                       tag=tag, home=tag)
 
     def done(self) -> bool:
         return self.done_ranks == self.world.n_ranks
 
 
 class _AllToAll(_Collective):
-    """Direct-write all-to-all (MoE dispatch traffic pattern). Each
-    (src, dst) pair is one message; pairs spread across channels by
-    ``(src + dst) % channels`` so a 2-rail world carries half the rows
-    on each rail."""
+    """Chunk-striped direct-write all-to-all (MoE dispatch pattern).
+
+    Each (src, dst) row is split into ``max_chunk_bytes`` chunks; each
+    chunk is an independent message with tag = chunk index within the
+    row (the sender is identified by the QP the notify arrives on) and
+    home channel ``src + dst + chunk`` — so one large row stripes across
+    every healthy rail instead of riding a single ``(src + dst) %
+    channels`` channel as one monolithic message. ``on_notify`` rejects
+    foreign notifies (self-loop peer, missing or out-of-range tag):
+    load-bearing once collectives run concurrently, where a stray
+    notify used to silently corrupt ``outs``."""
 
     def __init__(self, world, mats: List[np.ndarray],
                  outs: List[np.ndarray]):
@@ -256,10 +289,15 @@ class _AllToAll(_Collective):
         self.mats = mats
         self.outs = outs
         n = world.n_ranks
-        self.expected = [n - 1] * n
-        self.received = [0] * n
         self.dtype = mats[0].dtype
-        self.rowbytes = mats[0][0].nbytes
+        self.itemsize = self.dtype.itemsize
+        row_elems = mats[0][0].size
+        per = max(1, world.max_chunk_bytes // self.itemsize)
+        self.chunk_bounds = [(i, min(i + per, row_elems))
+                             for i in range(0, row_elems, per)] or [(0, 0)]
+        self.n_chunks = len(self.chunk_bounds)
+        self.expected = [(n - 1) * self.n_chunks] * n
+        self.received = [0] * n
 
     def start(self) -> None:
         n = self.world.n_ranks
@@ -268,12 +306,20 @@ class _AllToAll(_Collective):
             for peer in range(n):
                 if peer == r:
                     continue
-                self.world.send(r, peer, self.mats[r][peer],
-                                tag=r, home=r + peer)
+                row = np.ascontiguousarray(self.mats[r][peer]).reshape(-1)
+                for ci, (c0, c1) in enumerate(self.chunk_bounds):
+                    self._send(r, peer, row[c0:c1], tag=ci,
+                               home=r + peer + ci)
 
     def on_notify(self, rank: int, peer: int, tag, ep, seq: int) -> None:
-        stage = ep.staging_slot_view(peer, seq, self.rowbytes).view(self.dtype)
-        self.outs[rank][peer] = stage.reshape(self.outs[rank][peer].shape)
+        if peer == rank or not isinstance(tag, int):
+            return
+        if not 0 <= tag < self.n_chunks:
+            return  # foreign tag: no such row chunk
+        c0, c1 = self.chunk_bounds[tag]
+        stage = ep.staging_slot_view(
+            peer, seq, (c1 - c0) * self.itemsize).view(self.dtype)
+        self.outs[rank][peer].reshape(-1)[c0:c1] = stage
         self.received[rank] += 1
 
     def done(self) -> bool:

@@ -96,13 +96,16 @@ class Channel:
     # ------------------------------------------------------------------
     # data plane
     # ------------------------------------------------------------------
-    def send(self, rank: int, peer: int, payload, tag) -> None:
-        """Send one tagged chunk rank -> peer on this rail. The tag is
-        returned to the active collective when the matching notify lands
-        (the world keys it by this channel + the FIFO sequence number)."""
+    def send(self, rank: int, peer: int, payload, tag,
+             cid: Optional[int] = None) -> None:
+        """Send one tagged chunk rank -> peer on this rail. The
+        ``(cid, tag)`` pair is returned to the owning collective when
+        the matching notify lands (the world keys it by this channel +
+        the FIFO sequence number; the cid routes it to the right live
+        collective, ``None`` for raw streams)."""
         ep = self.endpoints[rank]
         seq = ep.send_chunk(peer, payload)
-        self.world._tags[(self.index, peer, rank, seq)] = tag
+        self.world._tags[(self.index, peer, rank, seq)] = (cid, tag)
         self.bytes_sent += payload.nbytes
 
     def link_state(self, rank: int, peer: int) -> str:
@@ -230,6 +233,16 @@ class SchedulerConfig:
     #: decay applied to the recent-assignment counters once per closed
     #: telemetry window (bounds the scheduler's memory of old traffic)
     decay: float = 0.5
+    #: backlog-stall guard: resteer a chunk off its home channel when
+    #: OTHER collectives' undrained backlog there exceeds this multiple
+    #: of their mean backlog on the remaining usable channels (+1
+    #: cushion). This is how a STALLED sibling's chunks stop dragging
+    #: new collectives onto the same stuck rail: the backlog is
+    #: per-collective attributed (the picker's own in-flight chunks are
+    #: excluded from the signal) and reconciled at retire, so the
+    #: penalty lifts the moment the stalled op is reaped. Deliberately
+    #: conservative — healthy overlap never hits it.
+    backlog_factor: float = 8.0
 
 
 class ChannelScheduler:
@@ -257,6 +270,12 @@ class ChannelScheduler:
         self.n = len(world.channels)
         self.assigned: List[int] = [0] * self.n
         self.inflight: List[int] = [0] * self.n
+        # per-collective in-flight attribution: cid -> per-channel counts
+        # (None = raw streams). A stalled/aborted collective's backlog is
+        # reconciled out of the global counters by retire(), so a dead
+        # op on a degraded rail cannot bias sibling collectives' view of
+        # that rail's backlog forever.
+        self.inflight_by_cid: Dict[Optional[int], List[int]] = {}
         self.resteered = 0
         # window-decayed recent-assignment counters (share accounting)
         self.recent: List[float] = [0.0] * self.n
@@ -367,13 +386,16 @@ class ChannelScheduler:
     # ------------------------------------------------------------------
     # assignment
     # ------------------------------------------------------------------
-    def pick(self, rank: int, peer: int, home: int) -> int:
+    def pick(self, rank: int, peer: int, home: int,
+             cid: Optional[int] = None) -> int:
         """Assign one chunk: the home channel while it is within its
-        proportional share, otherwise the most-behind usable channel."""
+        proportional share, otherwise the most-behind usable channel.
+        ``cid`` attributes the in-flight accounting to one live
+        collective (None for raw streams)."""
         home %= self.n
         if self.n == 1:
             self.assigned[0] += 1
-            self.inflight[0] += 1
+            self._note_assigned(0, cid)
             return 0
         self._decay_recent()
         _states, w = self.channel_weights(rank, peer)
@@ -383,9 +405,16 @@ class ChannelScheduler:
             # failure surfaces as an error instead of a silent stall
             choice = home
         else:
+            stalled = home in pool and self._home_stalled(home, pool, cid)
+            if stalled and len(pool) > 1:
+                # backlog-stall guard: chunks are piling up undrained on
+                # the home (typically behind a stalled collective) — new
+                # chunks must not join the pile, so the home is not a
+                # candidate until retire()/deliveries drain it
+                pool = [c for c in pool if c != home]
             wsum = sum(w[c] for c in pool)
             total = sum(self.recent[c] for c in pool) + 1.0
-            if (home in pool and self.recent[home]
+            if (home in pool and not stalled and self.recent[home]
                     <= (w[home] / wsum) * total + self.cfg.share_slack):
                 choice = home
             else:
@@ -397,21 +426,73 @@ class ChannelScheduler:
                 if choice != home:
                     self.resteered += 1
         self.assigned[choice] += 1
-        self.inflight[choice] += 1
+        self._note_assigned(choice, cid)
         self.recent[choice] += 1.0
         return choice
 
-    def note_delivered(self, channel: int) -> None:
-        """One chunk assigned to ``channel`` was delivered (frees backlog)."""
+    def _home_stalled(self, home: int, pool: List[int],
+                      cid: Optional[int]) -> bool:
+        """True when OTHER collectives' outstanding backlog on the home
+        channel dwarfs their backlog on its peers (``backlog_factor`` x
+        the mean, +1 cushion): chunks are piling up undrained there
+        behind a stalled sibling, and this collective's new chunks must
+        not join the pile. The picking collective's OWN in-flight chunks
+        are excluded from the signal — a healthy pipeline naturally
+        keeps its own chunks in flight on its home rail, and that must
+        never read as a stall (nor perturb single-collective runs)."""
+        own = self.inflight_by_cid.get(cid)
+
+        def foreign(c: int) -> int:
+            return self.inflight[c] - (own[c] if own else 0)
+        others = [foreign(c) for c in pool if c != home]
+        if not others:
+            return False
+        mean = sum(others) / len(others)
+        return foreign(home) > self.cfg.backlog_factor * (mean + 1)
+
+    def _note_assigned(self, channel: int, cid: Optional[int]) -> None:
+        """Count one assignment in the global + per-cid backlog."""
+        self.inflight[channel] += 1
+        by_cid = self.inflight_by_cid.get(cid)
+        if by_cid is None:
+            by_cid = self.inflight_by_cid[cid] = [0] * self.n
+        by_cid[channel] += 1
+
+    def note_delivered(self, channel: int,
+                       cid: Optional[int] = None) -> None:
+        """One chunk assigned to ``channel`` was delivered (frees the
+        backlog slot of the owning collective). A chunk whose collective
+        already retired is a no-op: retire() reconciled it out of the
+        global counters, so decrementing again would double-count (the
+        late skip-resync / post-abort delivery path)."""
+        by_cid = self.inflight_by_cid.get(cid)
+        if by_cid is None:
+            return
         self.inflight[channel] -= 1
+        by_cid[channel] -= 1
+
+    def retire(self, cid: Optional[int]) -> None:
+        """A collective finished or failed: drop its per-cid accounting
+        and reconcile any chunks it never saw delivered OUT of the
+        global backlog — a stalled op on a degraded rail must not bias
+        resteering decisions for its sibling collectives forever."""
+        by_cid = self.inflight_by_cid.pop(cid, None)
+        if by_cid is not None:
+            for c, k in enumerate(by_cid):
+                if k:
+                    self.inflight[c] -= k
 
     def snapshot(self) -> Dict[str, object]:
         """Structured scheduler state for campaign reports. ``weights``
         and ``demoted`` reflect the most recent pick's (rank, peer)
         evaluation — health is per pair, so they are a sample, not a
-        channel-global truth."""
+        channel-global truth. ``inflight_by_collective`` lists only the
+        collectives with outstanding chunks."""
         return {"assigned": list(self.assigned),
                 "inflight": list(self.inflight),
+                "inflight_by_collective": {
+                    str(cid): list(v)
+                    for cid, v in self.inflight_by_cid.items() if any(v)},
                 "resteered": self.resteered,
                 "recent": [round(r, 3) for r in self.recent],
                 "weights": [round(x, 4) for x in self.last_weights],

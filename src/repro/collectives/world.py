@@ -1,4 +1,4 @@
-"""JCCL communicator world: a thin façade over N per-rail channels.
+"""JCCL communicator world: an async multi-collective engine over N rails.
 
 ``JcclWorld`` owns ``channels`` :class:`~repro.collectives.channel.Channel`
 meshes (one per host rail) plus a
@@ -11,6 +11,20 @@ possibly slower, with the scheduler resteering chunks off the degraded
 rail); with ``StandardLib`` endpoints the collective aborts with
 ``CollectiveError`` — the paper's crash-stop baseline.
 
+The engine is **non-blocking at its core**: any number of collectives can
+be live at once. ``allreduce_async`` / ``all_gather_async`` /
+``broadcast_async`` / ``all_to_all_async`` / ``reduce_scatter_async``
+register the collective in a registry keyed by a *collective id* (cid)
+and return a :class:`Work` handle (``done()`` / ``wait(timeout)`` /
+``exception()`` / ``result()``). Chunk tags are namespaced by cid —
+``JcclWorld._tags`` maps an in-flight ``(channel, receiver, sender,
+seq)`` to ``(cid, tag)`` — so concurrent collectives' notifies always
+dispatch to the right actor and an overlapped bucketed all-reduce is
+byte-identical to the sequential path. The historical blocking calls
+(``allreduce`` et al.) are ``*_async().wait()`` one-liners, so every
+existing caller keeps working unchanged. See DESIGN.md §8 and
+docs/collectives.md for the work-handle lifecycle.
+
 Layout: per-rail endpoints live in ``endpoint.py``, channel mesh +
 scheduler in ``channel.py``, the collective algorithms (chunk schedulers)
 in ``algorithms.py``. This module is the public API.
@@ -18,7 +32,7 @@ in ``algorithms.py``. This module is the public API.
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -35,8 +49,76 @@ class CollectiveError(RuntimeError):
     """A collective could not complete (crash-stop abort or timeout)."""
 
 
+class Work:
+    """Handle for one in-flight collective (the non-blocking API).
+
+    Mirrors ``torch.distributed``'s work-handle contract: the launching
+    call returns immediately, the caller overlaps other work (more
+    collectives, compute), and later synchronizes through the handle.
+    Progress happens whenever the simulator is pumped — by this handle's
+    :meth:`wait`, by ``JcclWorld.wait_all``, or by any other live
+    handle's wait (the event loop is shared, so sibling collectives
+    advance together).
+
+    Lifecycle: a handle retires its collective from the world registry
+    the first time :meth:`done` observes completion (or on failure), at
+    which point the scheduler reconciles the collective's per-cid
+    accounting. A handle that is never polled simply keeps its registry
+    entry until it is — entries hold no payload bytes.
+    """
+
+    def __init__(self, world: "JcclWorld", cid: int, coll: _Collective,
+                 result_fn: Optional[Callable[[], object]] = None):
+        self.world = world
+        self.cid = cid
+        self._coll = coll
+        self._result_fn = result_fn
+        self._result: object = None
+        self._exc: Optional[CollectiveError] = None
+        self._finished = False
+
+    # -- state ----------------------------------------------------------
+    def done(self) -> bool:
+        """True once the collective completed or failed. Polling a
+        freshly completed collective finalizes it (registry retire +
+        result materialization) — this never pumps the simulator."""
+        if not self._finished and self._exc is None and self._coll.done():
+            self._finished = True
+            self._result = (self._result_fn()
+                            if self._result_fn is not None else None)
+            self.world._retire(self.cid)
+        return self._finished or self._exc is not None
+
+    def exception(self) -> Optional[CollectiveError]:
+        """The failure that killed this collective, or None."""
+        return self._exc
+
+    def result(self):
+        """The collective's output (raises if failed or still live)."""
+        if self._exc is not None:
+            raise self._exc
+        if not self._finished:
+            raise CollectiveError("collective still in flight — "
+                                  "wait() on the handle first")
+        return self._result
+
+    # -- synchronization ------------------------------------------------
+    def wait(self, timeout: float = 120.0):
+        """Pump the simulator until this collective completes; returns
+        its result. Sibling live collectives advance too (shared event
+        loop). Raises :class:`CollectiveError` on abort/timeout."""
+        self.world.wait_all([self], timeout=timeout)
+        return self.result()
+
+    def _fail(self, exc: CollectiveError) -> None:
+        """Mark the work failed and retire its registry entry."""
+        if not self._finished and self._exc is None:
+            self._exc = exc
+            self.world._retire(self.cid)
+
+
 class JcclWorld:
-    """All ranks of one communicator + the collective engine."""
+    """All ranks of one communicator + the async collective engine."""
 
     def __init__(self, cluster: Cluster, libs: Sequence, nic: str = "mlx5_0",
                  max_chunk_bytes: int = 1 << 22, qp_depth: int = 8192,
@@ -64,11 +146,19 @@ class JcclWorld:
                     [self._nic_name(lib, c, nic) for lib in self.libs])
             for c in range(self.n_channels)]
         self.scheduler = ChannelScheduler(self, config=sched)
-        # (channel, receiver, sender, seq) -> in-flight chunk tag
-        self._tags: Dict[Tuple[int, int, int, int], object] = {}
+        # (channel, receiver, sender, seq) -> (cid, tag) of the in-flight
+        # chunk: the cid routes the eventual notify to the right live
+        # collective, the tag identifies the chunk within it
+        self._tags: Dict[Tuple[int, int, int, int],
+                         Tuple[Optional[int], object]] = {}
         # settle shadow control verbs (no-op for StandardLib worlds)
         self.sim.run(until=self.sim.now + 0.05)
-        self._active: Optional[_Collective] = None
+        # live-collective registry: cid -> collective actor
+        self._live: Dict[int, _Collective] = {}
+        self._next_cid = 0
+        #: peak number of simultaneously live collectives (introspection;
+        #: the overlap workloads assert a floor on it)
+        self.peak_live = 0
         self.failed = False
         self.fail_wc = None
 
@@ -109,15 +199,17 @@ class JcclWorld:
     # striped data plane
     # ------------------------------------------------------------------
     def send(self, rank: int, peer: int, payload: np.ndarray, tag,
-             home: Optional[int] = None) -> int:
+             home: Optional[int] = None, cid: Optional[int] = None) -> int:
         """Send one tagged chunk, striping across channels: ``home``
         (default: the tag) names the chunk's preferred channel; the
         scheduler resteers it if that channel's link is degraded or
-        down. Returns the channel the chunk actually took."""
+        down. ``cid`` namespaces the tag to one live collective (None
+        for raw streams — benchmarks drive the scheduler directly).
+        Returns the channel the chunk actually took."""
         if home is None:
             home = tag if isinstance(tag, int) else 0
-        c = self.scheduler.pick(rank, peer, home)
-        self.channels[c].send(rank, peer, payload, tag)
+        c = self.scheduler.pick(rank, peer, home, cid)
+        self.channels[c].send(rank, peer, payload, tag, cid)
         return c
 
     def _drop_tag(self, channel: Channel, rank: int, peer: int,
@@ -126,89 +218,154 @@ class JcclWorld:
         it will never dispatch, so its tag entry and the scheduler's
         in-flight count must not linger (a leak here would bias every
         later resteer decision against the channel)."""
-        tag = self._tags.pop((channel.index, rank, peer, seq), None)
-        if tag is not None:
-            self.scheduler.note_delivered(channel.index)
+        entry = self._tags.pop((channel.index, rank, peer, seq), None)
+        if entry is not None:
+            self.scheduler.note_delivered(channel.index, entry[0])
 
     def _dispatch_notify(self, channel: Channel, ep: RankEndpoint,
                          peer: int, seq: int) -> None:
-        tag = self._tags.pop((channel.index, ep.rank, peer, seq), None)
-        if tag is not None:
-            self.scheduler.note_delivered(channel.index)
-            channel.chunks_delivered += 1
-        if self._active is not None:
-            self._active.on_notify(ep.rank, peer, tag, ep, seq)
+        """Route one in-order notify to its collective: the tag entry
+        names the owning cid, so concurrent collectives never see each
+        other's chunks (tag namespacing)."""
+        entry = self._tags.pop((channel.index, ep.rank, peer, seq), None)
+        if entry is None:
+            return
+        cid, tag = entry
+        self.scheduler.note_delivered(channel.index, cid)
+        channel.chunks_delivered += 1
+        if cid is None:
+            return  # raw stream chunk (no collective to notify)
+        coll = self._live.get(cid)
+        if coll is not None:
+            coll.on_notify(ep.rank, peer, tag, ep, seq)
 
     # ------------------------------------------------------------------
-    # collective driver
+    # async collective driver
     # ------------------------------------------------------------------
-    def _run(self, coll: _Collective, timeout: float) -> None:
-        if self._active is not None:
-            raise CollectiveError("another collective is in flight")
-        self._active = coll
+    def _launch(self, coll: _Collective,
+                result_fn: Optional[Callable[[], object]] = None) -> Work:
+        """Register + start one collective; returns its work handle.
+        Degenerate collectives (1 rank, empty payload) complete — and
+        retire — synchronously inside this call."""
+        cid = self._next_cid
+        self._next_cid += 1
+        coll.cid = cid
+        self._live[cid] = coll
+        self.peak_live = max(self.peak_live, len(self._live))
+        work = Work(self, cid, coll, result_fn)
         coll.start()
+        work.done()  # finalize immediately-complete collectives
+        return work
+
+    def _retire(self, cid: int) -> None:
+        """Remove a finished/failed collective from the registry and
+        reconcile the scheduler's per-collective accounting."""
+        self._live.pop(cid, None)
+        self.scheduler.retire(cid)
+
+    def wait_all(self, works: Sequence[Work],
+                 timeout: float = 120.0) -> Sequence[Work]:
+        """Pump the simulator until every handle in ``works`` completes.
+
+        The deadline covers the whole batch (virtual seconds from now).
+        On an unmaskable failure the non-tolerant pending works are
+        failed and the error raised; on timeout every pending work is
+        failed. Returns ``works`` for chaining.
+        """
         deadline = self.sim.now + timeout
-        while not coll.done():
-            if self.failed and not coll.tolerates_failure:
-                self._active = None
-                raise CollectiveError(f"collective aborted: {self.fail_wc}")
+        pending = [w for w in works if not w.done()]
+        while pending:
+            if self.failed:
+                doomed = [w for w in pending
+                          if not w._coll.tolerates_failure]
+                if doomed:
+                    exc = CollectiveError(
+                        f"collective aborted: {self.fail_wc}")
+                    for w in doomed:
+                        w._fail(exc)
+                    raise exc
             t = self.sim.peek_time()
             if t is None or t > deadline:
-                self._active = None
-                if self.failed:
-                    raise CollectiveError(
-                        f"collective dead after failure: {self.fail_wc}")
-                raise CollectiveError("collective timed out")
+                exc = CollectiveError(
+                    f"collective dead after failure: {self.fail_wc}"
+                    if self.failed else "collective timed out")
+                for w in pending:
+                    w._fail(exc)
+                raise exc
             self.sim.step()
-        self._active = None
+            pending = [w for w in pending if not w.done()]
+        return works
 
     @property
     def any_shift(self) -> bool:
         """True if any rank runs ShiftLib (collectives tolerate faults)."""
         return any(isinstance(lib, ShiftLib) for lib in self.libs)
 
-    # -- public API -------------------------------------------------------
-    def allreduce(self, arrays: List[np.ndarray], op: str = "sum",
-                  timeout: float = 120.0) -> List[np.ndarray]:
-        """Ring all-reduce ``arrays`` in place (one array per rank)."""
+    def aligned_bucket_bounds(self, total_elems: int, itemsize: int,
+                              target_bytes: int) -> List[Tuple[int, int]]:
+        """Element ranges of size-targeted buckets whose boundaries are
+        ALIGNED to this world's allreduce bucket granularity
+        (``max_chunk_bytes * n_ranks`` worth of elements).
+
+        Aligned buckets give every engine-level chunk the same bounds —
+        and therefore the same ring-reduction order per element — as the
+        flat-vector all-reduce of the whole range, which is what makes a
+        bucketed (and overlapped) collective BYTE-IDENTICAL to the
+        sequential flat path for every dtype, floats included. This is
+        the single source of truth for that alignment: the DDP trainer,
+        the overlap campaign workload and the byte-identity tests all
+        derive their bucket bounds here. ``target_bytes=0`` means one
+        flat bucket.
+        """
+        if not target_bytes:
+            return [(0, total_elems)]
+        align = max(1, self.max_chunk_bytes // itemsize) * self.n_ranks
+        target = max(1, target_bytes // itemsize)
+        step = max(align, (target // align) * align)
+        return [(i, min(i + step, total_elems))
+                for i in range(0, total_elems, step)] or [(0, 0)]
+
+    # -- async public API -----------------------------------------------
+    def allreduce_async(self, arrays: List[np.ndarray],
+                        op: str = "sum") -> Work:
+        """Launch a ring all-reduce of ``arrays`` in place (one array per
+        rank); returns a :class:`Work` whose result is ``arrays``."""
         coll = _RingAllReduce(self, arrays, op)
-        self._run(coll, timeout)
-        return arrays
+        return self._launch(coll, lambda: arrays)
 
-    def reduce_scatter(self, arrays: List[np.ndarray], op: str = "sum",
-                       timeout: float = 120.0) -> List[np.ndarray]:
-        """After ring reduce-scatter, rank r owns chunk (r+1) % n of each
-        bucket; returns each rank's owned (fully reduced) elements."""
+    def reduce_scatter_async(self, arrays: List[np.ndarray],
+                             op: str = "sum") -> Work:
+        """Launch a ring reduce-scatter; the work's result is each rank's
+        owned (fully reduced) elements — rank r owns chunk (r+1) % n."""
         coll = _RingAllReduce(self, arrays, op, phases=("rs",))
-        self._run(coll, timeout)
-        n = self.n_ranks
-        out = []
-        for r in range(n):
-            own = (r + 1) % n
-            flat = arrays[r].reshape(-1)
-            parts = [flat[c0:c1] for c0, c1 in
-                     (coll._chunk_bounds(b, own)
-                      for b in range(coll.n_buckets))]
-            out.append(np.concatenate(parts) if parts else flat[:0])
-        return out
 
-    def all_gather(self, shards: List[np.ndarray],
-                   timeout: float = 120.0) -> List[np.ndarray]:
-        """Ring all-gather: every rank ends with the concatenation of
-        all ranks' (variable-size) shards."""
+        def _owned() -> List[np.ndarray]:
+            n = self.n_ranks
+            out = []
+            for r in range(n):
+                own = (r + 1) % n
+                flat = arrays[r].reshape(-1)
+                parts = [flat[c0:c1] for c0, c1 in
+                         (coll._chunk_bounds(b, own)
+                          for b in range(coll.n_buckets))]
+                out.append(np.concatenate(parts) if parts else flat[:0])
+            return out
+        return self._launch(coll, _owned)
+
+    def all_gather_async(self, shards: List[np.ndarray]) -> Work:
+        """Launch a ring all-gather of variable-size ``shards``; the
+        work's result is one concatenated array per rank."""
         full = [np.concatenate([np.zeros_like(s) for s in shards])
                 for _ in range(self.n_ranks)]
         for r, s in enumerate(shards):
             off = sum(x.size for x in shards[:r])
             full[r][off:off + s.size] = s
         coll = _RingAllGather(self, full, [s.size for s in shards])
-        self._run(coll, timeout)
-        return full
+        return self._launch(coll, lambda: full)
 
-    def broadcast(self, array: np.ndarray, root: int = 0,
-                  timeout: float = 120.0) -> List[np.ndarray]:
-        """Pipelined chain broadcast of ``array`` from ``root``; returns
-        one output per rank (the root's is a read-only alias)."""
+    def broadcast_async(self, array: np.ndarray, root: int = 0) -> Work:
+        """Launch a pipelined chain broadcast from ``root``; the work's
+        result is one output per rank (the root's is a read-only alias)."""
         # Ownership rule: the root's entry is a READ-ONLY view of the
         # caller's array — the pipeline only ever reads the root slot
         # (non-roots get fresh writable buffers), so aliasing the input
@@ -219,16 +376,43 @@ class JcclWorld:
         outs = [root_view if r == root else np.zeros_like(array)
                 for r in range(self.n_ranks)]
         coll = _PipelineBroadcast(self, outs, root)
-        self._run(coll, timeout)
-        return outs
+        return self._launch(coll, lambda: outs)
+
+    def all_to_all_async(self, mats: List[np.ndarray]) -> Work:
+        """Launch a chunk-striped all-to-all (``mats[r]`` row j goes to
+        rank j); the work's result is one received matrix per rank."""
+        outs = [np.zeros_like(m) for m in mats]
+        coll = _AllToAll(self, mats, outs)
+        return self._launch(coll, lambda: outs)
+
+    # -- blocking public API (async + wait) -------------------------------
+    def allreduce(self, arrays: List[np.ndarray], op: str = "sum",
+                  timeout: float = 120.0) -> List[np.ndarray]:
+        """Ring all-reduce ``arrays`` in place (one array per rank)."""
+        return self.allreduce_async(arrays, op).wait(timeout)
+
+    def reduce_scatter(self, arrays: List[np.ndarray], op: str = "sum",
+                       timeout: float = 120.0) -> List[np.ndarray]:
+        """After ring reduce-scatter, rank r owns chunk (r+1) % n of each
+        bucket; returns each rank's owned (fully reduced) elements."""
+        return self.reduce_scatter_async(arrays, op).wait(timeout)
+
+    def all_gather(self, shards: List[np.ndarray],
+                   timeout: float = 120.0) -> List[np.ndarray]:
+        """Ring all-gather: every rank ends with the concatenation of
+        all ranks' (variable-size) shards."""
+        return self.all_gather_async(shards).wait(timeout)
+
+    def broadcast(self, array: np.ndarray, root: int = 0,
+                  timeout: float = 120.0) -> List[np.ndarray]:
+        """Pipelined chain broadcast of ``array`` from ``root``; returns
+        one output per rank (the root's is a read-only alias)."""
+        return self.broadcast_async(array, root).wait(timeout)
 
     def all_to_all(self, mats: List[np.ndarray],
                    timeout: float = 120.0) -> List[np.ndarray]:
         """mats[r] has shape (n_ranks, k): row j goes to rank j."""
-        outs = [np.zeros_like(m) for m in mats]
-        coll = _AllToAll(self, mats, outs)
-        self._run(coll, timeout)
-        return outs
+        return self.all_to_all_async(mats).wait(timeout)
 
     def barrier(self, timeout: float = 60.0) -> None:
         """Block (in virtual time) until every rank reaches the barrier."""
@@ -257,6 +441,9 @@ class JcclWorld:
             "channels": [ch.stats() for ch in self.channels],
             "scheduler": self.scheduler.snapshot(),
             "telemetry": self.cluster.telemetry.snapshot(),
+            "peak_live_collectives": self.peak_live,
+            "live_collectives": len(self._live),
+            "inflight_tags": len(self._tags),
         }
 
 

@@ -130,6 +130,38 @@ class ShiftConfig:
     data_rails: int = 1
     # explicit per-rail override: default NIC index -> backup NIC index
     backup_overrides: Optional[Dict[int, int]] = None
+    # Telemetry-driven probe pacing (ROADMAP item): a QP whose default
+    # path has flapped repeatedly in the recent window is probed
+    # CAUTIOUSLY (exponential backoff per extra recent fallback — a
+    # flapping rail that passes a probe is likely to die again mid-
+    # recovery, and each aborted recovery costs a handshake), while a
+    # path with no recent flap history keeps the aggressive base
+    # cadence. The FIRST fallback of a stable path always probes at
+    # ``probe_interval`` exactly, so single-fault behaviour (and every
+    # historical scenario fingerprint that only faults once) is
+    # unchanged.
+    probe_adaptive: bool = True
+    probe_flap_window: float = 0.5     # seconds of fallback history used
+    probe_backoff: float = 2.0         # interval multiplier per extra flap
+    probe_backoff_max: float = 8.0     # cap on the pacing multiplier
+
+    def paced_probe_interval(self, flap_times: Sequence[float],
+                             now: float) -> float:
+        """Probe interval given the QP's recent fallback history.
+
+        ``flap_times`` are virtual timestamps of past fallback entries;
+        only those within ``probe_flap_window`` of ``now`` count. One
+        recent fallback (the one being probed for) keeps the base
+        cadence; each additional one multiplies the interval by
+        ``probe_backoff`` up to ``probe_backoff_max``.
+        """
+        if not self.probe_adaptive:
+            return self.probe_interval
+        recent = sum(1 for t in flap_times
+                     if now - t <= self.probe_flap_window)
+        factor = min(self.probe_backoff ** max(0, recent - 1),
+                     self.probe_backoff_max)
+        return self.probe_interval * factor
 
     def backup_index(self, i: int, n: int) -> int:
         """Backup NIC index for a default NIC at rail ``i`` of ``n``."""
@@ -476,6 +508,10 @@ class ShiftQP:
         self._in_handshake = False
         self._probing = False
         self._probe_outstanding = False
+        # fallback-entry timestamps (bounded) — the telemetry the
+        # adaptive probe pacing reads: a recently-flapping default path
+        # is probed cautiously, a stable one aggressively
+        self.flap_times: Deque[float] = deque(maxlen=16)
         self._fence_rec: Optional[_SendRec] = None
         self._withheld: List[_SendRec] = []
         self._recover_sent = False
@@ -822,6 +858,7 @@ class ShiftQP:
             return
         self._in_handshake = True
         lib.stats.fallbacks += 1
+        self.flap_times.append(lib.cluster.sim.now)
         lib._emit_event("fallback", self)
         self.cycle += 1
         self._reset_default()
@@ -851,6 +888,7 @@ class ShiftQP:
         self._await_first_success = True
         self._in_handshake = True
         self.lib.stats.fallbacks += 1
+        self.flap_times.append(self.lib.cluster.sim.now)
         self.lib._emit_event("fallback", self)
         self.cycle += 1
         self._reset_default()
@@ -951,13 +989,18 @@ class ShiftQP:
     # ------------------------------------------------------------------
     # recovery: State 2 -> 3 -> 4 -> 1  (§4.3.3)
     # ------------------------------------------------------------------
+    def _probe_pace(self) -> float:
+        """Current probe interval: base cadence scaled by the adaptive
+        flap-history backoff (see ShiftConfig.paced_probe_interval)."""
+        return self.lib.config.paced_probe_interval(
+            self.flap_times, self.lib.cluster.sim.now)
+
     def _start_probing(self) -> None:
         if self._probing:
             return
         self._probing = True
         self.default.ctx._probe_cb[self.default.qpn] = self._on_probe_result
-        self.lib.cluster.sim.schedule(self.lib.config.probe_interval,
-                                      self._probe_tick)
+        self.lib.cluster.sim.schedule(self._probe_pace(), self._probe_tick)
 
     def _probe_tick(self) -> None:
         if self.send_state is not SendState.FALLBACK:
@@ -987,7 +1030,7 @@ class ShiftQP:
         else:
             self.lib.stats.probe_failures += 1
             self._reset_default()
-            self.lib.cluster.sim.schedule(self.lib.config.probe_interval,
+            self.lib.cluster.sim.schedule(self._probe_pace(),
                                           self._probe_tick)
 
     def _begin_recovery(self) -> None:

@@ -14,9 +14,17 @@ Workloads, in increasing weight:
 * ``broadcast`` / ``all_to_all`` — the remaining collective shapes under
   the same fault matrix, each with byte-exact payload verification per
   round; both accept ``channels`` too.
+* ``overlap_allreduce`` — CONCURRENT collectives: every round splits the
+  vector into aligned parts and issues one ``allreduce_async`` work per
+  part, so scenario faults land while several collectives are in flight;
+  each part's numeric result is verified and the run must actually
+  overlap (``RunResult.peak_concurrency`` floor).
 * ``ddp`` — a short data-parallel training run (``build_smoke_trainer``);
   scenario times are rebased onto the measured per-step collective time
   so faults land mid-all-reduce regardless of model size.
+* ``ddp_bucketed`` — the same trainer with ``bucket_bytes`` forced small
+  enough that every step issues >= 4 concurrent gradient-bucket works
+  (the overlapped-DDP smoke; a run that never overlaps is a violation).
 
 Every run returns a :class:`RunResult` whose :meth:`RunResult.fingerprint`
 is a pure function of the virtual-clock execution — same seed implies an
@@ -72,6 +80,17 @@ class RunResult:
     # multi-rail channel accounting (None for channel-less workloads)
     channel_stats: Optional[List[Dict[str, object]]] = None
     resteered_chunks: int = 0
+    # concurrent-collective accounting: peak simultaneously live
+    # collectives observed, and the workload-declared floor (0 = no
+    # overlap requirement; a completed run below the floor is a
+    # violation — the overlap claim would otherwise be vacuous)
+    peak_concurrency: int = 0
+    min_concurrency: int = 0
+    # cross-collective tag hygiene: in-flight tag entries left in
+    # JcclWorld._tags after the workload finished (must be 0 on a
+    # completed run — a leak means a chunk was assigned but its notify
+    # neither dispatched nor was reclaimed)
+    leaked_tags: int = 0
 
     @property
     def ok(self) -> bool:
@@ -89,6 +108,7 @@ class RunResult:
             tuple((round(t, 9), e, h) for t, e, h in self.lifecycle),
             tuple(round(l, 9) for l in self.fallback_latencies),
             self.resteered_chunks,
+            self.peak_concurrency,
             tuple((c["chunks_assigned"], c["chunks_delivered"])
                   for c in self.channel_stats)
             if self.channel_stats is not None else None,
@@ -129,6 +149,8 @@ def _from_snapshot(snap: Dict[str, object], result: RunResult) -> None:
     result.order_violations = snap["order_violations"]
     result.duplicate_notifies = snap["duplicate_notifies"]
     result.app_errors = sum(snap["rank_errors"])
+    result.peak_concurrency = snap.get("peak_live_collectives", 0)
+    result.leaked_tags = snap.get("inflight_tags", 0)
     if len(snap.get("channels", ())) > 1:
         result.channel_stats = snap["channels"]
         result.resteered_chunks = snap["scheduler"]["resteered"]
@@ -346,7 +368,8 @@ def run_pingpong(scenario: Scenario, seed: int = 0, n_msgs: int = 60,
 def _run_rounds(workload: str, scenario: Scenario, seed: int,
                 n_ranks: int, max_rounds: int, probe_interval: float,
                 fast: bool, channels: int, max_chunk_bytes: int,
-                round_fn, nics_per_host: Optional[int] = None) -> RunResult:
+                round_fn, nics_per_host: Optional[int] = None,
+                min_concurrency: int = 0) -> RunResult:
     """Shared driver for JcclWorld round workloads: build the world,
     schedule the fault timeline, run ``round_fn(world, rng, timeout) ->
     payload mismatches`` until the traffic horizon/deadline, settle, and
@@ -357,7 +380,7 @@ def _run_rounds(workload: str, scenario: Scenario, seed: int,
     from repro.collectives import CollectiveError, build_world
 
     result = RunResult(scenario=scenario.name, workload=workload,
-                       seed=seed)
+                       seed=seed, min_concurrency=min_concurrency)
     cluster, libs, world = build_world(
         n_ranks=n_ranks, probe_interval=probe_interval,
         max_chunk_bytes=max_chunk_bytes, strict_order=False, fast=fast,
@@ -409,6 +432,40 @@ def run_allreduce(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
                        nics_per_host=nics_per_host)
 
 
+def run_overlap_allreduce(scenario: Scenario, seed: int = 0,
+                          n_ranks: int = 2, elems: int = 1 << 14,
+                          parts: int = 4, max_rounds: int = 4000,
+                          probe_interval: float = 5e-3, fast: bool = True,
+                          channels: int = 1,
+                          nics_per_host: Optional[int] = None) -> RunResult:
+    """Concurrent collectives under faults: every round splits the
+    vector into ``parts`` engine-aligned slices and issues one
+    ``allreduce_async`` work per slice, waiting on all handles — so the
+    scenario's faults land while several collectives are in flight.
+    Each slice's numeric result must equal the true sum, and the run
+    must actually overlap (``min_concurrency=2`` floor, checked by the
+    invariants; the parts themselves give >= ``parts`` live works)."""
+    max_chunk_bytes = 1 << 12
+
+    def one_round(world, rng, timeout):
+        arrays = [rng.randn(elems).astype(np.float32)
+                  for _ in range(n_ranks)]
+        expect = np.sum(arrays, axis=0)
+        # engine-aligned slice bounds: byte-identical to the flat path
+        bounds = world.aligned_bucket_bounds(elems, 4,
+                                             elems * 4 // parts)
+        works = [world.allreduce_async([a[lo:hi] for a in arrays])
+                 for lo, hi in bounds]
+        world.wait_all(works, timeout=timeout)
+        return sum(1 for arr in arrays
+                   if not np.allclose(arr, expect, atol=1e-4))
+
+    return _run_rounds("overlap_allreduce", scenario, seed, n_ranks,
+                       max_rounds, probe_interval, fast, channels,
+                       max_chunk_bytes, one_round,
+                       nics_per_host=nics_per_host, min_concurrency=2)
+
+
 def run_broadcast(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
                   elems: int = 1 << 14, max_rounds: int = 4000,
                   probe_interval: float = 5e-3, fast: bool = True,
@@ -454,20 +511,30 @@ def run_alltoall(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
 
 
 def run_ddp(scenario: Scenario, seed: int = 0, steps: int = 6,
-            n_ranks: int = 2, fast: bool = True,
-            channels: int = 1) -> RunResult:
+            n_ranks: int = 2, fast: bool = True, channels: int = 1,
+            max_chunk_bytes: int = 1 << 18,
+            bucket_bytes: Optional[int] = None,
+            min_concurrency: int = 0,
+            workload_name: str = "ddp") -> RunResult:
+    """Short DDP training run under the scenario's fault timeline.
+    ``bucket_bytes`` overrides the trainer's gradient bucketing (None
+    keeps the default); ``min_concurrency`` declares an overlap floor
+    the invariants enforce (the ``ddp_bucketed`` workload uses both to
+    force >= 4 concurrent gradient-bucket works per step)."""
     from repro.collectives import build_world
     from repro.train.trainer import RestartNeeded, build_smoke_trainer
 
-    result = RunResult(scenario=scenario.name, workload="ddp", seed=seed)
+    result = RunResult(scenario=scenario.name, workload=workload_name,
+                       seed=seed, min_concurrency=min_concurrency)
     cluster, libs, world = build_world(
         n_ranks=n_ranks, probe_interval=5e-4,
-        max_chunk_bytes=1 << 18, strict_order=False, fast=fast,
+        max_chunk_bytes=max_chunk_bytes, strict_order=False, fast=fast,
         channels=channels)
     _observe(cluster, libs, result)
     ckpt_dir = tempfile.mkdtemp(prefix="repro-campaign-ckpt-")
     trainer = build_smoke_trainer(cluster, libs, steps=steps,
-                                  ckpt_dir=ckpt_dir, seed=seed)
+                                  ckpt_dir=ckpt_dir, seed=seed,
+                                  bucket_bytes=bucket_bytes)
     t0 = cluster.sim.now
     scheduled = [False]
 
@@ -509,12 +576,28 @@ def run_ddp(scenario: Scenario, seed: int = 0, steps: int = 6,
 # ---------------------------------------------------------------------------
 
 
+def run_ddp_bucketed(scenario: Scenario, seed: int = 0, steps: int = 4,
+                     n_ranks: int = 2, fast: bool = True,
+                     channels: int = 1,
+                     bucket_bytes: int = 1 << 16) -> RunResult:
+    """Overlapped bucketed DDP: the smoke trainer with ``bucket_bytes``
+    small enough (vs the ~2.4MB smoke-model gradient) that every step
+    issues >= 4 concurrent gradient-bucket works — the invariants fail
+    the run if it never actually overlapped."""
+    return run_ddp(scenario, seed=seed, steps=steps, n_ranks=n_ranks,
+                   fast=fast, channels=channels,
+                   max_chunk_bytes=1 << 14, bucket_bytes=bucket_bytes,
+                   min_concurrency=4, workload_name="ddp_bucketed")
+
+
 WORKLOADS: Dict[str, Callable[..., RunResult]] = {
     "pingpong": run_pingpong,
     "allreduce": run_allreduce,
+    "overlap_allreduce": run_overlap_allreduce,
     "broadcast": run_broadcast,
     "all_to_all": run_alltoall,
     "ddp": run_ddp,
+    "ddp_bucketed": run_ddp_bucketed,
 }
 
 

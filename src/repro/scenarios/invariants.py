@@ -26,6 +26,13 @@ fully loaded nor fully dark. ``Scenario.max_fallbacks`` caps health
 transitions: degradation faults must be absorbed by the scheduler
 alone.
 
+Concurrent-collective runs add two checks: a workload that declares an
+overlap floor (``RunResult.min_concurrency``) must have actually run
+that many collectives simultaneously (``peak_concurrency`` — the
+overlap claim is vacuous otherwise), and after a completed run no
+in-flight tag entries may remain in ``JcclWorld._tags``
+(``leaked_tags`` — cross-collective tag hygiene).
+
 Scenario expectations (masked vs. propagated, minimum fallback count,
 recovery) are checked alongside: a fault-tolerance claim is vacuous if
 the fault never actually bit.
@@ -63,6 +70,22 @@ def check_invariants(result: RunResult, scenario: Scenario) -> List[str]:
     if result.payload_mismatches:
         v.append(f"payload corruption: {result.payload_mismatches} "
                  f"mismatched messages/rounds")
+
+    # -- concurrent-collective accounting ------------------------------------
+    # A workload that CLAIMS overlap must actually overlap: a completed
+    # run whose peak live-collective count is below the declared floor
+    # would make the concurrency claim vacuous.
+    if (result.min_concurrency and result.completed and not result.aborted
+            and result.peak_concurrency < result.min_concurrency):
+        v.append(f"overlap never happened: peak {result.peak_concurrency} "
+                 f"concurrent collectives < required "
+                 f"{result.min_concurrency}")
+    # Tag hygiene: after a completed (non-aborted) run every in-flight
+    # chunk tag must have been consumed or reclaimed — a leftover entry
+    # is a cross-collective leak in JcclWorld._tags.
+    if result.leaked_tags and result.completed and not result.aborted:
+        v.append(f"tag leak: {result.leaked_tags} in-flight tag entries "
+                 f"left in JcclWorld._tags after completion")
 
     # -- world-level notify counters ----------------------------------------
     if result.duplicate_notifies:
@@ -134,7 +157,8 @@ def check_invariants(result: RunResult, scenario: Scenario) -> List[str]:
                      f"{result.fallbacks} fallbacks > allowed "
                      f"{scenario.max_fallbacks}")
         # recovery needs probe cycles the short ddp window doesn't have
-        if (scenario.expect_recovery and result.workload != "ddp"
+        if (scenario.expect_recovery
+                and result.workload not in ("ddp", "ddp_bucketed")
                 and result.recoveries < 1):
             v.append("traffic never returned to the default NIC")
     else:

@@ -8,6 +8,15 @@ ShiftLib (failures masked; training continues until the next checkpoint or
 indefinitely). Per §4.4, the trainer checkpoints promptly after a fallback
 ("failure-aware checkpointing").
 
+Gradient communication is **bucketed and overlapped** (DESIGN.md §8): the
+flat gradient vector is split into ``TrainerConfig.bucket_bytes``-sized
+buckets whose boundaries align with the collective engine's chunk
+granularity, each bucket goes out as an ``allreduce_async`` work handle,
+and the optimizer step waits on all handles — so bucket rings pipeline
+across each other and across rails, and a mid-step fallback only delays
+the bucket it hit. The bucketed result is byte-identical to the
+sequential flat-vector path (same chunk bounds, same reduction order).
+
 The returned ``TrainRun.timeline`` is (time, step, loss) where time
 combines measured compute wall-time (divided by world size — workers run
 sequentially here but execute in parallel on a real cluster) and the
@@ -44,6 +53,18 @@ class TrainerConfig:
     grad_compress: bool = False        # int8 + error feedback (cross-pod)
     stop_at_next_ckpt_after_fallback: bool = False  # scenario (3)
     seed: int = 0
+    # Gradient bucketing (DDP overlap): the flat gradient vector is split
+    # into size-targeted buckets, each all-reduced as its own collective.
+    # ``overlap=True`` issues every bucket as an async work handle and
+    # waits on all of them before the optimizer step, so bucket rings
+    # pipeline across each other (and across rails) instead of running
+    # back-to-back; a mid-step fallback only delays the bucket it hit.
+    # 0 disables bucketing (one flat all-reduce, the historical path).
+    # Bucket boundaries are ALIGNED to the collective engine's bucket
+    # granularity, so the bucketed result is byte-identical to the flat
+    # path — see DDPTrainer._grad_buckets.
+    bucket_bytes: int = 1 << 18
+    overlap: bool = True
 
 
 @dataclasses.dataclass
@@ -55,6 +76,11 @@ class TrainRun:
     slowdown_reschedule: float = 0.0
     slowdown_retrain: float = 0.0
     final_step: int = 0
+    # virtual seconds spent in gradient collectives across the run (the
+    # ddp_overlap_speedup benchmark compares this across modes)
+    comm_time: float = 0.0
+    # peak number of concurrently in-flight gradient works in any step
+    peak_works: int = 0
 
 
 class DDPTrainer:
@@ -97,6 +123,34 @@ class DDPTrainer:
             return jax.tree_util.tree_unflatten(treedef, out)
         return vec, unflatten
 
+    def _grad_buckets(self, world: JcclWorld,
+                      total_elems: int) -> List[Tuple[int, int]]:
+        """Element ranges of the size-targeted gradient buckets — the
+        engine's aligned bounds (see JcclWorld.aligned_bucket_bounds:
+        alignment is what makes the bucketed/overlapped result
+        byte-identical to the flat path). Gradients travel as float32."""
+        return world.aligned_bucket_bounds(total_elems, 4,
+                                           self.tcfg.bucket_bytes)
+
+    def _allreduce_grads(self, world: JcclWorld, run: TrainRun,
+                         grad_vecs: List[np.ndarray]) -> None:
+        """All-reduce the per-rank gradient vectors, bucketed and (by
+        default) overlapped: one async work per bucket, all waited
+        before the optimizer step. Sequential mode (``overlap=False``)
+        waits each bucket before issuing the next — the baseline the
+        ``ddp_overlap_speedup`` benchmark gates against."""
+        bounds = self._grad_buckets(world, grad_vecs[0].size)
+        if self.tcfg.overlap:
+            works = [world.allreduce_async([v[lo:hi] for v in grad_vecs])
+                     for lo, hi in bounds]
+            run.peak_works = max(run.peak_works, len(works))
+            world.wait_all(works, timeout=300.0)
+        else:
+            run.peak_works = max(run.peak_works, 1)
+            for lo, hi in bounds:
+                world.allreduce([v[lo:hi] for v in grad_vecs],
+                                timeout=300.0)
+
     # ------------------------------------------------------------------
     def train(self, world: JcclWorld,
               on_step: Optional[Callable] = None) -> TrainRun:
@@ -126,8 +180,9 @@ class DDPTrainer:
                 compute_t = (time.time() - wall0) / self.n
 
                 sim0 = self.cluster.sim.now
-                world.allreduce(grad_vecs, timeout=300.0)
+                self._allreduce_grads(world, run, grad_vecs)
                 comm_t = self.cluster.sim.now - sim0
+                run.comm_time += comm_t
 
                 mean_grads = unflatten(grad_vecs[0] / self.n)
                 state["params"], state["opt"], _ = adamw_update(
@@ -186,16 +241,21 @@ class DDPTrainer:
 
 def build_smoke_trainer(cluster, libs, steps: int = 6, ckpt_dir: str =
                         "/tmp/repro-ckpt-smoke", seed: int = 0,
-                        lr: float = 3e-3) -> DDPTrainer:
+                        lr: float = 3e-3, bucket_bytes: Optional[int] = None,
+                        overlap: bool = True) -> DDPTrainer:
     """Campaign-engine / CI-smoke entry point: a DDP trainer over a tiny
     model that finishes a handful of steps in seconds. The fault-scenario
-    campaign (repro.scenarios) drives this as its heaviest workload."""
+    campaign (repro.scenarios) drives this as its heaviest workload.
+    ``bucket_bytes`` / ``overlap`` override the gradient-bucketing knobs
+    (None keeps the TrainerConfig default)."""
     from repro import configs as C
 
     model_cfg = C.smoke_config("gpt2-124m", n_layers=2, d_model=128,
                                n_heads=4, n_kv_heads=4, d_ff=512, vocab=512)
+    kw = {} if bucket_bytes is None else {"bucket_bytes": bucket_bytes}
     tcfg = TrainerConfig(steps=steps, ckpt_every=max(2, steps // 2),
-                         lr=lr, ckpt_dir=ckpt_dir, seed=seed)
+                         lr=lr, ckpt_dir=ckpt_dir, seed=seed,
+                         overlap=overlap, **kw)
     return DDPTrainer(cluster, libs, model_cfg, tcfg,
                       batch_per_rank=2, seq_len=32)
 
@@ -230,8 +290,9 @@ def resume_training(trainer: DDPTrainer, world: JcclWorld, rn: RestartNeeded,
             grad_vecs.append(vec)
         compute_t = (time.time() - wall0) / trainer.n
         sim0 = trainer.cluster.sim.now
-        world.allreduce(grad_vecs, timeout=300.0)
+        trainer._allreduce_grads(world, run, grad_vecs)
         comm_t = trainer.cluster.sim.now - sim0
+        run.comm_time += comm_t
         mean_grads = unflatten(grad_vecs[0] / trainer.n)
         state["params"], state["opt"], _ = adamw_update(
             state["params"], mean_grads, state["opt"], trainer.opt_cfg)

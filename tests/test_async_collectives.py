@@ -1,0 +1,302 @@
+"""Async work-handle collective engine: concurrency, byte-identity,
+fault overlap, tag namespacing, and the overlapped bucketed DDP path."""
+
+import numpy as np
+import pytest
+
+from repro.collectives import CollectiveError, Work, build_world
+from repro.core.shift import ShiftLib
+from repro.scenarios import SCENARIOS, run_scenario
+
+#: the four campaign workload dtypes (pingpong streams uint8 payloads,
+#: the collective workloads run float32, the trilemma/ring tests int64,
+#: fig8 training float64 timelines)
+DTYPES = [np.float32, np.float64, np.int64, np.uint8]
+
+
+def _aligned_bounds(world, total, parts, itemsize):
+    """~parts engine-aligned ranges (JcclWorld.aligned_bucket_bounds is
+    the single source of truth for the byte-identity alignment)."""
+    return world.aligned_bucket_bounds(total, itemsize,
+                                       total * itemsize // parts)
+
+
+# ---------------------------------------------------------------------------
+# work-handle lifecycle
+# ---------------------------------------------------------------------------
+
+def test_work_handle_lifecycle():
+    _, _, w = build_world(n_ranks=2, max_chunk_bytes=4096)
+    arrays = [np.ones(4096 * 2, dtype=np.float32) * (r + 1)
+              for r in range(2)]
+    work = w.allreduce_async(arrays)
+    assert isinstance(work, Work)
+    assert not work.done()
+    assert work.exception() is None
+    with pytest.raises(CollectiveError):
+        work.result()          # not finished yet
+    out = work.wait()
+    assert out is arrays
+    assert work.done() and work.exception() is None
+    np.testing.assert_allclose(arrays[0], 3.0)
+    # registry + tag table are clean after completion
+    assert len(w._live) == 0 and len(w._tags) == 0
+
+
+def test_blocking_api_is_async_plus_wait():
+    """The historical blocking calls still work for every collective."""
+    _, _, w = build_world(n_ranks=4, max_chunk_bytes=1 << 14)
+    arrays = [np.arange(1000, dtype=np.int64) * (r + 1) for r in range(4)]
+    expect = sum(a.copy() for a in arrays)
+    w.allreduce(arrays)
+    for a in arrays:
+        np.testing.assert_array_equal(a, expect)
+
+    shards = [np.full(9 + r, r, dtype=np.float32) for r in range(4)]
+    full = w.all_gather(shards)
+    for f in full:
+        np.testing.assert_array_equal(f, np.concatenate(shards))
+
+    msg = np.arange(5000, dtype=np.float32)
+    outs = w.broadcast(msg, root=1)
+    for o in outs:
+        np.testing.assert_array_equal(o, msg)
+
+    mats = [np.arange(4 * 8, dtype=np.int64).reshape(4, 8) + 100 * r
+            for r in range(4)]
+    outs = w.all_to_all(mats)
+    for j in range(4):
+        for i in range(4):
+            np.testing.assert_array_equal(outs[j][i], mats[i][j])
+    w.barrier()
+    assert len(w._live) == 0 and len(w._tags) == 0
+
+
+# ---------------------------------------------------------------------------
+# overlapped == sequential, byte for byte, across the workload dtypes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_two_overlapping_allreduces_byte_identical_to_sequential(dtype):
+    def payloads():
+        rng = np.random.RandomState(7)
+        mk = (lambda r: (rng.rand(4096 * 4) * 100 + r).astype(dtype))
+        return ([mk(1), mk(2)], [mk(3), mk(4)])
+
+    # overlapped: both collectives live at once
+    _, _, wo = build_world(n_ranks=2, channels=2, max_chunk_bytes=4096)
+    a1, a2 = payloads()
+    wo.wait_all([wo.allreduce_async(a1), wo.allreduce_async(a2)])
+    assert wo.peak_live >= 2
+    # sequential: same inputs, one at a time, fresh world
+    _, _, ws = build_world(n_ranks=2, channels=2, max_chunk_bytes=4096)
+    b1, b2 = payloads()
+    ws.allreduce(b1)
+    ws.allreduce(b2)
+    for x, y in zip(a1 + a2, b1 + b2):
+        assert x.tobytes() == y.tobytes()
+    assert wo.order_violations == 0 and wo.duplicate_notifies == 0
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_bucketed_overlapped_equals_flat_vector(dtype):
+    """The trainer's contract: engine-aligned buckets all-reduced
+    concurrently produce the exact bytes of one flat all-reduce."""
+    total, mcb = 4096 * 6 + 64, 4096
+
+    def payloads():
+        rng = np.random.RandomState(11)
+        return [(rng.rand(total) * 50 + r).astype(dtype) for r in range(2)]
+
+    _, _, wf = build_world(n_ranks=2, max_chunk_bytes=mcb)
+    flat = payloads()
+    wf.allreduce(flat)
+
+    _, _, wb = build_world(n_ranks=2, max_chunk_bytes=mcb)
+    bkt = payloads()
+    bounds = _aligned_bounds(wb, total, 4, np.dtype(dtype).itemsize)
+    assert len(bounds) >= 2
+    works = [wb.allreduce_async([v[lo:hi] for v in bkt])
+             for lo, hi in bounds]
+    wb.wait_all(works)
+    for x, y in zip(flat, bkt):
+        assert x.tobytes() == y.tobytes()
+
+
+def test_bucketed_overlapped_equals_flat_under_fault():
+    """Byte-identity must survive a rail kill landing mid-overlap: the
+    per-element reduction order is ring-structural, not timing-based."""
+    total, mcb = 4096 * 64, 4096  # big enough that the kill lands mid-run
+
+    def payloads():
+        rng = np.random.RandomState(3)
+        return [rng.randn(total).astype(np.float32) for _ in range(2)]
+
+    cf, _, wf = build_world(n_ranks=2, channels=2, max_chunk_bytes=mcb)
+    flat = payloads()
+    cf.sim.at(cf.sim.now + 1e-4, cf.fail_nic, "host0/mlx5_0")
+    wf.allreduce(flat)
+
+    cb, libs, wb = build_world(n_ranks=2, channels=2, max_chunk_bytes=mcb)
+    bkt = payloads()
+    cb.sim.at(cb.sim.now + 1e-4, cb.fail_nic, "host0/mlx5_0")
+    bounds = _aligned_bounds(wb, total, 4, 4)
+    wb.wait_all([wb.allreduce_async([v[lo:hi] for v in bkt])
+                 for lo, hi in bounds])
+    assert any(isinstance(l, ShiftLib) and l.stats.fallbacks for l in libs)
+    for x, y in zip(flat, bkt):
+        assert x.tobytes() == y.tobytes()
+
+
+# ---------------------------------------------------------------------------
+# faults while >= 2 works are in flight
+# ---------------------------------------------------------------------------
+
+def test_rail_kill_with_works_in_flight_masked_and_leakfree():
+    c, libs, w = build_world(n_ranks=2, channels=2, max_chunk_bytes=4096)
+    batches = [[np.full(4096 * 8, float(r + 1 + k), dtype=np.float64)
+                for r in range(2)] for k in range(4)]
+    c.sim.at(c.sim.now + 1e-4, c.fail_nic, "host0/mlx5_0")
+    works = [w.allreduce_async(b) for b in batches]
+    assert sum(1 for x in works if not x.done()) >= 2
+    w.wait_all(works, timeout=60.0)
+    for k, b in enumerate(batches):
+        np.testing.assert_allclose(b[0], (1 + k) + (2 + k))
+    assert sum(l.stats.fallbacks for l in libs
+               if isinstance(l, ShiftLib)) >= 1
+    # 0 invariant violations, no cross-collective tag leakage
+    assert w.order_violations == 0 and w.duplicate_notifies == 0
+    assert len(w._tags) == 0 and len(w._live) == 0
+    assert w.peak_live >= 4
+
+
+def test_mixed_collective_kinds_overlap():
+    _, _, w = build_world(n_ranks=4, channels=2, max_chunk_bytes=4096)
+    arrays = [np.arange(4096 * 2, dtype=np.int64) * (r + 1)
+              for r in range(4)]
+    expect = sum(a.copy() for a in arrays)
+    msg = np.arange(30000, dtype=np.float32)
+    mats = [np.arange(4 * 2048, dtype=np.float32).reshape(4, 2048) + r
+            for r in range(4)]
+    w_ar = w.allreduce_async(arrays)
+    w_bc = w.broadcast_async(msg, root=2)
+    w_aa = w.all_to_all_async(mats)
+    assert w.peak_live >= 3
+    w.wait_all([w_ar, w_bc, w_aa])
+    for a in arrays:
+        np.testing.assert_array_equal(a, expect)
+    for o in w_bc.result():
+        np.testing.assert_array_equal(o, msg)
+    outs = w_aa.result()
+    for j in range(4):
+        for i in range(4):
+            np.testing.assert_array_equal(outs[j][i], mats[i][j])
+    assert len(w._tags) == 0 and w.order_violations == 0
+
+
+def test_standard_world_async_abort_sets_exception():
+    c, _, w = build_world(n_ranks=2, lib_kind="standard",
+                          max_chunk_bytes=4096)
+    arrays = [np.ones(4096 * 16, dtype=np.float64) for _ in range(2)]
+    c.sim.at(c.sim.now + 1e-4, c.fail_nic, "host1/mlx5_0")
+    work = w.allreduce_async(arrays)
+    with pytest.raises(CollectiveError):
+        work.wait(timeout=5.0)
+    assert work.done() and work.exception() is not None
+    with pytest.raises(CollectiveError):
+        work.result()
+    assert len(w._live) == 0  # failed works retire their registry entry
+
+
+# ---------------------------------------------------------------------------
+# all-to-all per-row chunk striping
+# ---------------------------------------------------------------------------
+
+def test_alltoall_stripes_large_rows_across_chunks_and_channels():
+    _, _, w = build_world(n_ranks=3, channels=2, max_chunk_bytes=1 << 12)
+    row = 4096  # 16KB float32 rows -> 4 chunks each
+    mats = [np.random.RandomState(r).randn(3, row).astype(np.float32)
+            for r in range(3)]
+    outs = w.all_to_all(mats)
+    for j in range(3):
+        for i in range(3):
+            np.testing.assert_array_equal(outs[j][i], mats[i][j])
+    # 3x2 rows x 4 chunks = 24 chunk messages, striped over both rails
+    assert w.total_notifies == 24
+    assert all(a > 0 for a in w.scheduler.assigned)
+
+
+def test_alltoall_foreign_notify_rejected():
+    """The pre-refactor bug: _AllToAll.on_notify had no peer/tag guard,
+    so any stray notify corrupted outs. Now it must be dropped."""
+    from repro.collectives.algorithms import _AllToAll
+
+    _, _, w = build_world(n_ranks=2, max_chunk_bytes=1 << 12)
+    mats = [np.ones((2, 8), dtype=np.float32) * (r + 1) for r in range(2)]
+    outs = [np.zeros_like(m) for m in mats]
+    coll = _AllToAll(w, mats, outs)
+    before = [o.copy() for o in outs]
+    ep = w.endpoints[0]
+    coll.on_notify(0, 0, 0, ep, 0)       # self-loop peer
+    coll.on_notify(0, 1, 99, ep, 0)      # out-of-range tag
+    coll.on_notify(0, 1, None, ep, 0)    # missing tag
+    assert all((a == b).all() for a, b in zip(outs, before))
+    assert coll.received == [0, 0]
+
+
+# ---------------------------------------------------------------------------
+# per-collective scheduler accounting
+# ---------------------------------------------------------------------------
+
+def test_scheduler_reconciles_stalled_collective_backlog():
+    """A timed-out collective's undelivered chunks must not linger in
+    the global in-flight backlog once its work handle retires."""
+    c, _, w = build_world(n_ranks=2, lib_kind="standard",
+                          max_chunk_bytes=4096)
+    arrays = [np.ones(4096 * 16, dtype=np.float64) for _ in range(2)]
+    c.sim.at(c.sim.now + 1e-4, c.fail_nic, "host1/mlx5_0")
+    work = w.allreduce_async(arrays)
+    with pytest.raises(CollectiveError):
+        work.wait(timeout=5.0)
+    assert all(k == 0 for k in w.scheduler.inflight)
+    assert w.scheduler.inflight_by_cid.get(work.cid) is None
+
+
+def test_backlog_stall_guard_resteers_off_piled_home():
+    """A home channel whose in-flight backlog dwarfs its peers' (e.g. a
+    stalled collective's undrained chunks) must not receive new chunks;
+    after retire() reconciles the backlog, home picks resume."""
+    _, _, w = build_world(n_ranks=2, channels=2, max_chunk_bytes=4096)
+    sched = w.scheduler
+    # simulate a stalled collective's pile-up on channel 0
+    stuck_cid = 12345
+    for _ in range(64):
+        sched._note_assigned(0, stuck_cid)
+    before = sched.resteered
+    assert sched.pick(0, 1, home=0, cid=1) == 1
+    assert sched.resteered == before + 1
+    # reap the stalled collective: backlog reconciled, home usable again
+    sched.retire(stuck_cid)
+    assert sched.inflight[0] <= 1  # only the resteer bookkeeping remains
+    assert sched.pick(0, 1, home=0, cid=1) == 0
+    # late delivery for the retired cid must not double-count
+    g0 = sched.inflight[0]
+    sched.note_delivered(0, stuck_cid)
+    assert sched.inflight[0] == g0
+
+
+def test_campaign_overlap_workloads_clean():
+    for name in ("baseline_clean", "sender_nic_down"):
+        r = run_scenario(SCENARIOS[name], workload="overlap_allreduce",
+                         max_rounds=300)
+        assert r.ok, r.violations
+        assert r.peak_concurrency >= 4 and r.leaked_tags == 0
+        assert r.fallbacks >= SCENARIOS[name].min_fallbacks
+
+
+def test_campaign_overlap_deterministic():
+    r1 = run_scenario(SCENARIOS["sender_nic_down"],
+                      workload="overlap_allreduce", max_rounds=200, seed=5)
+    r2 = run_scenario(SCENARIOS["sender_nic_down"],
+                      workload="overlap_allreduce", max_rounds=200, seed=5)
+    assert r1.fingerprint() == r2.fingerprint()

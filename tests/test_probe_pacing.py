@@ -1,0 +1,85 @@
+"""Telemetry-driven probe pacing: flapping rails probed cautiously,
+stable rails at the aggressive base cadence (ShiftConfig knobs)."""
+
+import numpy as np
+
+from repro.collectives import build_world
+from repro.core.shift import ShiftConfig, ShiftLib
+
+
+# ---------------------------------------------------------------------------
+# pure pacing function
+# ---------------------------------------------------------------------------
+
+def test_stable_path_keeps_base_cadence():
+    cfg = ShiftConfig(probe_interval=5e-3)
+    # no history at all, and the single fallback being probed for:
+    # both keep the aggressive base interval exactly
+    assert cfg.paced_probe_interval([], now=1.0) == 5e-3
+    assert cfg.paced_probe_interval([0.999], now=1.0) == 5e-3
+
+
+def test_flapping_path_backs_off_exponentially():
+    cfg = ShiftConfig(probe_interval=5e-3)
+    now = 1.0
+    assert cfg.paced_probe_interval([0.99, 0.995], now) == 10e-3
+    assert cfg.paced_probe_interval([0.98, 0.99, 0.995], now) == 20e-3
+    # capped at probe_backoff_max
+    hist = [0.9 + i * 0.01 for i in range(10)]
+    assert cfg.paced_probe_interval(hist, now) == 5e-3 * 8.0
+
+
+def test_old_flaps_age_out_of_the_window():
+    cfg = ShiftConfig(probe_interval=5e-3, probe_flap_window=0.5)
+    # three flaps, but two are older than the window: only one counts
+    assert cfg.paced_probe_interval([0.1, 0.2, 0.95], now=1.0) == 5e-3
+
+
+def test_adaptive_pacing_can_be_disabled():
+    cfg = ShiftConfig(probe_interval=5e-3, probe_adaptive=False)
+    assert cfg.paced_probe_interval([0.99, 0.995, 0.999], 1.0) == 5e-3
+
+
+# ---------------------------------------------------------------------------
+# integration: flap history accumulates on the QP and slows probing
+# ---------------------------------------------------------------------------
+
+def _flap(cluster, world, gid, n_flaps, spacing=8e-3, down=4e-3):
+    """Run allreduce traffic through ``n_flaps`` down/up cycles."""
+    for i in range(n_flaps):
+        t0 = cluster.sim.now
+        cluster.flap_nic(gid, down_at=t0 + 1e-4, up_at=t0 + down)
+        arrays = [np.ones(4096 * 8, dtype=np.float64) for _ in range(2)]
+        world.allreduce(arrays)
+        cluster.sim.run(until=cluster.sim.now + spacing)
+
+
+def test_qp_flap_history_drives_probe_pace():
+    cluster, libs, world = build_world(n_ranks=2, max_chunk_bytes=4096,
+                                       probe_interval=2e-3)
+    cfg = libs[0].config
+    qps = [qp for lib in libs if isinstance(lib, ShiftLib)
+           for qp in lib.shift_qps]
+    assert all(qp._probe_pace() == cfg.probe_interval for qp in qps)
+    _flap(cluster, world, "host0/mlx5_0", n_flaps=3, spacing=6e-3)
+    flapped = [qp for qp in qps if len(qp.flap_times) >= 2]
+    assert flapped, "repeated flaps never registered on any QP"
+    assert any(qp._probe_pace() > cfg.probe_interval for qp in flapped), (
+        "a repeatedly flapping path should be probed cautiously")
+    # masked throughout: the pacing is a performance policy, not a
+    # correctness change
+    assert all(lib.stats.errors_propagated == 0 for lib in libs
+               if isinstance(lib, ShiftLib))
+
+
+def test_probe_pace_relaxes_after_stability():
+    cluster, libs, world = build_world(n_ranks=2, max_chunk_bytes=4096,
+                                       probe_interval=2e-3)
+    cfg = libs[0].config
+    _flap(cluster, world, "host0/mlx5_0", n_flaps=2, spacing=6e-3)
+    qps = [qp for lib in libs if isinstance(lib, ShiftLib)
+           for qp in lib.shift_qps if len(qp.flap_times) >= 2]
+    assert qps
+    # after a full flap window of calm the history ages out
+    cluster.sim.run(until=cluster.sim.now + cfg.probe_flap_window + 1e-3)
+    assert all(qp._probe_pace() == cfg.probe_interval for qp in qps)
