@@ -66,6 +66,15 @@ Benchmarks
     overlapped is byte-identical to sequential); a mismatch fails the
     benchmark outright.
 
+``serving_tp``
+    Continuous-batching tensor-parallel serving throughput (tokens per
+    VIRTUAL second, deterministic) on a 2-rank 2-channel world: healthy
+    vs rail 0 killed mid-decode. Both runs' tokens must be byte-
+    identical to the single-host reference (sampling consumes fabric-
+    reconstructed logits, so corruption fails the benchmark outright,
+    like the ddp loss-identity check); the fault run quantifies the
+    degraded-throughput-not-dropped-requests contract.
+
 ``fallback_latency``
     Max virtual-time fallback latency over the sender_nic_down scenario
     in fast mode — a determinism canary: it must not drift at all.
@@ -106,6 +115,8 @@ GATED_RATIOS = {
     "quad_rail_busbw.busbw_ratio_degraded": True,
     "straggler_resteer_latency.detect_virtual_ms": False,
     "ddp_overlap_speedup.speedup": True,
+    "serving_tp.tokens_per_s": True,
+    "serving_tp.tokens_per_s_fault": True,
 }
 TOLERANCE = 0.20
 # Absolute floors (not baseline-relative), all in deterministic virtual
@@ -412,6 +423,79 @@ def bench_ddp_overlap(steps: int = 2, bucket_bytes: int = 1 << 16):
     }
 
 
+def bench_serving_tp(n_requests: int = 4, n_tokens: int = 6):
+    """Tensor-parallel serving tokens/s in VIRTUAL time (deterministic).
+
+    The campaign's continuous-batching scheduler drives a TPServeEngine
+    on a 2-rank 2-channel world; the ``fault`` run kills rail 0 half a
+    step into decode (SHIFT masks per-QP, the channel scheduler
+    resteers). Both runs must produce tokens byte-identical to the
+    single-host reference — a mismatch is corruption, not a slowdown,
+    and fails outright. tokens/s over virtual time gates on the 20%
+    rule; the fault/healthy ratio tracks the cost of masking."""
+    from repro.collectives import build_world
+    from repro.scenarios.engine import _serving_fixture
+    from repro.serving import RequestScheduler, TPServeEngine
+
+    n_slots, prefill_len, max_len = 2, 12, 32
+    model, params, local, prompts, ref = _serving_fixture(
+        0, n_requests, n_tokens, n_slots, prefill_len, max_len)
+
+    def one(kill: bool):
+        cluster, libs, world = build_world(
+            n_ranks=2, channels=2, probe_interval=5e-4,
+            max_chunk_bytes=1 << 12, strict_order=False)
+        engine = TPServeEngine(model, params, world=world,
+                               max_len=max_len, timeout=10.0, local=local)
+        sched = RequestScheduler(engine, n_slots=n_slots,
+                                 prefill_len=prefill_len)
+        for p in prompts:
+            sched.submit(p, n_tokens)
+        t0 = cluster.sim.now
+        steps = 0
+        while sched.pending:
+            sched.step()
+            steps += 1
+            if steps == 1 and kill:
+                per_step = cluster.sim.now - t0
+                for lib in libs:
+                    lib.config.probe_interval = max(per_step / 2, 1e-5)
+                cluster.schedule_fault(cluster.sim.now + per_step / 2,
+                                       "nic_down", "host0/mlx5_0")
+        elapsed = cluster.sim.now - t0
+        tokens = sum(len(r.tokens) for r in sched.requests
+                     if r.state == "done")
+        identical = ([list(r.tokens) for r in sched.requests] == ref)
+        return {
+            "tokens": tokens,
+            "virtual_ms": round(elapsed * 1e3, 6),
+            "tokens_per_virtual_s": round(tokens / elapsed, 1),
+            "tokens_identical": identical,
+            "fallbacks": sum(lib.stats.fallbacks for lib in libs),
+            "resteered": world.scheduler.resteered,
+            "reconstruction_mismatches": engine.reconstruction_mismatches,
+        }
+
+    healthy = one(kill=False)
+    fault = one(kill=True)
+    return {
+        "config": {"n_requests": n_requests, "n_tokens": n_tokens,
+                   "n_slots": n_slots,
+                   "note": "tokens over virtual time (deterministic); "
+                           "fault = rail 0 NIC killed mid-decode under "
+                           "2-channel striped traffic"},
+        "healthy": healthy,
+        "fault": fault,
+        "tokens_per_s": healthy["tokens_per_virtual_s"],
+        "tokens_per_s_fault": fault["tokens_per_virtual_s"],
+        "fault_throughput_ratio": round(
+            fault["tokens_per_virtual_s"]
+            / healthy["tokens_per_virtual_s"], 3),
+        "tokens_identical": (healthy["tokens_identical"]
+                             and fault["tokens_identical"]),
+    }
+
+
 def bench_allreduce(n_ranks: int = 2, elems: int = 1 << 16,
                     rounds: int = 12):
     import numpy as np
@@ -454,6 +538,7 @@ def run_suite(quick: bool = False) -> dict:
     quad = bench_quad_rail_busbw()
     straggler = bench_straggler_resteer()
     ddp_overlap = bench_ddp_overlap()
+    serving = bench_serving_tp()
     return {
         "schema": SCHEMA,
         "note": "before = pre-fast-path configuration (legacy per-WQE "
@@ -469,6 +554,7 @@ def run_suite(quick: bool = False) -> dict:
             "quad_rail_busbw": quad,
             "straggler_resteer_latency": straggler,
             "ddp_overlap_speedup": ddp_overlap,
+            "serving_tp": serving,
         },
     }
 
@@ -588,6 +674,15 @@ def emit(path: str, quick: bool = False,
     if dd["speedup"] < DDP_OVERLAP_MIN_RATIO:
         print(f"# PERF DDP OVERLAP FLOOR: speedup {dd['speedup']} < "
               f"required {DDP_OVERLAP_MIN_RATIO}", flush=True)
+        return 1
+    sv = b["serving_tp"]
+    print(f"# perf: serving TP {sv['tokens_per_s']:.0f} tokens/s virtual "
+          f"healthy, {sv['tokens_per_s_fault']:.0f} with a rail killed "
+          f"mid-decode ({sv['fault_throughput_ratio']:.2f}x retained, "
+          f"{sv['fault']['fallbacks']} fallbacks)", flush=True)
+    if not sv["tokens_identical"]:
+        print("# PERF SERVING TP: tokens diverged from the single-host "
+              "reference (byte-identity broken)", flush=True)
         return 1
     # invariant violations fail UNCONDITIONALLY — no baseline needed: a
     # fast datapath that breaks exactly-once/zero-copy/ordering is a

@@ -7,8 +7,9 @@ configuration standalone).
 ``--smoke`` runs a reduced deterministic subset — the fault-scenario
 campaign (pingpong workload over the full library), the concurrent-
 collective overlap smoke (overlap_allreduce + bucketed-overlapped DDP
-with >= 4 works in flight) and fig7 — and exits non-zero on any
-invariant violation: the fast CI pass.
+with >= 4 works in flight), the fault-tolerant TP serving smoke
+(request-level invariants under rail kills, both datapaths) and fig7 —
+and exits non-zero on any invariant violation: the fast CI pass.
 
 ``--bench-json PATH`` additionally runs the tracked perf suite
 (``benchmarks/perf_suite.py``), writes its JSON to PATH, and exits
@@ -117,8 +118,11 @@ def overlap_rows(fast: bool = True):
                        "link_flap_train", "rail_kill_striped",
                        "double_rail_outage")]
     if fast:
+        # flap cells enabled by anchor-only fault rebasing (the outage
+        # durations survive the rebase, so the flap actually bites)
         cells += [("ddp_bucketed", n, {"fast": fast})
-                  for n in ("baseline_clean", "sender_nic_down")]
+                  for n in ("baseline_clean", "sender_nic_down",
+                            "link_flap_train")]
     out = []
     for workload, name, kw in cells:
         r = run_scenario(SCENARIOS[name], workload=workload, **kw)
@@ -127,6 +131,31 @@ def overlap_rows(fast: bool = True):
         status = "ok" if r.ok else _violation_status(r.violations)
         out.append((f"overlap/{r.scenario}/{r.workload}", lat_us,
                     f"{status}|fb={r.fallbacks}|peak={r.peak_concurrency}|"
+                    f"events={r.event_count}"))
+    return out
+
+
+def serving_rows(fast: bool = True):
+    """Fault-tolerant TP serving smoke: the continuous-batching serving
+    workload (per-step logits/activation gathers + MoE all-to-alls,
+    request-level invariants) over the scenario subset the ISSUE-6
+    acceptance names — including the unmaskable double outage, which
+    must fail requests loudly rather than corrupt tokens. Runs on both
+    datapaths (the workload rides JcclWorld, which honours ``fast``)."""
+    from repro.scenarios import SCENARIOS, run_scenario
+
+    names = ("baseline_clean", "sender_nic_down", "nic_down_permanent",
+             "link_flap_train", "rail_kill_striped", "double_rail_outage")
+    out = []
+    for name in names:
+        r = run_scenario(SCENARIOS[name], workload="serving", fast=fast)
+        lat_us = max(r.fallback_latencies) * 1e6 if r.fallback_latencies \
+            else float("nan")
+        status = "ok" if r.ok else _violation_status(r.violations)
+        out.append((f"serving/{r.scenario}", lat_us,
+                    f"{status}|fb={r.fallbacks}|"
+                    f"req={r.requests_done}/{r.requests_total}|"
+                    f"tokmis={r.token_mismatches}|"
                     f"events={r.event_count}"))
     return out
 
@@ -192,6 +221,8 @@ def main(smoke: bool = False, bench_json: str = None,
              lambda: campaign_rows(smoke=True, fast=fast)),
             ("overlap (concurrent collectives + bucketed DDP)",
              lambda: overlap_rows(fast=fast)),
+            ("serving (fault-tolerant TP inference)",
+             lambda: serving_rows(fast=fast)),
             ("fig7 (verb overhead)", fig7_verbs_rows),
         ]
     else:

@@ -1,11 +1,25 @@
 """Atomic (+optionally async) checkpointing of parameter/optimizer pytrees.
 
-Writes are crash-safe: a temp directory is populated and atomically
-renamed, so a failure mid-checkpoint can never corrupt the latest
-restorable state (the property checkpoint-restart depends on). Supports
-the paper's §4.4 optimization: ``checkpoint promptly after fallback`` —
-the trainer calls ``save(..., reason="post-fallback")`` as soon as SHIFT
-reports a fallback, bounding progress loss under degraded throughput.
+Writes are crash-safe end to end:
+
+* **Publish** — a temp directory is populated (``state.npz``, ``meta.json``,
+  then a ``committed`` marker written LAST) and atomically renamed, so a
+  failure mid-checkpoint can never corrupt the latest restorable state.
+* **Visibility** — ``list_steps``/``restore`` only count directories that
+  carry the ``committed`` marker: a directory torn by a crash mid-write
+  or mid-delete is invisible, never half-restored.
+* **Deletion** (GC and same-step overwrite) unlinks the marker FIRST and
+  removes the tree second — a crash between the two leaves an unmarked
+  (invisible) directory, not a torn checkpoint that ``restore()`` would
+  load.
+* **Async writers are non-daemon threads**: a process that exits without
+  calling ``wait()`` still joins the writer at interpreter shutdown, so
+  ``save(async_save=True)`` + exit cannot kill the write mid-``np.savez``.
+
+Supports the paper's §4.4 optimization: ``checkpoint promptly after
+fallback`` — the trainer calls ``save(..., reason="post-fallback")`` as
+soon as SHIFT reports a fallback, bounding progress loss under degraded
+throughput.
 """
 
 from __future__ import annotations
@@ -19,6 +33,8 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+_MARKER = "committed"
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -40,26 +56,47 @@ class CheckpointStore:
         os.makedirs(root, exist_ok=True)
 
     # ------------------------------------------------------------------
+    def _remove(self, final: str) -> None:
+        """Delete a checkpoint directory crash-safely: unlink the commit
+        marker FIRST (atomic — the checkpoint becomes invisible), then
+        remove the tree. A crash anywhere in between leaves an unmarked
+        directory that ``list_steps`` ignores and a later save for the
+        same step simply clears."""
+        try:
+            os.unlink(os.path.join(final, _MARKER))
+        except FileNotFoundError:
+            pass
+        shutil.rmtree(final, ignore_errors=True)
+
     def save(self, step: int, tree, metadata: Optional[dict] = None) -> str:
         flat = _flatten(tree)  # snapshot on the caller's thread
 
         def _write():
             tmp = os.path.join(self.root, f".tmp-{step}-{os.getpid()}")
             final = os.path.join(self.root, f"step-{step:08d}")
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp, ignore_errors=True)
             os.makedirs(tmp, exist_ok=True)
             np.savez(os.path.join(tmp, "state.npz"), **flat)
             meta = {"step": step, "time": time.time(), **(metadata or {})}
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump(meta, f)
+            # the marker is the LAST byte written before publication:
+            # a directory without it is, by definition, torn
+            with open(os.path.join(tmp, _MARKER), "w") as f:
+                f.write(str(step))
             with self._lock:
                 if os.path.exists(final):
-                    shutil.rmtree(final)
+                    self._remove(final)
                 os.rename(tmp, final)  # atomic publish
                 self._gc()
 
         if self.async_save:
             self.wait()
-            t = threading.Thread(target=_write, daemon=True)
+            # non-daemon: the interpreter joins this thread at exit, so a
+            # caller that never calls wait() still gets a complete write
+            t = threading.Thread(target=_write, daemon=False,
+                                 name=f"ckpt-save-{step}")
             t.start()
             self._pending = t
         else:
@@ -74,18 +111,22 @@ class CheckpointStore:
     def _gc(self) -> None:
         steps = self.list_steps()
         for s in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.root, f"step-{s:08d}"),
-                          ignore_errors=True)
+            self._remove(os.path.join(self.root, f"step-{s:08d}"))
 
     # ------------------------------------------------------------------
     def list_steps(self) -> List[int]:
+        """Steps with a COMMITTED (marker-carrying) checkpoint directory;
+        torn directories from a crashed write or delete are excluded."""
         out = []
         for name in os.listdir(self.root):
-            if name.startswith("step-"):
-                try:
-                    out.append(int(name.split("-")[1]))
-                except ValueError:
-                    pass
+            if not name.startswith("step-"):
+                continue
+            if not os.path.exists(os.path.join(self.root, name, _MARKER)):
+                continue
+            try:
+                out.append(int(name.split("-")[1]))
+            except ValueError:
+                pass
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
@@ -100,6 +141,9 @@ class CheckpointStore:
         if step is None:
             raise FileNotFoundError("no checkpoints")
         d = os.path.join(self.root, f"step-{step:08d}")
+        if not os.path.exists(os.path.join(d, _MARKER)):
+            raise FileNotFoundError(
+                f"checkpoint step {step} is uncommitted (torn write?)")
         data = np.load(os.path.join(d, "state.npz"))
         with open(os.path.join(d, "meta.json")) as f:
             meta = json.load(f)

@@ -363,6 +363,38 @@ class JcclWorld:
         coll = _RingAllGather(self, full, [s.size for s in shards])
         return self._launch(coll, lambda: full)
 
+    def shard_bounds(self, total: int) -> List[Tuple[int, int]]:
+        """Per-rank contiguous slice bounds of a ``total``-element vector
+        (balanced: the first ``total % n_ranks`` ranks get one extra
+        element). The serving engine's tensor-parallel contract derives
+        every activation/logits shard from these bounds, so all ranks
+        agree on who owns which slice without any metadata exchange."""
+        base, rem = divmod(total, self.n_ranks)
+        bounds = []
+        off = 0
+        for r in range(self.n_ranks):
+            size = base + (1 if r < rem else 0)
+            bounds.append((off, off + size))
+            off += size
+        return bounds
+
+    def gather_replicated_async(self, array: np.ndarray) -> Work:
+        """Serving-shaped all-gather: every rank holds the same
+        replicated 1-D ``array`` (e.g. a tensor-parallel layer's
+        activations or logits recomputed on each rank); rank r
+        contributes ITS slice (``shard_bounds``) and the work's result
+        is each rank's fabric-reconstructed copy of the full vector.
+
+        The reconstruction is pure data movement — no reduction — so on
+        a healthy or SHIFT-masked fabric it is byte-identical to the
+        input; the serving engine samples from the reconstructed bytes,
+        making any corruption observable as a wrong token."""
+        if array.ndim != 1:
+            raise ValueError("gather_replicated_async takes a 1-D array")
+        shards = [array[lo:hi].copy()
+                  for lo, hi in self.shard_bounds(array.size)]
+        return self.all_gather_async(shards)
+
     def broadcast_async(self, array: np.ndarray, root: int = 0) -> Work:
         """Launch a pipelined chain broadcast from ``root``; the work's
         result is one output per rank (the root's is a read-only alias)."""

@@ -210,9 +210,11 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
                      scale: Optional[float] = None) -> jnp.ndarray:
     """One-token attention over a (B, S, KV, hd) cache.
 
-    q: (B, H, hd); cache_len: scalar count of valid cache entries. The
-    contraction runs in (B, S, KV, G) layout so the cache's sequence axis
-    can stay sharded (sequence-parallel KV)."""
+    q: (B, H, hd); cache_len: count of valid cache entries — a scalar
+    (uniform batch) or a (B,) vector (ragged/continuous batching: each
+    sequence masks its own prefix). The contraction runs in
+    (B, S, KV, G) layout so the cache's sequence axis can stay sharded
+    (sequence-parallel KV)."""
     B, H, hd = q.shape
     S, KV = k_cache.shape[1], k_cache.shape[2]
     G = H // KV
@@ -220,6 +222,8 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
     qg = (q * scale).reshape(B, KV, G, hd)
     s = jnp.einsum("bcgd,bscd->bcgs", qg, k_cache,
                    preferred_element_type=jnp.float32)
+    if cache_len.ndim == 1:
+        cache_len = cache_len.reshape(B, 1, 1, 1)
     valid = jnp.arange(S)[None, None, None, :] < cache_len
     s = jnp.where(valid, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
@@ -273,20 +277,36 @@ def attention_sublayer(x: jnp.ndarray, p: dict, cfg: ModelConfig,
                                       q_block=q_block)
         new_kv = (k, v)
     else:
-        # decode: append the new K/V then attend over the whole cache
+        # decode: append the new K/V then attend over the whole cache.
+        # A scalar cache["len"] appends at one shared position (uniform
+        # batch — the historical path); a (B,) vector appends each row at
+        # its OWN length (ragged prompts / continuous batching), so a
+        # short sequence overwrites its pad slots and its mask never
+        # admits them.
         idx = cache["len"]
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
-        if cfg.use_kernels:
-            from repro.kernels.decode_attention.ops import decode_attention \
-                as decode_kernel
-            out = decode_kernel(q[:, 0],               # (B,H,hd)
-                                jnp.swapaxes(k_cache, 1, 2),  # (B,KV,S,hd)
-                                jnp.swapaxes(v_cache, 1, 2), idx + 1)
-        else:
+        if idx.ndim == 1:
+            def _row_update(c, n, i):
+                return jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
+            k_cache = jax.vmap(_row_update)(
+                cache["k"], k.astype(cache["k"].dtype), idx)
+            v_cache = jax.vmap(_row_update)(
+                cache["v"], v.astype(cache["v"].dtype), idx)
+            # per-row masking needs the pure-jax core (the pallas decode
+            # kernel takes a scalar length)
             out = decode_attention(q[:, 0], k_cache, v_cache, idx + 1)
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+            if cfg.use_kernels:
+                from repro.kernels.decode_attention.ops import \
+                    decode_attention as decode_kernel
+                out = decode_kernel(q[:, 0],               # (B,H,hd)
+                                    jnp.swapaxes(k_cache, 1, 2),  # (B,KV,S,hd)
+                                    jnp.swapaxes(v_cache, 1, 2), idx + 1)
+            else:
+                out = decode_attention(q[:, 0], k_cache, v_cache, idx + 1)
         out = out[:, None]
         new_kv = (k_cache, v_cache)
     o = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))

@@ -349,11 +349,25 @@ class LM:
         raise ValueError(cfg.family)
 
     def decode_step(self, params, cache, tokens):
-        """tokens: (B,1) -> (logits (B,1,V), new cache). Caches donated."""
+        """tokens: (B,1) -> (logits (B,1,V), new cache). Caches donated.
+
+        ``cache["len"]`` may be a scalar (uniform batch) or a (B,) vector
+        (ragged prompts / continuous batching): with a vector, each row
+        appends its K/V at — and takes its RoPE position from — its own
+        length (supported for the dense/audio/moe families)."""
         cfg = self.cfg
         B = tokens.shape[0]
         x = jnp.take(params["embed"], tokens, axis=0).astype(cfg.dtype)
-        pos = jnp.broadcast_to(cache["len"][None, None], (B, 1)).astype(jnp.int32)
+        ln = cache["len"]
+        if ln.ndim == 1:
+            if cfg.family not in ("dense", "audio", "moe"):
+                raise ValueError(
+                    f"per-sequence cache lengths are not supported for "
+                    f"family {cfg.family!r} (recurrent/grouped state has "
+                    f"no per-row append position)")
+            pos = ln[:, None].astype(jnp.int32)
+        else:
+            pos = jnp.broadcast_to(ln[None, None], (B, 1)).astype(jnp.int32)
 
         if cfg.family in ("dense", "audio", "moe"):
             def block(x, xs):
@@ -453,9 +467,16 @@ class LM:
         logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
         return logits, new_cache
 
-    def prefill(self, params, tokens, img_embeds=None, max_len=None):
+    def prefill(self, params, tokens, img_embeds=None, max_len=None,
+                last_pos=None):
         """Run the full prompt and build the decode cache (a forward pass
-        whose layer scan also emits per-layer K/V / recurrent end-states)."""
+        whose layer scan also emits per-layer K/V / recurrent end-states).
+
+        ``last_pos`` (optional, (B,) int32) names each sequence's TRUE
+        last prompt position: the returned logits are gathered there
+        instead of at column S-1, so right-padded ragged batches sample
+        their next token from the real prompt end, not a pad slot. None
+        keeps the historical uniform-batch behavior (column S-1)."""
         cfg = self.cfg
         B, S = tokens.shape
         max_len = max_len or S + 1
@@ -560,8 +581,16 @@ class LM:
         head = params.get("lm_head")
         if head is None:
             head = params["embed"].T
-        logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], head.astype(x.dtype))
-        cache["len"] = jnp.asarray(S, jnp.int32)
+        if last_pos is None:
+            sel = x[:, -1:]
+            cache["len"] = jnp.asarray(S, jnp.int32)
+        else:
+            sel = jnp.take_along_axis(
+                x, last_pos.astype(jnp.int32)[:, None, None], axis=1)
+            # ragged batches decode with per-sequence lengths: each row's
+            # next token appends right after its true prompt end
+            cache["len"] = last_pos.astype(jnp.int32) + 1
+        logits = jnp.einsum("bsd,dv->bsv", sel, head.astype(x.dtype))
         return logits, cache
 
 

@@ -25,6 +25,12 @@ Workloads, in increasing weight:
 * ``ddp_bucketed`` — the same trainer with ``bucket_bytes`` forced small
   enough that every step issues >= 4 concurrent gradient-bucket works
   (the overlapped-DDP smoke; a run that never overlaps is a violation).
+* ``serving`` — continuous-batching tensor-parallel inference
+  (``repro.serving.tp`` + ``repro.serving.scheduler``) on the fabric:
+  per-step logits/activation all-gathers and MoE all-to-alls under the
+  fault timeline, with request-level invariants (no dropped requests,
+  no duplicated/truncated/corrupted tokens — byte-exact against the
+  single-host reference run).
 
 Every run returns a :class:`RunResult` whose :meth:`RunResult.fingerprint`
 is a pure function of the virtual-clock execution — same seed implies an
@@ -91,6 +97,14 @@ class RunResult:
     # completed run — a leak means a chunk was assigned but its notify
     # neither dispatched nor was reclaimed)
     leaked_tags: int = 0
+    # serving workload request-level accounting: a maskable fault must
+    # drop NO requests and corrupt NO tokens (token_mismatches counts
+    # completed requests whose token stream diverged from the
+    # single-host reference — wrong, duplicated or truncated tokens)
+    requests_total: int = 0
+    requests_done: int = 0
+    requests_failed: int = 0
+    token_mismatches: int = 0
 
     @property
     def ok(self) -> bool:
@@ -109,6 +123,8 @@ class RunResult:
             tuple(round(l, 9) for l in self.fallback_latencies),
             self.resteered_chunks,
             self.peak_concurrency,
+            (self.requests_total, self.requests_done,
+             self.requests_failed, self.token_mismatches),
             tuple((c["chunks_assigned"], c["chunks_delivered"])
                   for c in self.channel_stats)
             if self.channel_stats is not None else None,
@@ -320,6 +336,32 @@ class _PingPongPump:
 
     def start(self) -> None:
         self._tick()
+
+
+def rebase_fault_times(actions, scale: float):
+    """Rebase authored fault times onto a measured span by scaling the
+    ANCHOR (earliest action time) only, preserving every inter-action
+    delta verbatim.
+
+    Uniform scaling (``at * scale``) compresses flap-train outages: with
+    a short measured span the authored 6ms down-time shrinks below the
+    RC retry budget (retry_cnt x ack_timeout ~ 3.2ms) and the transport
+    rides the flap out, so the scenario's ``min_fallbacks`` expectation
+    becomes unmeetable — the old documented reason ddp workloads had to
+    avoid flap scenarios. Anchor-only rebasing moves the timeline's
+    START into the measured window but keeps each flap's outage duration
+    and inter-flap gap exactly as authored; actions whose preserved
+    offsets fall past the workload's end simply never fire.
+
+    Returns ``(new_time, kind, target, arg)`` tuples ready for
+    ``Cluster.schedule_fault``.
+    """
+    acts = list(actions)
+    if not acts:
+        return []
+    anchor = min(a.at for a in acts)
+    return [(anchor * scale + (a.at - anchor), a.kind, a.target, a.arg)
+            for a in acts]
 
 
 def _traffic_horizon(scenario: Scenario, probe_interval: float) -> float:
@@ -540,9 +582,14 @@ def run_ddp(scenario: Scenario, seed: int = 0, steps: int = 6,
 
     def on_step(step: int, t: float, loss: float) -> None:
         # Rebase the scenario timeline onto the measured collective time:
-        # after step 1 we know the per-step virtual cost, so action times
-        # (authored against `scenario.duration`) are scaled to land inside
-        # the remaining steps — mid-all-reduce, not between steps.
+        # after step 1 we know the per-step virtual cost, so the
+        # timeline's ANCHOR (authored against `scenario.duration`) is
+        # scaled to land inside the remaining steps — mid-all-reduce,
+        # not between steps — while every authored outage duration and
+        # inter-action gap is preserved verbatim (see
+        # ``rebase_fault_times``: uniform scaling would compress
+        # flap-train outages below the RC retry budget and no fallback
+        # would ever fire).
         if step == 1 and not scheduled[0]:
             scheduled[0] = True
             per_step = cluster.sim.now - t0
@@ -550,9 +597,10 @@ def run_ddp(scenario: Scenario, seed: int = 0, steps: int = 6,
             scale = span / scenario.duration
             for lib in libs:
                 lib.config.probe_interval = max(per_step / 4, 1e-5)
-            for act in scenario.actions:
-                cluster.schedule_fault(cluster.sim.now + act.at * scale,
-                                       act.kind, act.target, act.arg)
+            for at, kind, target, arg in rebase_fault_times(
+                    scenario.actions, scale):
+                cluster.schedule_fault(cluster.sim.now + at, kind, target,
+                                       arg)
         result.rounds = step
 
     try:
@@ -565,6 +613,164 @@ def run_ddp(scenario: Scenario, seed: int = 0, steps: int = 6,
         result.aborted = True
     finally:
         shutil.rmtree(ckpt_dir, ignore_errors=True)
+    result.event_count = cluster.sim._executed
+    result.sim_elapsed = cluster.sim.now - t0
+    _from_snapshot(world.stats_snapshot(), result)
+    return result
+
+
+# ---------------------------------------------------------------------------
+# tensor-parallel serving workload
+# ---------------------------------------------------------------------------
+
+
+# Build-once serving fixture (model, params, shared jitted engine,
+# prompts, single-host reference generations). Campaign cells are
+# wall-time dominated by XLA compiles, so every cell shares one
+# ServeEngine's jitted kernels and one reference run per parameter set.
+_SERVING_FIXTURE: Dict[Tuple, Tuple] = {}
+
+
+def _serving_fixture(seed: int, n_requests: int, n_tokens: int,
+                     n_slots: int, prefill_len: int, max_len: int):
+    """Smoke MoE serving fixture: the llama4-maverick smoke config, a
+    ragged prompt set, and the single-host reference run — the SAME
+    scheduler/engine classes with ``world=None``, so the reference
+    executes the identical admission/decode schedule and the comparison
+    is byte-level, not approximate."""
+    import jax
+
+    from repro.configs import llama4_maverick
+    from repro.models import build_model
+    from repro.serving import RequestScheduler, ServeEngine, TPServeEngine
+
+    key = (seed, n_requests, n_tokens, n_slots, prefill_len, max_len)
+    hit = _SERVING_FIXTURE.get(key)
+    if hit is not None:
+        return hit
+    cfg = llama4_maverick.smoke_config()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    rng = np.random.RandomState(seed)
+    prompts = [rng.randint(1, cfg.vocab,
+                           size=int(rng.randint(3, prefill_len + 1)))
+               .astype(np.int32) for _ in range(n_requests)]
+    local = ServeEngine(model, params, max_len=max_len)
+    ref_engine = TPServeEngine(model, params, world=None, max_len=max_len,
+                               local=local)
+    sched = RequestScheduler(ref_engine, n_slots=n_slots,
+                             prefill_len=prefill_len)
+    for p in prompts:
+        sched.submit(p, n_tokens)
+    sched.run()
+    ref = [list(r.tokens) for r in sched.requests]
+    fx = (model, params, local, prompts, ref)
+    _SERVING_FIXTURE[key] = fx
+    return fx
+
+
+def run_serving(scenario: Scenario, seed: int = 0, n_requests: int = 4,
+                n_tokens: int = 6, n_slots: int = 2, prefill_len: int = 12,
+                max_len: int = 32, n_ranks: int = 2, fast: bool = True,
+                channels: int = 1, max_chunk_bytes: int = 1 << 12,
+                max_steps: int = 4000) -> RunResult:
+    """Fault-tolerant TP serving under the scenario's fault timeline.
+
+    A continuous-batching ``RequestScheduler`` drives a sharded
+    ``TPServeEngine`` over a JcclWorld while the scenario's faults fire.
+    Like ``run_ddp``, the timeline is rebased after the first scheduler
+    tick (anchor scaled onto the measured per-step time, authored
+    outage durations preserved — ``rebase_fault_times``) so the first
+    fault lands mid-decode, with in-flight per-layer gathers. Filler
+    request waves (the same prompts resubmitted) keep decode traffic
+    flowing across the fault window, so multi-action scenarios (flap
+    trains, the unmaskable second rail kill) hit live collectives.
+
+    Request-level contract, checked by the invariants: a maskable fault
+    drops no requests and corrupts no tokens — the first wave's tokens
+    must be byte-identical to the single-host reference (sampling runs
+    on fabric-reconstructed logits, so corruption IS observable as a
+    wrong token). Filler waves must complete but are not token-compared:
+    MoE expert-capacity contention couples rows within a batch, so only
+    the wave that replays the reference's exact schedule is
+    byte-comparable.
+    """
+    from repro.collectives import CollectiveError, build_world
+    from repro.serving import RequestScheduler, TPServeEngine
+
+    model, params, local, prompts, ref = _serving_fixture(
+        seed, n_requests, n_tokens, n_slots, prefill_len, max_len)
+    result = RunResult(scenario=scenario.name, workload="serving",
+                       seed=seed, min_concurrency=2)
+    cluster, libs, world = build_world(
+        n_ranks=n_ranks, probe_interval=5e-4,
+        max_chunk_bytes=max_chunk_bytes, strict_order=False, fast=fast,
+        channels=channels)
+    _observe(cluster, libs, result)
+    engine = TPServeEngine(model, params, world=world, max_len=max_len,
+                           timeout=scenario.duration + 1.0, local=local)
+    sched = RequestScheduler(engine, n_slots=n_slots,
+                             prefill_len=prefill_len)
+    for p in prompts:
+        sched.submit(p, n_tokens)
+    t0 = cluster.sim.now
+    horizon = None
+    steps = 0
+    # expected remaining first-wave ticks: admission waves x tokens
+    est_steps = max(1, -(-n_requests // n_slots) * n_tokens)
+    try:
+        while steps < max_steps:
+            if (horizon is not None and cluster.sim.now >= horizon
+                    and not sched.pending):
+                break
+            if not sched.pending:
+                for p in prompts:       # filler wave: keep faults biting
+                    sched.submit(p, n_tokens)
+            sched.step()
+            steps += 1
+            if steps == 1:
+                # Rebase the timeline onto the measured tick time (see
+                # run_ddp); cap the traffic horizon at anchor + 10ms —
+                # enough virtual time for the RC retry budget (~3.2ms),
+                # a staggered second fault (+4ms) and probe cycles, but
+                # not the authored 30ms recovery gaps (serving, like
+                # ddp, is exempt from the recovery invariant).
+                per_step = max(cluster.sim.now - t0, 1e-7)
+                scale = per_step * est_steps / scenario.duration
+                probe = max(per_step / 2, 1e-5)
+                for lib in libs:
+                    lib.config.probe_interval = probe
+                rebased = rebase_fault_times(scenario.actions, scale)
+                for at, kind, target, arg in rebased:
+                    cluster.schedule_fault(cluster.sim.now + at, kind,
+                                           target, arg)
+                anchor = min((at for at, *_ in rebased), default=0.0)
+                last = max((at for at, *_ in rebased), default=0.0)
+                horizon = (cluster.sim.now + min(last, anchor + 10e-3)
+                           + 3 * probe)
+    except CollectiveError:
+        sched.fail_outstanding()
+        result.aborted = True
+    # let scheduled fault actions + probes settle inside the window
+    cluster.sim.run(until=t0 + scenario.duration + 0.05)
+    result.requests_total = len(sched.requests)
+    result.requests_done = sum(r.state == "done" for r in sched.requests)
+    result.requests_failed = sum(r.state == "failed"
+                                 for r in sched.requests)
+    mismatches = 0
+    for r in sched.requests:
+        if r.state != "done":
+            continue
+        if len(r.tokens) != r.n_tokens:
+            mismatches += 1          # truncated or duplicated tokens
+        elif r.rid < len(ref) and list(r.tokens) != ref[r.rid]:
+            mismatches += 1          # diverged from single-host reference
+    result.token_mismatches = mismatches
+    result.payload_mismatches = engine.reconstruction_mismatches
+    result.rounds = sched.decode_steps
+    result.completed = (not result.aborted and result.requests_total > 0
+                        and result.requests_failed == 0
+                        and result.requests_done == result.requests_total)
     result.event_count = cluster.sim._executed
     result.sim_elapsed = cluster.sim.now - t0
     _from_snapshot(world.stats_snapshot(), result)
@@ -598,6 +804,7 @@ WORKLOADS: Dict[str, Callable[..., RunResult]] = {
     "all_to_all": run_alltoall,
     "ddp": run_ddp,
     "ddp_bucketed": run_ddp_bucketed,
+    "serving": run_serving,
 }
 
 

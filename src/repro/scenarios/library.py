@@ -164,7 +164,8 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
         min_fallbacks=1, expect_recovery=False, min_resteers=1,
         tags=("rail", "multirail", "permanent"),
         workload_hints={"allreduce": {"channels": 2},
-                        "broadcast": {"channels": 2}},
+                        "broadcast": {"channels": 2},
+                        "serving": {"channels": 2}},
     ),
     Scenario(
         name="staggered_dual_rail_faults",

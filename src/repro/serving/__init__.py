@@ -1,1 +1,3 @@
 from .engine import ServeEngine  # noqa: F401
+from .scheduler import Request, RequestScheduler  # noqa: F401
+from .tp import TPServeEngine  # noqa: F401

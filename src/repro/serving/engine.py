@@ -12,30 +12,68 @@ from repro.models import LM
 
 
 class ServeEngine:
+    """Single-host batched generation (the TP engine's local compute and
+    byte-identity reference — see ``repro.serving.tp``)."""
+
     def __init__(self, model: LM, params, max_len: int = 256):
         self.model = model
         self.params = params
         self.max_len = max_len
         self._prefill = jax.jit(
+            lambda p, t, lp: model.prefill(p, t, max_len=max_len,
+                                           last_pos=lp),
+            static_argnums=())
+        self._prefill_flat = jax.jit(
             lambda p, t: model.prefill(p, t, max_len=max_len))
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
 
+    def _sample(self, logits, greedy: bool, key):
+        """One sampling step from (B,1,V) logits; returns ((B,) tokens,
+        next key). Greedy ignores the key (argmax)."""
+        if greedy:
+            return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), key
+        key, sub = jax.random.split(key)
+        return jax.random.categorical(sub, logits[:, -1]).astype(jnp.int32), \
+            key
+
     def generate(self, prompts: np.ndarray, n_tokens: int,
-                 greedy: bool = True, seed: int = 0) -> np.ndarray:
-        """prompts: (B, S) int32 -> (B, S + n_tokens) generations."""
+                 greedy: bool = True, seed: int = 0,
+                 prompt_lens: Optional[np.ndarray] = None) -> np.ndarray:
+        """prompts: (B, S) int32 -> (B, S + n_tokens) generations.
+
+        ``prompt_lens`` (optional, (B,) ints) marks right-padded ragged
+        prompts: each sequence's first token is sampled from the logits
+        at its TRUE last prompt position (not the pad at column S-1) and
+        decode proceeds with per-sequence cache lengths, so generations
+        match the unpadded per-sequence runs exactly. None keeps the
+        uniform-batch behavior (every prompt is exactly S tokens).
+        """
         B, S = prompts.shape
-        assert S + n_tokens <= self.max_len
-        logits, cache = self._prefill(self.params, jnp.asarray(prompts))
+        if S + n_tokens > self.max_len:
+            raise ValueError(
+                f"prompt ({S}) + generation ({n_tokens}) tokens exceed "
+                f"max_len={self.max_len}")
+        if prompt_lens is None:
+            logits, cache = self._prefill_flat(self.params,
+                                               jnp.asarray(prompts))
+        else:
+            prompt_lens = np.asarray(prompt_lens, dtype=np.int32)
+            if prompt_lens.shape != (B,):
+                raise ValueError(f"prompt_lens shape {prompt_lens.shape} "
+                                 f"!= ({B},)")
+            if (prompt_lens < 1).any() or (prompt_lens > S).any():
+                raise ValueError("prompt_lens must be in [1, S]")
+            if self.model.cfg.family not in ("dense", "audio", "moe"):
+                raise ValueError(
+                    f"ragged prompts are not supported for family "
+                    f"{self.model.cfg.family!r} (recurrent state cannot "
+                    f"mask pad positions)")
+            logits, cache = self._prefill(self.params, jnp.asarray(prompts),
+                                          jnp.asarray(prompt_lens - 1))
         out = [np.asarray(prompts)]
         key = jax.random.PRNGKey(seed)
-        nxt = None
         for i in range(n_tokens):
-            if greedy:
-                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            else:
-                key, sub = jax.random.split(key)
-                nxt = jax.random.categorical(sub, logits[:, -1]).astype(
-                    jnp.int32)
+            nxt, key = self._sample(logits, greedy, key)
             out.append(np.asarray(nxt)[:, None])
             logits, cache = self._decode(self.params, cache, nxt[:, None])
         return np.concatenate(out, axis=1)

@@ -1,0 +1,109 @@
+"""Crash-window regression tests for the checkpoint store.
+
+The store's contract: ``restore()`` can NEVER observe a torn checkpoint
+— not after a process exits without ``wait()``-ing an async save, not
+after a crash mid-write, not after a crash mid-GC-delete. Every step
+``list_steps`` reports must restore cleanly.
+"""
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+sys.path.insert(0, SRC)
+
+from repro.checkpoint.store import CheckpointStore  # noqa: E402
+
+
+def _tree(val: float):
+    return {"w": np.full((64, 64), val, dtype=np.float32),
+            "b": np.full((64,), val * 2, dtype=np.float32)}
+
+
+def _run_child(code: str, tmp_path) -> None:
+    env = dict(os.environ, PYTHONPATH=SRC)
+    subprocess.run([sys.executable, "-c", code], check=True, env=env,
+                   cwd=str(tmp_path), timeout=120)
+
+
+CHILD_PRELUDE = """
+import numpy as np
+from repro.checkpoint.store import CheckpointStore
+store = CheckpointStore({root!r}, keep=2, async_save=True)
+tree = {{"w": np.full((64, 64), {val}, dtype=np.float32),
+         "b": np.full((64,), {val} * 2, dtype=np.float32)}}
+"""
+
+
+def test_async_save_exit_without_wait(tmp_path):
+    """A process that async-saves and exits WITHOUT wait() must still
+    publish a complete, restorable checkpoint (non-daemon writer joins
+    at interpreter shutdown)."""
+    root = str(tmp_path / "ckpt")
+    _run_child(CHILD_PRELUDE.format(root=root, val=3.0)
+               + "store.save(7, tree)\n", tmp_path)
+    store = CheckpointStore(root, keep=2)
+    assert store.list_steps() == [7]
+    restored, meta = store.restore(_tree(0.0))
+    assert meta["step"] == 7
+    np.testing.assert_array_equal(restored["w"], _tree(3.0)["w"])
+
+
+def test_async_save_hard_crash_leaves_no_torn_state(tmp_path):
+    """``os._exit`` right after an async save kills the writer thread at
+    an arbitrary point. Whatever survives, every step ``list_steps``
+    reports must restore cleanly — a torn directory must be invisible."""
+    root = str(tmp_path / "ckpt")
+    code = (CHILD_PRELUDE.format(root=root, val=5.0)
+            + "store.save(1, tree)\nstore.wait()\n"     # a committed base
+            + "store.save(2, tree)\n"                    # in-flight at crash
+            + "import os; os._exit(0)\n")
+    env = dict(os.environ, PYTHONPATH=SRC)
+    subprocess.run([sys.executable, "-c", code], env=env,
+                   cwd=str(tmp_path), timeout=120)
+    store = CheckpointStore(root, keep=2)
+    steps = store.list_steps()
+    assert 1 in steps  # the committed checkpoint survived the crash
+    for s in steps:    # and NOTHING visible is torn
+        restored, meta = store.restore(_tree(0.0), step=s)
+        assert meta["step"] == s
+        np.testing.assert_array_equal(restored["w"], _tree(5.0)["w"])
+
+
+def test_torn_directory_is_invisible(tmp_path):
+    """A step directory without the commit marker (crashed mid-write or
+    mid-delete) is excluded from list_steps/latest_step and restore."""
+    root = str(tmp_path / "ckpt")
+    store = CheckpointStore(root, keep=3)
+    store.save(10, _tree(1.0))
+    torn = os.path.join(root, "step-00000099")
+    os.makedirs(torn)
+    with open(os.path.join(torn, "state.npz"), "wb") as f:
+        f.write(b"\x00garbage")  # no marker: never fully written
+    assert store.list_steps() == [10]
+    assert store.latest_step() == 10
+    restored, meta = store.restore(_tree(0.0))
+    assert meta["step"] == 10
+    with pytest.raises(FileNotFoundError):
+        store.restore(_tree(0.0), step=99)
+
+
+def test_same_step_overwrite_and_gc_stay_committed(tmp_path):
+    """Same-step overwrite and GC both go through marker-first deletion;
+    the surviving set must be exactly the keep-window, all committed."""
+    root = str(tmp_path / "ckpt")
+    store = CheckpointStore(root, keep=2, async_save=True)
+    for step, val in [(10, 1.0), (10, 1.5), (20, 2.0), (30, 3.0)]:
+        store.save(step, _tree(val))
+    store.wait()
+    assert store.list_steps() == [20, 30]
+    restored, meta = store.restore(_tree(0.0), step=20)
+    assert meta["step"] == 20
+    np.testing.assert_array_equal(restored["w"], _tree(2.0)["w"])
+    # no stray tmp dirs left behind
+    assert not [n for n in os.listdir(root) if n.startswith(".tmp-")]

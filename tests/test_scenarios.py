@@ -144,6 +144,42 @@ def test_scenario_ddp_masks_failure_and_finishes(tmp_path):
     assert r.fallbacks >= 1
 
 
+def test_rebase_preserves_outage_durations_and_gaps():
+    """Anchor-only rebasing: the timeline START scales, each flap's
+    authored 6ms outage and 9ms period survive verbatim (uniform
+    scaling at scale=0.05 would shrink the outage to 0.3ms — under the
+    ~3.2ms RC retry budget, so the fault would never bite)."""
+    from repro.scenarios.engine import rebase_fault_times
+
+    acts = SCENARIOS["link_flap_train"].actions
+    scale = 0.05
+    rebased = rebase_fault_times(acts, scale)
+    by_time = sorted(rebased)
+    # anchor (first down) moved to anchor*scale
+    assert by_time[0][0] == pytest.approx(2e-3 * scale)
+    # every inter-action delta is exactly as authored
+    orig = sorted(a.at for a in acts)
+    new = [t for t, *_ in by_time]
+    for i in range(1, len(orig)):
+        assert new[i] - new[i - 1] == pytest.approx(orig[i] - orig[i - 1])
+    # in particular the first down->up outage is still the authored 6ms
+    downs = [t for t, kind, *_ in by_time if kind == "link_down"]
+    ups = [t for t, kind, *_ in by_time if kind == "link_up"]
+    assert ups[0] - downs[0] == pytest.approx(6e-3)
+    assert rebase_fault_times((), 0.5) == []
+
+
+@pytest.mark.parametrize("workload", ["ddp", "ddp_bucketed"])
+def test_scenario_ddp_flap_train_fault_bites(workload):
+    """The previously-forbidden ddp x flap-train cells: anchor-only
+    rebasing keeps the outage above the RC retry budget, so the flap
+    forces a real fallback and the run still completes masked."""
+    r = run_scenario(SCENARIOS["link_flap_train"], workload=workload)
+    assert r.ok, r.violations
+    assert r.completed and not r.aborted
+    assert r.fallbacks >= 1
+
+
 # ---------------------------------------------------------------------------
 # campaign runner
 # ---------------------------------------------------------------------------
