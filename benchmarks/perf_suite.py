@@ -75,6 +75,17 @@ Benchmarks
     like the ddp loss-identity check); the fault run quantifies the
     degraded-throughput-not-dropped-requests contract.
 
+``latency_slo``
+    Tail-latency SLO scheduling (DESIGN.md §10), virtual time: a
+    latency-critical gather's p99 completion latency solo vs under
+    mixed load (bulk gradient buckets + a background checkpoint
+    stream), the bulk class's goodput retention vs a pure-FIFO
+    (``classful=False``) baseline, and the degraded-rail per-chunk
+    latency skew with chunk-size adaptation on vs off. Gated three
+    ways: mixed p99 <= 2x solo p99, bulk retention >= 0.9x FIFO, and
+    adapted skew strictly below fixed skew — all absolute floors plus
+    the 20% rule.
+
 ``fallback_latency``
     Max virtual-time fallback latency over the sender_nic_down scenario
     in fast mode — a determinism canary: it must not drift at all.
@@ -117,6 +128,9 @@ GATED_RATIOS = {
     "ddp_overlap_speedup.speedup": True,
     "serving_tp.tokens_per_s": True,
     "serving_tp.tokens_per_s_fault": True,
+    "latency_slo.p99_ratio": False,
+    "latency_slo.bulk_retention": True,
+    "latency_slo.skew_ratio_adapted": False,
 }
 TOLERANCE = 0.20
 # Absolute floors (not baseline-relative), all in deterministic virtual
@@ -131,6 +145,15 @@ DEGRADED_MIN_RATIO = 1.7
 # bucketed-overlapped DDP must beat the sequential-bucketed baseline by
 # this factor on virtual comm time (the ISSUE-5 acceptance floor)
 DDP_OVERLAP_MIN_RATIO = 1.2
+# latency-class SLO floors (virtual, deterministic): under mixed load
+# the critical class's p99 completion latency must stay within 2x its
+# solo p99, bulk must retain >= 0.9x of its FIFO (no-priority) goodput,
+# and per-rail chunk-size adaptation must strictly reduce the
+# degraded-rail latency skew — misses mean the classful dispatch queues
+# or the size adaptation stopped working, a correctness bug in the
+# scheduler rather than a perf regression.
+SLO_MAX_P99_RATIO = 2.0
+SLO_MIN_BULK_RETENTION = 0.9
 
 
 def bench_fig5_msg_rate(msg_size: int = 1 << 16, duration: float = 2.0):
@@ -496,6 +519,153 @@ def bench_serving_tp(n_requests: int = 4, n_tokens: int = 6):
     }
 
 
+def bench_latency_slo(rounds: int = 40, elems: int = 1 << 14,
+                      buckets: int = 3, crit_elems: int = 256):
+    """Tail-latency SLO scheduling (DESIGN.md §10), all VIRTUAL time.
+
+    Four deterministic sub-runs on 2-rank 2-channel worlds:
+
+    * ``solo`` — a small latency-critical gather per round, nothing
+      else: the class's intrinsic p99 completion latency.
+    * ``mixed`` — every round issues ``buckets`` bulk gradient-bucket
+      allreduces and THEN the critical gather (plus a background
+      broadcast every 4 rounds, drained at the end): the gather only
+      stays near its solo p99 if the classful dispatch queues reorder
+      it past the queued bulk backlog.
+    * ``mixed_fifo`` — identical traffic with ``classful=False`` (pure
+      FIFO): the no-priority baseline for both the critical p99 and the
+      bulk goodput.
+    * ``skew`` — rail 0's bandwidth degraded to 0.05x, a chunked
+      broadcast stream, with per-rail chunk-size adaptation on vs off:
+      the per-rail completion-latency EWMA ratio (degraded/healthy)
+      must shrink when adaptation shrinks the slow rail's chunks.
+
+    The solo/mixed worlds run ``src_slots=1``: the simulated wire is
+    non-preemptive, so a chunk already posted can never be overtaken —
+    bounding the in-flight window to one chunk bounds priority
+    inversion to a single chunk's service time (the fabric-QoS analogue
+    of shallow TX queues). Classful and FIFO runs share the
+    configuration, so the comparison isolates the scheduler.
+
+    Gates: ``p99_ratio`` (mixed/solo critical p99) <= 2.0 absolute and
+    20%-ruled; ``bulk_retention`` (classful/FIFO bulk goodput) >= 0.9
+    absolute and 20%-ruled; ``skew_ratio_adapted`` < ``skew_ratio_fixed``
+    absolute and 20%-ruled. Per-class p50/p99 histograms are emitted
+    for every sub-run.
+    """
+    import numpy as np
+    from repro.collectives import SchedulerConfig, build_world
+
+    def solo():
+        cluster, _, world = build_world(n_ranks=2, channels=2,
+                                        max_chunk_bytes=1 << 12,
+                                        src_slots=1)
+        rng = np.random.RandomState(0)
+        t0 = cluster.sim.now
+        for _ in range(rounds):
+            small = rng.randn(crit_elems).astype(np.float32)
+            world.gather_replicated_async(
+                small, priority="latency_critical").wait()
+        return {
+            "virtual_ms": round((cluster.sim.now - t0) * 1e3, 6),
+            "class_latency": world.class_latency_stats(),
+        }
+
+    def mixed(classful):
+        cluster, _, world = build_world(
+            n_ranks=2, channels=2, max_chunk_bytes=1 << 12,
+            src_slots=1,
+            sched=SchedulerConfig(classful=classful,
+                                  adapt_chunk_size=classful))
+        rng = np.random.RandomState(0)
+        bg = []
+        t0 = cluster.sim.now
+        for r in range(rounds):
+            if r % 4 == 0:
+                blob = rng.randint(0, 256, size=1 << 15).astype(np.uint8)
+                bg.append(world.broadcast_async(blob,
+                                                priority="background"))
+            arrays = [rng.randn(elems).astype(np.float32)
+                      for _ in range(2)]
+            bounds = world.aligned_bucket_bounds(elems, 4,
+                                                 elems * 4 // buckets)
+            works = [world.allreduce_async([a[lo:hi] for a in arrays],
+                                           priority="bulk")
+                     for lo, hi in bounds]
+            small = rng.randn(crit_elems).astype(np.float32)
+            crit = world.gather_replicated_async(
+                small, priority="latency_critical")
+            world.wait_all(works + [crit])
+        world.wait_all(bg)
+        elapsed = cluster.sim.now - t0
+        return {
+            "virtual_ms": round(elapsed * 1e3, 6),
+            # app-level bulk goodput: gradient bytes reduced per
+            # virtual second (identical traffic in both modes, so the
+            # classful/FIFO ratio isolates the scheduling cost)
+            "bulk_goodput_gbps": round(
+                rounds * elems * 4 * 8 / elapsed / 1e9, 3),
+            "class_latency": world.class_latency_stats(),
+            "priority_overtakes": world.stats_snapshot()
+            ["priority_overtakes"],
+        }
+
+    def skew(adapt):
+        cluster, _, world = build_world(
+            n_ranks=2, channels=2, max_chunk_bytes=1 << 16,
+            sched=SchedulerConfig(adapt_chunk_size=adapt))
+        cluster.apply_fault("bw_degrade", "rail:0", 0.05)
+        rng = np.random.RandomState(0)
+        # warm the telemetry EWMAs so adaptation sees the degraded rail
+        for _ in range(2):
+            world.broadcast(rng.randn(1 << 14).astype(np.float32))
+        for _ in range(6):
+            world.broadcast(rng.randn(1 << 17).astype(np.float32))
+        tel = cluster.telemetry
+        lat = [tel.lat_ewma.get(ch.rail) for ch in world.channels]
+        return {
+            "lat_ewma_ms": [round(l * 1e3, 6) if l else None
+                            for l in lat],
+            "skew": (round(lat[0] / lat[1], 3)
+                     if lat[0] and lat[1] else None),
+        }
+
+    solo_run = solo()
+    mixed_run = mixed(classful=True)
+    fifo_run = mixed(classful=False)
+    skew_adapted = skew(adapt=True)
+    skew_fixed = skew(adapt=False)
+    p99_solo = solo_run["class_latency"]["latency_critical"][
+        "p99_virtual_ms"]
+    p99_mixed = mixed_run["class_latency"]["latency_critical"][
+        "p99_virtual_ms"]
+    p99_fifo = fifo_run["class_latency"]["latency_critical"][
+        "p99_virtual_ms"]
+    return {
+        "config": {"rounds": rounds, "elems": elems, "buckets": buckets,
+                   "crit_elems": crit_elems,
+                   "note": "all virtual time (deterministic); mixed = "
+                           "bulk buckets + background stream + a "
+                           "critical gather issued LAST each round "
+                           "(src_slots=1: in-flight window of one chunk "
+                           "bounds priority inversion on the "
+                           "non-preemptive wire); skew = rail 0 at "
+                           "0.05x bandwidth, per-rail lat-EWMA ratio "
+                           "degraded/healthy"},
+        "solo": solo_run,
+        "mixed": mixed_run,
+        "mixed_fifo": fifo_run,
+        "skew_adapted": skew_adapted,
+        "skew_fixed": skew_fixed,
+        "p99_ratio": round(p99_mixed / p99_solo, 3),
+        "p99_ratio_fifo": round(p99_fifo / p99_solo, 3),
+        "bulk_retention": round(mixed_run["bulk_goodput_gbps"]
+                                / fifo_run["bulk_goodput_gbps"], 3),
+        "skew_ratio_adapted": skew_adapted["skew"],
+        "skew_ratio_fixed": skew_fixed["skew"],
+    }
+
+
 def bench_allreduce(n_ranks: int = 2, elems: int = 1 << 16,
                     rounds: int = 12):
     import numpy as np
@@ -539,6 +709,7 @@ def run_suite(quick: bool = False) -> dict:
     straggler = bench_straggler_resteer()
     ddp_overlap = bench_ddp_overlap()
     serving = bench_serving_tp()
+    latency_slo = bench_latency_slo()
     return {
         "schema": SCHEMA,
         "note": "before = pre-fast-path configuration (legacy per-WQE "
@@ -555,6 +726,7 @@ def run_suite(quick: bool = False) -> dict:
             "straggler_resteer_latency": straggler,
             "ddp_overlap_speedup": ddp_overlap,
             "serving_tp": serving,
+            "latency_slo": latency_slo,
         },
     }
 
@@ -683,6 +855,29 @@ def emit(path: str, quick: bool = False,
     if not sv["tokens_identical"]:
         print("# PERF SERVING TP: tokens diverged from the single-host "
               "reference (byte-identity broken)", flush=True)
+        return 1
+    ls = b["latency_slo"]
+    print(f"# perf: latency SLO critical p99 {ls['p99_ratio']:.2f}x solo "
+          f"under mixed load (FIFO baseline {ls['p99_ratio_fifo']:.2f}x), "
+          f"bulk retains {ls['bulk_retention']:.2f}x of FIFO goodput, "
+          f"degraded-rail skew {ls['skew_ratio_fixed']} -> "
+          f"{ls['skew_ratio_adapted']} with chunk-size adaptation",
+          flush=True)
+    if ls["p99_ratio"] > SLO_MAX_P99_RATIO:
+        print(f"# PERF LATENCY SLO FLOOR: p99_ratio {ls['p99_ratio']} > "
+              f"allowed {SLO_MAX_P99_RATIO}", flush=True)
+        return 1
+    if ls["bulk_retention"] < SLO_MIN_BULK_RETENTION:
+        print(f"# PERF LATENCY SLO FLOOR: bulk_retention "
+              f"{ls['bulk_retention']} < required "
+              f"{SLO_MIN_BULK_RETENTION}", flush=True)
+        return 1
+    if (not ls["skew_ratio_adapted"] or not ls["skew_ratio_fixed"]
+            or ls["skew_ratio_adapted"] >= ls["skew_ratio_fixed"]):
+        print(f"# PERF LATENCY SLO FLOOR: chunk-size adaptation did not "
+              f"reduce degraded-rail skew (adapted "
+              f"{ls['skew_ratio_adapted']} vs fixed "
+              f"{ls['skew_ratio_fixed']})", flush=True)
         return 1
     # invariant violations fail UNCONDITIONALLY — no baseline needed: a
     # fast datapath that breaks exactly-once/zero-copy/ordering is a

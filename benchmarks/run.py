@@ -8,8 +8,13 @@ configuration standalone).
 campaign (pingpong workload over the full library), the concurrent-
 collective overlap smoke (overlap_allreduce + bucketed-overlapped DDP
 with >= 4 works in flight), the fault-tolerant TP serving smoke
-(request-level invariants under rail kills, both datapaths) and fig7 —
-and exits non-zero on any invariant violation: the fast CI pass.
+(request-level invariants under rail kills, both datapaths), the
+mixed latency-class smoke (priority scheduling under faults) and fig7
+— and exits non-zero on any invariant violation: the fast CI pass.
+
+``--matrix-md PATH`` additionally appends the per-class completion-
+latency p50/p99 table (the mixed workload's class histograms) to the
+campaign-matrix markdown for the CI job summary.
 
 ``--bench-json PATH`` additionally runs the tracked perf suite
 (``benchmarks/perf_suite.py``), writes its JSON to PATH, and exits
@@ -160,6 +165,59 @@ def serving_rows(fast: bool = True):
     return out
 
 
+def mixed_rows(fast: bool = True):
+    """Mixed latency-class smoke: the ``mixed`` workload (bulk gradient
+    buckets + a latency-critical gather issued last each round + a real
+    CheckpointStore streaming background broadcasts) under clean, NIC-
+    down and rail-kill scenarios. The invariants fail any run where
+    priority broke byte-identity/exactly-once or starved a class."""
+    from repro.scenarios import SCENARIOS, run_scenario
+
+    names = ("baseline_clean", "sender_nic_down", "rail_kill_striped")
+    out = []
+    for name in names:
+        r = run_scenario(SCENARIOS[name], workload="mixed", fast=fast)
+        status = "ok" if r.ok else _violation_status(r.violations)
+        cl = r.class_latency or {}
+        crit_p99 = cl.get("latency_critical", {}).get("p99_virtual_ms", 0)
+        counts = "/".join(f"{k}:{s['count']}" for k, s in sorted(cl.items()))
+        out.append((f"mixed/{r.scenario}", float("nan"),
+                    f"{status}|fb={r.fallbacks}|rounds={r.rounds}|"
+                    f"crit_p99={crit_p99}ms|{counts}"))
+    return out
+
+
+def class_latency_markdown(fast: bool = True):
+    """Per-class completion-latency p50/p99 table for the CI job summary
+    (published alongside the campaign matrix): the ``mixed`` workload on
+    a clean fabric and under a striped rail kill, one row per latency
+    class. Returns ``(markdown, n_violations)``."""
+    from repro.scenarios import SCENARIOS, run_scenario
+
+    names = ("baseline_clean", "rail_kill_striped")
+    lines = [
+        "## Per-class completion latency (mixed workload)",
+        "",
+        "| scenario | class | works | p50 (virtual ms) "
+        "| p99 (virtual ms) |",
+        "|---|---|---|---|---|",
+    ]
+    n_viol = 0
+    for name in names:
+        r = run_scenario(SCENARIOS[name], workload="mixed", fast=fast)
+        n_viol += len(r.violations)
+        for klass in ("latency_critical", "bulk", "background"):
+            s = (r.class_latency or {}).get(klass, {})
+            lines.append(
+                f"| {name} | {klass} | {s.get('count', 0)} | "
+                f"{s.get('p50_virtual_ms', '-')} | "
+                f"{s.get('p99_virtual_ms', '-')} |")
+    lines += ["",
+              f"**{n_viol} invariant violations in mixed-class cells.**",
+              ""]
+    return "\n".join(lines), n_viol
+
+
 def matrix_markdown(fast: bool = True, max_rounds: int = 1200):
     """Run the FULL scenario x workload campaign matrix and render it as
     a GitHub-flavoured markdown table (one row per scenario, one column
@@ -208,6 +266,9 @@ def main(smoke: bool = False, bench_json: str = None,
          fast: bool = True, matrix_md: str = None) -> int:
     if matrix_md:
         md, n_viol = matrix_markdown(fast=fast)
+        cl_md, cl_viol = class_latency_markdown(fast=fast)
+        md = md + "\n" + cl_md
+        n_viol += cl_viol
         with open(matrix_md, "w") as f:
             f.write(md)
         print(md)
@@ -223,6 +284,8 @@ def main(smoke: bool = False, bench_json: str = None,
              lambda: overlap_rows(fast=fast)),
             ("serving (fault-tolerant TP inference)",
              lambda: serving_rows(fast=fast)),
+            ("mixed (latency classes under faults)",
+             lambda: mixed_rows(fast=fast)),
             ("fig7 (verb overhead)", fig7_verbs_rows),
         ]
     else:

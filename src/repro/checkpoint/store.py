@@ -20,6 +20,18 @@ Supports the paper's §4.4 optimization: ``checkpoint promptly after
 fallback`` — the trainer calls ``save(..., reason="post-fallback")`` as
 soon as SHIFT reports a fallback, bounding progress loss under degraded
 throughput.
+
+When a :class:`~repro.collectives.JcclWorld` is attached via
+:meth:`CheckpointStore.attach_world`, every ``save()`` additionally
+streams the checkpoint bytes over the fabric as a **background-class**
+broadcast (replicating the state to peer hosts, as a real cluster would
+push checkpoints to a remote store). Background is the lowest latency
+class: the stream yields to both latency-critical serving works and bulk
+gradient buckets at the channel dispatch queues (DESIGN.md §10), so
+checkpointing never stretches a decode step's tail. The stream is
+best-effort — the checkpoint is already durably committed to local disk
+before the broadcast is issued, so ``drain_stream()`` swallows
+``CollectiveError`` from a fabric that died mid-replication.
 """
 
 from __future__ import annotations
@@ -47,13 +59,71 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
 
 
 class CheckpointStore:
-    def __init__(self, root: str, keep: int = 3, async_save: bool = False):
+    """Crash-safe checkpoint directory with optional async writes and
+    optional background-class fabric replication (see module docstring).
+
+    ``stream_limit`` caps the bytes any single ``save()`` puts on the
+    fabric — replication is a smoke signal for the scheduler's
+    background class, not a byte-complete remote copy."""
+
+    def __init__(self, root: str, keep: int = 3, async_save: bool = False,
+                 stream_limit: int = 1 << 16):
         self.root = root
         self.keep = keep
         self.async_save = async_save
+        self.stream_limit = stream_limit
         self._lock = threading.Lock()
         self._pending: Optional[threading.Thread] = None
+        self._world = None
+        self._stream: List[Any] = []
+        self.streamed_saves = 0
+        self.streamed_bytes = 0
         os.makedirs(root, exist_ok=True)
+
+    # -- background fabric replication ---------------------------------
+    def attach_world(self, world) -> None:
+        """Replicate future saves over ``world`` as background-class
+        broadcasts. Any stream works issued against a previously
+        attached world are dropped unwaited (that world may be dead)."""
+        self._world = world
+        self._stream = []
+
+    def _stream_background(self, flat: Dict[str, np.ndarray]) -> None:
+        """Issue (not wait) one background broadcast of the checkpoint
+        bytes. Runs on the CALLER's thread — the simulated fabric is
+        single-threaded — and never raises: local durability must not
+        depend on fabric health."""
+        world = self._world
+        if world is None or getattr(world, "failed", False):
+            return
+        parts = [np.asarray(a).reshape(-1).view(np.uint8)
+                 for a in flat.values()]
+        blob = np.concatenate(parts) if parts else np.zeros(1, np.uint8)
+        blob = np.ascontiguousarray(blob[:self.stream_limit])
+        try:
+            work = world.broadcast_async(blob, root=0,
+                                         priority="background")
+        except Exception:
+            return
+        self._stream.append(work)
+        self.streamed_saves += 1
+        self.streamed_bytes += int(blob.nbytes)
+
+    def drain_stream(self, timeout: Optional[float] = None) -> int:
+        """Wait out the in-flight replication works; returns how many
+        completed. ``CollectiveError`` (fabric died mid-stream) is
+        swallowed — the checkpoints are already committed locally."""
+        from repro.collectives import CollectiveError
+
+        works, self._stream = self._stream, []
+        done = 0
+        for w in works:
+            try:
+                w.wait(timeout)
+                done += 1
+            except CollectiveError:
+                pass
+        return done
 
     # ------------------------------------------------------------------
     def _remove(self, final: str) -> None:
@@ -70,6 +140,7 @@ class CheckpointStore:
 
     def save(self, step: int, tree, metadata: Optional[dict] = None) -> str:
         flat = _flatten(tree)  # snapshot on the caller's thread
+        self._stream_background(flat)
 
         def _write():
             tmp = os.path.join(self.root, f".tmp-{step}-{os.getpid()}")

@@ -9,8 +9,9 @@ layer (``channels=N`` stripes collectives across all host NICs with
 rail-aware SHIFT failover).
 """
 
-from .channel import (Channel, ChannelScheduler,        # noqa: F401
-                      SchedulerConfig)
+from .channel import (PRIORITY_CLASSES, Channel,        # noqa: F401
+                      ChannelScheduler, SchedulerConfig)
 from .endpoint import RankEndpoint                      # noqa: F401
-from .world import (CollectiveError, JcclWorld, Work,   # noqa: F401
+from .world import (DEFAULT_MAX_CHUNK_BYTES,            # noqa: F401
+                    CollectiveError, JcclWorld, Work,
                     build_world)

@@ -47,12 +47,17 @@ def _reduce(dst: np.ndarray, src: np.ndarray, op: str) -> None:
 
 class _Collective:
     tolerates_failure = False
+    #: collective kind for error attribution (overridden per subclass)
+    kind = "collective"
 
     def __init__(self, world):
         self.world = world
         #: collective id — assigned by ``JcclWorld._launch`` before
         #: ``start()``; namespaces every chunk tag this actor sends
         self.cid: Optional[int] = None
+        #: latency class — stamped by ``JcclWorld._launch`` before
+        #: ``start()``; every chunk dispatches under it
+        self.priority: str = "bulk"
         self.tolerates_failure = world.any_shift
 
     def _send(self, rank: int, peer: int, payload: np.ndarray, tag,
@@ -77,7 +82,15 @@ class _RingAllReduce(_Collective):
     bucket b's home channel is ``b % channels``, so with two healthy
     rails half the buckets flow on each. Within a bucket each rank has
     at most one chunk in flight (recv step t gates send step t+1), so
-    per-bucket notifies always arrive in step order."""
+    per-bucket notifies always arrive in step order.
+
+    Chunk bounds are deliberately NOT telemetry-adapted: the reduction
+    chunking fixes the per-element reduction order, and the
+    byte-identity contract (``JcclWorld.aligned_bucket_bounds``) pins it
+    to ``max_chunk_bytes``. Size adaptation applies only to the pure
+    data-movement collectives (broadcast, all-to-all)."""
+
+    kind = "allreduce"
 
     def __init__(self, world, arrays: List[np.ndarray],
                  op: str = "sum", phases: Tuple[str, ...] = ("rs", "ag")):
@@ -169,6 +182,8 @@ class _RingAllGather(_Collective):
     around the ring is an independent chain (tag = shard index), so the
     n shards stripe across channels and pipeline concurrently."""
 
+    kind = "all_gather"
+
     def __init__(self, world, full: List[np.ndarray], sizes: List[int]):
         super().__init__(world)
         self.full = [f.reshape(-1) for f in full]
@@ -222,7 +237,17 @@ class _PipelineBroadcast(_Collective):
     """Chain broadcast root -> root+1 -> ... in pipelined chunks. Each
     chunk travels the chain independently (tag = chunk index); the
     per-peer send FIFO provides the flow control that used to be the
-    explicit pipeline-depth ratchet."""
+    explicit pipeline-depth ratchet.
+
+    Pure data movement, so wire-chunk sizes are telemetry-adapted:
+    chunk ci homes on channel ``ci % channels`` and its size comes from
+    ``ChannelScheduler.adaptive_chunk_bytes(ci)`` — a degraded rail's
+    chunks shrink to bound per-chunk latency skew. The chunking is
+    fixed at construction (deterministic, all ranks share this actor),
+    and any chunk the scheduler later resteers just rides the healthy
+    rail at its smaller size."""
+
+    kind = "broadcast"
 
     def __init__(self, world, outs: List[np.ndarray], root: int):
         super().__init__(world)
@@ -230,10 +255,16 @@ class _PipelineBroadcast(_Collective):
         self.root = root
         self.dtype = self.outs[0].dtype
         self.itemsize = self.dtype.itemsize
-        per = world.max_chunk_bytes // self.itemsize
         total = self.outs[0].size
-        self.chunks = [(i, min(i + per, total))
-                       for i in range(0, total, per)] or [(0, 0)]
+        sched = world.scheduler
+        chunks = []
+        i = 0
+        while i < total:
+            per = max(1, sched.adaptive_chunk_bytes(len(chunks))
+                      // self.itemsize)
+            chunks.append((i, min(i + per, total)))
+            i += per
+        self.chunks = chunks or [(0, 0)]
         n = world.n_ranks
         self.remaining = [len(self.chunks)] * n
         self.remaining[root] = 0
@@ -281,7 +312,17 @@ class _AllToAll(_Collective):
     channels`` channel as one monolithic message. ``on_notify`` rejects
     foreign notifies (self-loop peer, missing or out-of-range tag):
     load-bearing once collectives run concurrently, where a stray
-    notify used to silently corrupt ``outs``."""
+    notify used to silently corrupt ``outs``.
+
+    Pure data movement, so wire-chunk sizes are telemetry-adapted per
+    row: chunk ci of row (src, dst) homes on channel ``src + dst + ci``
+    and its size comes from ``ChannelScheduler.adaptive_chunk_bytes`` —
+    rows whose chunks home on a degraded rail are cut finer to bound
+    per-chunk latency skew. Every rank shares this actor, so the
+    per-row bounds are consistent between sender and receiver by
+    construction."""
+
+    kind = "all_to_all"
 
     def __init__(self, world, mats: List[np.ndarray],
                  outs: List[np.ndarray]):
@@ -292,11 +333,23 @@ class _AllToAll(_Collective):
         self.dtype = mats[0].dtype
         self.itemsize = self.dtype.itemsize
         row_elems = mats[0][0].size
-        per = max(1, world.max_chunk_bytes // self.itemsize)
-        self.chunk_bounds = [(i, min(i + per, row_elems))
-                             for i in range(0, row_elems, per)] or [(0, 0)]
-        self.n_chunks = len(self.chunk_bounds)
-        self.expected = [(n - 1) * self.n_chunks] * n
+        sched = world.scheduler
+        self.row_bounds = {}
+        for r in range(n):
+            for peer in range(n):
+                if peer == r:
+                    continue
+                bounds = []
+                i = 0
+                while i < row_elems:
+                    per = max(1, sched.adaptive_chunk_bytes(
+                        r + peer + len(bounds)) // self.itemsize)
+                    bounds.append((i, min(i + per, row_elems)))
+                    i += per
+                self.row_bounds[(r, peer)] = bounds or [(0, 0)]
+        self.expected = [sum(len(self.row_bounds[(p, r)])
+                             for p in range(n) if p != r)
+                         for r in range(n)]
         self.received = [0] * n
 
     def start(self) -> None:
@@ -307,16 +360,17 @@ class _AllToAll(_Collective):
                 if peer == r:
                     continue
                 row = np.ascontiguousarray(self.mats[r][peer]).reshape(-1)
-                for ci, (c0, c1) in enumerate(self.chunk_bounds):
+                for ci, (c0, c1) in enumerate(self.row_bounds[(r, peer)]):
                     self._send(r, peer, row[c0:c1], tag=ci,
                                home=r + peer + ci)
 
     def on_notify(self, rank: int, peer: int, tag, ep, seq: int) -> None:
         if peer == rank or not isinstance(tag, int):
             return
-        if not 0 <= tag < self.n_chunks:
+        bounds = self.row_bounds.get((peer, rank))
+        if bounds is None or not 0 <= tag < len(bounds):
             return  # foreign tag: no such row chunk
-        c0, c1 = self.chunk_bounds[tag]
+        c0, c1 = bounds[tag]
         stage = ep.staging_slot_view(
             peer, seq, (c1 - c0) * self.itemsize).view(self.dtype)
         self.outs[rank][peer].reshape(-1)[c0:c1] = stage

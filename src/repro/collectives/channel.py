@@ -25,10 +25,25 @@ Health is per (rank, peer) link, not per channel globally: a rail that
 died for one host pair can still carry other pairs' traffic.  All
 scheduler inputs are virtual-clock-driven, so same-seed runs make
 identical choices (the campaign fingerprint covers them).
+
+Latency classes (tail-latency SLO scheduling): every chunk carries a
+priority class (``latency_critical`` / ``bulk`` / ``background``) and
+enters a per-(rank, peer) **dispatch queue** ordered
+earliest-deadline-first (deadline = enqueue time + the class's budget,
+size and FIFO order as tie-breaks). Chunks are handed to the wire only
+while the endpoint's outbound FIFO has free credit, so a small
+latency-critical collective's chunks overtake megabytes of queued bulk
+chunks — while a bulk chunk that has waited out its (finite) deadline
+budget beats even fresh critical chunks, which is what makes the policy
+starvation-free by construction. Reordering happens strictly ABOVE
+sequence-number assignment (``RankEndpoint.send_chunk`` is FIFO and the
+seq addresses the receiver's staging slot), so exactly-once delivery and
+notification ordering are untouched.
 """
 
 from __future__ import annotations
 
+import heapq
 import itertools
 from dataclasses import dataclass
 from statistics import median
@@ -43,6 +58,12 @@ from .endpoint import IMM_SEQ_MASK, RankEndpoint
 HEALTH_OK = "ok"
 HEALTH_DEGRADED = "degraded"
 HEALTH_DOWN = "down"
+
+#: latency classes, most to least urgent. ``latency_critical`` is for
+#: small blocking traffic on the serving hot path (decode-step gathers,
+#: MoE all-to-alls), ``bulk`` for gradient buckets and anything unmarked,
+#: ``background`` for checkpoint replication that must yield to all else.
+PRIORITY_CLASSES = ("latency_critical", "bulk", "background")
 
 
 def _qp_health(qp) -> str:
@@ -92,21 +113,80 @@ class Channel:
         self.duplicate_notifies = 0
         self.chunks_delivered = 0
         self.bytes_sent = 0
+        # deadline-ordered dispatch queues, one per (rank, peer) flow:
+        # entries are (deadline, nbytes, enqueue_order, payload, tag,
+        # cid, class). Chunks reorder HERE, before any sequence number
+        # exists; once handed to send_chunk the flow is strictly FIFO.
+        self._dispatchq: Dict[Tuple[int, int], List[tuple]] = {}
+        self._enq_order = 0
+        #: chunks actually posted to the wire, by latency class
+        self.class_dispatched: Dict[str, int] = {
+            k: 0 for k in PRIORITY_CLASSES}
+        #: dispatches that jumped ahead of an earlier-enqueued chunk
+        #: still waiting in the same flow's queue (priority in action)
+        self.priority_overtakes = 0
 
     # ------------------------------------------------------------------
     # data plane
     # ------------------------------------------------------------------
     def send(self, rank: int, peer: int, payload, tag,
-             cid: Optional[int] = None) -> None:
-        """Send one tagged chunk rank -> peer on this rail. The
-        ``(cid, tag)`` pair is returned to the owning collective when
-        the matching notify lands (the world keys it by this channel +
-        the FIFO sequence number; the cid routes it to the right live
-        collective, ``None`` for raw streams)."""
+             cid: Optional[int] = None, klass: str = "bulk") -> None:
+        """Queue one tagged chunk rank -> peer on this rail. The chunk
+        enters the flow's deadline-ordered dispatch queue and is posted
+        the moment outbound credit allows; the ``(cid, tag)`` pair is
+        returned to the owning collective when the matching notify lands
+        (the world keys it by this channel + the FIFO sequence number;
+        the cid routes it to the right live collective, ``None`` for raw
+        streams). ``klass`` is the chunk's latency class."""
+        deadline, size = self.world.scheduler.dispatch_key(
+            klass, payload.nbytes)
+        q = self._dispatchq.setdefault((rank, peer), [])
+        self._enq_order += 1
+        heapq.heappush(q, (deadline, size, self._enq_order,
+                           payload, tag, cid, klass))
+        self._drain(rank, peer)
+
+    def _drain(self, rank: int, peer: int) -> None:
+        """Post the flow's best queued chunks while the endpoint's
+        outbound FIFO has free credit. Called at enqueue and whenever a
+        send completion frees a slot — so the queue order is re-evaluated
+        at every dispatch opportunity (a critical chunk enqueued after a
+        pile of bulk chunks still goes out next)."""
+        q = self._dispatchq.get((rank, peer))
+        if not q:
+            return
         ep = self.endpoints[rank]
-        seq = ep.send_chunk(peer, payload)
-        self.world._tags[(self.index, peer, rank, seq)] = (cid, tag)
-        self.bytes_sent += payload.nbytes
+        while q and ep.send_seq[peer] - ep.send_completed[peer] < ep.K:
+            _dl, _sz, order, payload, tag, cid, klass = heapq.heappop(q)
+            if q and any(e[2] < order for e in q):
+                self.priority_overtakes += 1
+            seq = ep.send_chunk(peer, payload)
+            self.world._tags[(self.index, peer, rank, seq)] = (cid, tag)
+            self.bytes_sent += payload.nbytes
+            self.class_dispatched[klass] += 1
+
+    def purge(self, cid: Optional[int]) -> int:
+        """Drop a retired collective's queued (never-posted) chunks from
+        every dispatch queue; returns how many were dropped. Safe against
+        double-decrement by construction: purged chunks never reached the
+        wire, so no tag entry exists for them and ``note_delivered`` can
+        never fire — ``ChannelScheduler.retire`` already reconciled their
+        in-flight accounting in one step."""
+        dropped = 0
+        for key, q in self._dispatchq.items():
+            keep = [e for e in q if e[5] != cid]
+            if len(keep) != len(q):
+                dropped += len(q) - len(keep)
+                heapq.heapify(keep)
+                self._dispatchq[key] = keep
+        return dropped
+
+    def queued_chunks(self, cid: object = "*") -> int:
+        """Number of enqueued-but-not-yet-posted chunks across this
+        channel's dispatch queues (``cid`` filters to one collective;
+        the default counts everything)."""
+        return sum(1 for q in self._dispatchq.values() for e in q
+                   if cid == "*" or e[5] == cid)
 
     def link_state(self, rank: int, peer: int) -> str:
         """Worst-case health of the rank<->peer link on this rail."""
@@ -137,6 +217,9 @@ class Channel:
                 peer = ep.qp_of_qpn.get(wc.qp_num)
                 if peer is not None:
                     ep.on_send_complete(peer)
+                    # the completion freed one outbound credit: dispatch
+                    # the flow's best queued chunk (deadline order)
+                    self._drain(ep.rank, peer)
                 continue
             if wc.opcode is V.WCOpcode.RECV_RDMA_WITH_IMM:
                 peer = ep.qp_of_qpn.get(wc.qp_num)
@@ -195,10 +278,13 @@ class Channel:
             "nics": sorted(set(self.nic_names)),
             "chunks_assigned": sched.assigned[self.index],
             "chunks_delivered": self.chunks_delivered,
+            "chunks_queued": self.queued_chunks(),
             "bytes_sent": self.bytes_sent,
             "total_notifies": self.total_notifies,
             "order_violations": self.order_violations,
             "duplicate_notifies": self.duplicate_notifies,
+            "class_dispatched": dict(self.class_dispatched),
+            "priority_overtakes": self.priority_overtakes,
         }
 
 
@@ -243,6 +329,30 @@ class SchedulerConfig:
     #: penalty lifts the moment the stalled op is reaped. Deliberately
     #: conservative — healthy overlap never hits it.
     backlog_factor: float = 8.0
+    #: enable latency-class dispatch ordering (earliest deadline first,
+    #: size then FIFO as tie-breaks). False degrades every flow to pure
+    #: FIFO — the no-priority baseline the perf suite measures against.
+    classful: bool = True
+    #: deadline budget (virtual seconds past enqueue) per class. A
+    #: chunk's queue position is its deadline, so these encode BOTH the
+    #: priority order and the starvation bound: a bulk chunk waits at
+    #: most ``deadline_bulk`` behind an arbitrary stream of critical
+    #: chunks before its deadline beats theirs. latency_critical = 0
+    #: means "due immediately".
+    deadline_critical: float = 0.0
+    deadline_bulk: float = 2e-3
+    deadline_background: float = 20e-3
+    #: adapt per-rail wire-chunk size from telemetry: a rail whose
+    #: measured busbw EWMA trails the best rail gets proportionally
+    #: smaller chunks (power-of-two divisors), bounding per-chunk
+    #: latency skew on degraded rails. Applies only to pure
+    #: data-movement collectives (broadcast, all-to-all) — allreduce
+    #: chunk bounds are pinned by the byte-identity alignment contract
+    #: (``JcclWorld.aligned_bucket_bounds``).
+    adapt_chunk_size: bool = True
+    #: floor on the adapted chunk size as a fraction of
+    #: ``max_chunk_bytes`` (divisor cap: 1/frac, power of two)
+    chunk_floor_frac: float = 0.125
 
 
 class ChannelScheduler:
@@ -289,6 +399,59 @@ class ChannelScheduler:
         # post-recovery picks don't each restart the channel-wide ramp
         self._impaired: List[bool] = [False] * self.n
         self._win_seq = world.cluster.telemetry.window_seq
+
+    # ------------------------------------------------------------------
+    # latency classes
+    # ------------------------------------------------------------------
+    def dispatch_key(self, klass: str, nbytes: int) -> Tuple[float, int]:
+        """(deadline, size) sort key for one chunk's dispatch-queue
+        position: deadline = now + the class's budget (earliest first),
+        chunk size breaks deadline ties (small chunks first — a tiny
+        critical gather never waits behind an equally-due megabyte), and
+        the caller's FIFO counter breaks the rest. With ``classful``
+        off every chunk gets the same key — pure FIFO, the no-priority
+        baseline."""
+        cfg = self.cfg
+        if not cfg.classful:
+            return (0.0, 0)
+        if klass == "latency_critical":
+            budget = cfg.deadline_critical
+        elif klass == "background":
+            budget = cfg.deadline_background
+        else:
+            budget = cfg.deadline_bulk
+        return (self.world.sim.now + budget, nbytes)
+
+    def adaptive_chunk_bytes(self, home: int) -> int:
+        """Wire-chunk size for a chunk homed on channel ``home``,
+        adapted to that rail's measured busbw: a rail delivering a
+        fraction of the best rail's busbw gets its chunks shrunk by the
+        matching power-of-two divisor (floored at ``chunk_floor_frac``),
+        so per-chunk service time — and therefore per-chunk completion
+        latency skew across rails — stays bounded on a degraded rail.
+        Deterministic (telemetry EWMAs are virtual-clock-driven) and
+        consistent across ranks (telemetry is cluster-global). Returns
+        ``max_chunk_bytes`` unchanged for single-channel worlds, rails
+        without data, or when adaptation is off."""
+        cfg = self.cfg
+        full = self.world.max_chunk_bytes
+        if not cfg.adapt_chunk_size or self.n <= 1:
+            return full
+        tel = self.world.cluster.telemetry
+        bus = [tel.busbw_ewma.get(ch.rail) for ch in self.world.channels]
+        known = [b for b in bus if b]
+        if len(known) < 2:
+            return full
+        best = max(known)
+        mine = bus[home % self.n]
+        if not mine or not best or mine >= best:
+            return full
+        frac = max(mine / best, cfg.chunk_floor_frac)
+        div = 1
+        while frac <= 0.5 and div * 2 * cfg.chunk_floor_frac <= 1.0:
+            div *= 2
+            frac *= 2.0
+        return max(1, full // div)
 
     # ------------------------------------------------------------------
     # weights

@@ -41,12 +41,33 @@ from repro.core.shift import ShiftLib, StandardLib
 
 from .algorithms import (_AllToAll, _Collective, _PipelineBroadcast,
                          _RingAllGather, _RingAllReduce)
-from .channel import Channel, ChannelScheduler, SchedulerConfig
+from .channel import (PRIORITY_CLASSES, Channel, ChannelScheduler,
+                      SchedulerConfig)
 from .endpoint import RankEndpoint, _ListenedCQ  # noqa: F401 (re-export)
+
+#: Single source of truth for the engine chunk / staging-slot size.
+#: ``JcclWorld`` and ``build_world`` used to default to 1<<22 and 1<<16
+#: respectively — a silent 64x divergence, since the chunk size sets the
+#: allreduce bucket granularity (and so the byte-identity alignment) AND
+#: the per-endpoint staging footprint (n_ranks * src_slots * chunk
+#: bytes). 64 KiB is the harness value every test, scenario and
+#: benchmark actually ran with; callers wanting bigger wire chunks pass
+#: ``max_chunk_bytes=`` explicitly (fig8 and the DDP example use 1<<20).
+DEFAULT_MAX_CHUNK_BYTES = 1 << 16
 
 
 class CollectiveError(RuntimeError):
     """A collective could not complete (crash-stop abort or timeout)."""
+
+
+def _describe_works(works: Sequence["Work"], limit: int = 6) -> str:
+    """Attribution string for error messages: which collectives (cid,
+    kind, latency class) were still pending when the batch died."""
+    body = ", ".join(f"cid={w.cid}:{w.kind}:{w.priority}"
+                     for w in works[:limit])
+    if len(works) > limit:
+        body += f", +{len(works) - limit} more"
+    return body
 
 
 class Work:
@@ -76,6 +97,18 @@ class Work:
         self._result: object = None
         self._exc: Optional[CollectiveError] = None
         self._finished = False
+        #: latency class every chunk of this collective dispatches under
+        self.priority: str = getattr(coll, "priority", "bulk")
+        self._t_launch = world.sim.now
+        #: virtual seconds from launch to the first completion
+        #: observation (``wait_all`` polls per event, so for waited
+        #: works this is the actual completion latency)
+        self.completion_latency: Optional[float] = None
+
+    @property
+    def kind(self) -> str:
+        """The collective's kind (``allreduce``, ``broadcast``, ...)."""
+        return getattr(self._coll, "kind", "collective")
 
     # -- state ----------------------------------------------------------
     def done(self) -> bool:
@@ -84,6 +117,9 @@ class Work:
         result materialization) — this never pumps the simulator."""
         if not self._finished and self._exc is None and self._coll.done():
             self._finished = True
+            self.completion_latency = self.world.sim.now - self._t_launch
+            self.world._note_class_latency(self.priority,
+                                           self.completion_latency)
             self._result = (self._result_fn()
                             if self._result_fn is not None else None)
             self.world._retire(self.cid)
@@ -103,10 +139,12 @@ class Work:
         return self._result
 
     # -- synchronization ------------------------------------------------
-    def wait(self, timeout: float = 120.0):
+    def wait(self, timeout: Optional[float] = None):
         """Pump the simulator until this collective completes; returns
         its result. Sibling live collectives advance too (shared event
-        loop). Raises :class:`CollectiveError` on abort/timeout."""
+        loop). ``timeout=None`` uses the world-level default
+        (``JcclWorld.wait_timeout``). Raises :class:`CollectiveError`
+        on abort/timeout."""
         self.world.wait_all([self], timeout=timeout)
         return self.result()
 
@@ -121,15 +159,20 @@ class JcclWorld:
     """All ranks of one communicator + the async collective engine."""
 
     def __init__(self, cluster: Cluster, libs: Sequence, nic: str = "mlx5_0",
-                 max_chunk_bytes: int = 1 << 22, qp_depth: int = 8192,
+                 max_chunk_bytes: int = DEFAULT_MAX_CHUNK_BYTES,
+                 qp_depth: int = 8192,
                  cq_depth: int = 1 << 17, recv_prepost: int = 64,
                  src_slots: int = 4, strict_order: bool = True,
                  channels: int = 1,
-                 sched: Optional[SchedulerConfig] = None):
+                 sched: Optional[SchedulerConfig] = None,
+                 wait_timeout: float = 120.0):
         self.cluster = cluster
         self.sim = cluster.sim
         self.libs = list(libs)
         self.n_ranks = len(libs)
+        #: default virtual-seconds budget for ``Work.wait`` /
+        #: ``wait_all`` when the caller passes no timeout
+        self.wait_timeout = wait_timeout
         # notification invariants (what SHIFT preserves across failover):
         # violations are always counted; strict_order additionally makes
         # an out-of-order notify fatal (the historical behaviour). The
@@ -161,6 +204,10 @@ class JcclWorld:
         self.peak_live = 0
         self.failed = False
         self.fail_wc = None
+        #: per-class completion latencies (virtual seconds) of finished
+        #: works — the raw data behind the p50/p99 SLO histograms
+        self.class_latencies: Dict[str, List[float]] = {
+            k: [] for k in PRIORITY_CLASSES}
 
     def _nic_name(self, lib, channel: int, nic: str) -> str:
         """Channel c rides NIC index c of each host; the single-channel
@@ -199,17 +246,24 @@ class JcclWorld:
     # striped data plane
     # ------------------------------------------------------------------
     def send(self, rank: int, peer: int, payload: np.ndarray, tag,
-             home: Optional[int] = None, cid: Optional[int] = None) -> int:
+             home: Optional[int] = None, cid: Optional[int] = None,
+             priority: Optional[str] = None) -> int:
         """Send one tagged chunk, striping across channels: ``home``
         (default: the tag) names the chunk's preferred channel; the
         scheduler resteers it if that channel's link is degraded or
         down. ``cid`` namespaces the tag to one live collective (None
         for raw streams — benchmarks drive the scheduler directly).
-        Returns the channel the chunk actually took."""
+        ``priority`` overrides the chunk's latency class (default: the
+        owning collective's class, ``bulk`` for raw streams). Returns
+        the channel the chunk actually took."""
         if home is None:
             home = tag if isinstance(tag, int) else 0
+        if priority is None:
+            coll = self._live.get(cid)
+            priority = coll.priority if coll is not None else "bulk"
         c = self.scheduler.pick(rank, peer, home, cid)
-        self.channels[c].send(rank, peer, payload, tag, cid)
+        self.channels[c].send(rank, peer, payload, tag, cid,
+                              klass=priority)
         return c
 
     def _drop_tag(self, channel: Channel, rank: int, peer: int,
@@ -243,13 +297,19 @@ class JcclWorld:
     # async collective driver
     # ------------------------------------------------------------------
     def _launch(self, coll: _Collective,
-                result_fn: Optional[Callable[[], object]] = None) -> Work:
+                result_fn: Optional[Callable[[], object]] = None,
+                priority: str = "bulk") -> Work:
         """Register + start one collective; returns its work handle.
-        Degenerate collectives (1 rank, empty payload) complete — and
-        retire — synchronously inside this call."""
+        ``priority`` stamps every chunk's latency class. Degenerate
+        collectives (1 rank, empty payload) complete — and retire —
+        synchronously inside this call."""
+        if priority not in PRIORITY_CLASSES:
+            raise ValueError(f"priority {priority!r} not one of "
+                             f"{PRIORITY_CLASSES}")
         cid = self._next_cid
         self._next_cid += 1
         coll.cid = cid
+        coll.priority = priority
         self._live[cid] = coll
         self.peak_live = max(self.peak_live, len(self._live))
         work = Work(self, cid, coll, result_fn)
@@ -258,20 +318,54 @@ class JcclWorld:
         return work
 
     def _retire(self, cid: int) -> None:
-        """Remove a finished/failed collective from the registry and
-        reconcile the scheduler's per-collective accounting."""
+        """Remove a finished/failed collective from the registry,
+        reconcile the scheduler's per-collective accounting, and purge
+        its queued (never-posted) chunks from every channel's dispatch
+        queue — a stalled high-priority collective's backlog must
+        neither dispatch posthumously nor double-decrement anything
+        (purged chunks never got a seq, so no tag/delivery exists)."""
         self._live.pop(cid, None)
         self.scheduler.retire(cid)
+        for ch in self.channels:
+            ch.purge(cid)
+
+    def _note_class_latency(self, klass: str, latency: float) -> None:
+        """Record one finished work's completion latency (virtual
+        seconds) under its latency class."""
+        self.class_latencies.setdefault(klass, []).append(latency)
+
+    def class_latency_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-class completion-latency histogram summary: count, p50
+        and p99 in virtual milliseconds (deterministic — same seed,
+        same histogram). Classes with no finished works are omitted."""
+        out: Dict[str, Dict[str, float]] = {}
+        for klass, lats in self.class_latencies.items():
+            if not lats:
+                continue
+            arr = np.asarray(lats)
+            out[klass] = {
+                "count": len(lats),
+                "p50_virtual_ms": round(float(np.percentile(arr, 50))
+                                        * 1e3, 6),
+                "p99_virtual_ms": round(float(np.percentile(arr, 99))
+                                        * 1e3, 6),
+            }
+        return out
 
     def wait_all(self, works: Sequence[Work],
-                 timeout: float = 120.0) -> Sequence[Work]:
+                 timeout: Optional[float] = None) -> Sequence[Work]:
         """Pump the simulator until every handle in ``works`` completes.
 
-        The deadline covers the whole batch (virtual seconds from now).
-        On an unmaskable failure the non-tolerant pending works are
-        failed and the error raised; on timeout every pending work is
-        failed. Returns ``works`` for chaining.
+        The deadline covers the whole batch (virtual seconds from now;
+        ``None`` uses the world-level ``wait_timeout`` default). On an
+        unmaskable failure the non-tolerant pending works are failed
+        and the error raised; on timeout every pending work is failed.
+        Error messages name the pending works (cid, kind, latency
+        class) so mixed-load timeouts are attributable. Returns
+        ``works`` for chaining.
         """
+        if timeout is None:
+            timeout = self.wait_timeout
         deadline = self.sim.now + timeout
         pending = [w for w in works if not w.done()]
         while pending:
@@ -280,15 +374,18 @@ class JcclWorld:
                           if not w._coll.tolerates_failure]
                 if doomed:
                     exc = CollectiveError(
-                        f"collective aborted: {self.fail_wc}")
+                        f"collective aborted: {self.fail_wc} "
+                        f"[{_describe_works(doomed)}]")
                     for w in doomed:
                         w._fail(exc)
                     raise exc
             t = self.sim.peek_time()
             if t is None or t > deadline:
                 exc = CollectiveError(
-                    f"collective dead after failure: {self.fail_wc}"
-                    if self.failed else "collective timed out")
+                    (f"collective dead after failure: {self.fail_wc}"
+                     if self.failed else
+                     f"collective timed out after {timeout}s") +
+                    f" [pending: {_describe_works(pending)}]")
                 for w in pending:
                     w._fail(exc)
                 raise exc
@@ -326,18 +423,24 @@ class JcclWorld:
                 for i in range(0, total_elems, step)] or [(0, 0)]
 
     # -- async public API -----------------------------------------------
+    # every launcher takes ``priority`` — the latency class
+    # (``latency_critical`` / ``bulk`` / ``background``) stamped on the
+    # work handle and on every chunk the collective dispatches
     def allreduce_async(self, arrays: List[np.ndarray],
-                        op: str = "sum") -> Work:
+                        op: str = "sum",
+                        priority: str = "bulk") -> Work:
         """Launch a ring all-reduce of ``arrays`` in place (one array per
         rank); returns a :class:`Work` whose result is ``arrays``."""
         coll = _RingAllReduce(self, arrays, op)
-        return self._launch(coll, lambda: arrays)
+        return self._launch(coll, lambda: arrays, priority=priority)
 
     def reduce_scatter_async(self, arrays: List[np.ndarray],
-                             op: str = "sum") -> Work:
+                             op: str = "sum",
+                             priority: str = "bulk") -> Work:
         """Launch a ring reduce-scatter; the work's result is each rank's
         owned (fully reduced) elements — rank r owns chunk (r+1) % n."""
         coll = _RingAllReduce(self, arrays, op, phases=("rs",))
+        coll.kind = "reduce_scatter"
 
         def _owned() -> List[np.ndarray]:
             n = self.n_ranks
@@ -350,9 +453,10 @@ class JcclWorld:
                           for b in range(coll.n_buckets))]
                 out.append(np.concatenate(parts) if parts else flat[:0])
             return out
-        return self._launch(coll, _owned)
+        return self._launch(coll, _owned, priority=priority)
 
-    def all_gather_async(self, shards: List[np.ndarray]) -> Work:
+    def all_gather_async(self, shards: List[np.ndarray],
+                         priority: str = "bulk") -> Work:
         """Launch a ring all-gather of variable-size ``shards``; the
         work's result is one concatenated array per rank."""
         full = [np.concatenate([np.zeros_like(s) for s in shards])
@@ -361,7 +465,7 @@ class JcclWorld:
             off = sum(x.size for x in shards[:r])
             full[r][off:off + s.size] = s
         coll = _RingAllGather(self, full, [s.size for s in shards])
-        return self._launch(coll, lambda: full)
+        return self._launch(coll, lambda: full, priority=priority)
 
     def shard_bounds(self, total: int) -> List[Tuple[int, int]]:
         """Per-rank contiguous slice bounds of a ``total``-element vector
@@ -378,7 +482,8 @@ class JcclWorld:
             off += size
         return bounds
 
-    def gather_replicated_async(self, array: np.ndarray) -> Work:
+    def gather_replicated_async(self, array: np.ndarray,
+                                priority: str = "bulk") -> Work:
         """Serving-shaped all-gather: every rank holds the same
         replicated 1-D ``array`` (e.g. a tensor-parallel layer's
         activations or logits recomputed on each rank); rank r
@@ -393,9 +498,10 @@ class JcclWorld:
             raise ValueError("gather_replicated_async takes a 1-D array")
         shards = [array[lo:hi].copy()
                   for lo, hi in self.shard_bounds(array.size)]
-        return self.all_gather_async(shards)
+        return self.all_gather_async(shards, priority=priority)
 
-    def broadcast_async(self, array: np.ndarray, root: int = 0) -> Work:
+    def broadcast_async(self, array: np.ndarray, root: int = 0,
+                        priority: str = "bulk") -> Work:
         """Launch a pipelined chain broadcast from ``root``; the work's
         result is one output per rank (the root's is a read-only alias)."""
         # Ownership rule: the root's entry is a READ-ONLY view of the
@@ -408,43 +514,54 @@ class JcclWorld:
         outs = [root_view if r == root else np.zeros_like(array)
                 for r in range(self.n_ranks)]
         coll = _PipelineBroadcast(self, outs, root)
-        return self._launch(coll, lambda: outs)
+        return self._launch(coll, lambda: outs, priority=priority)
 
-    def all_to_all_async(self, mats: List[np.ndarray]) -> Work:
+    def all_to_all_async(self, mats: List[np.ndarray],
+                         priority: str = "bulk") -> Work:
         """Launch a chunk-striped all-to-all (``mats[r]`` row j goes to
         rank j); the work's result is one received matrix per rank."""
         outs = [np.zeros_like(m) for m in mats]
         coll = _AllToAll(self, mats, outs)
-        return self._launch(coll, lambda: outs)
+        return self._launch(coll, lambda: outs, priority=priority)
 
     # -- blocking public API (async + wait) -------------------------------
     def allreduce(self, arrays: List[np.ndarray], op: str = "sum",
-                  timeout: float = 120.0) -> List[np.ndarray]:
+                  timeout: Optional[float] = None,
+                  priority: str = "bulk") -> List[np.ndarray]:
         """Ring all-reduce ``arrays`` in place (one array per rank)."""
-        return self.allreduce_async(arrays, op).wait(timeout)
+        return self.allreduce_async(arrays, op,
+                                    priority=priority).wait(timeout)
 
     def reduce_scatter(self, arrays: List[np.ndarray], op: str = "sum",
-                       timeout: float = 120.0) -> List[np.ndarray]:
+                       timeout: Optional[float] = None,
+                       priority: str = "bulk") -> List[np.ndarray]:
         """After ring reduce-scatter, rank r owns chunk (r+1) % n of each
         bucket; returns each rank's owned (fully reduced) elements."""
-        return self.reduce_scatter_async(arrays, op).wait(timeout)
+        return self.reduce_scatter_async(arrays, op,
+                                         priority=priority).wait(timeout)
 
     def all_gather(self, shards: List[np.ndarray],
-                   timeout: float = 120.0) -> List[np.ndarray]:
+                   timeout: Optional[float] = None,
+                   priority: str = "bulk") -> List[np.ndarray]:
         """Ring all-gather: every rank ends with the concatenation of
         all ranks' (variable-size) shards."""
-        return self.all_gather_async(shards).wait(timeout)
+        return self.all_gather_async(shards,
+                                     priority=priority).wait(timeout)
 
     def broadcast(self, array: np.ndarray, root: int = 0,
-                  timeout: float = 120.0) -> List[np.ndarray]:
+                  timeout: Optional[float] = None,
+                  priority: str = "bulk") -> List[np.ndarray]:
         """Pipelined chain broadcast of ``array`` from ``root``; returns
         one output per rank (the root's is a read-only alias)."""
-        return self.broadcast_async(array, root).wait(timeout)
+        return self.broadcast_async(array, root,
+                                    priority=priority).wait(timeout)
 
     def all_to_all(self, mats: List[np.ndarray],
-                   timeout: float = 120.0) -> List[np.ndarray]:
+                   timeout: Optional[float] = None,
+                   priority: str = "bulk") -> List[np.ndarray]:
         """mats[r] has shape (n_ranks, k): row j goes to rank j."""
-        return self.all_to_all_async(mats).wait(timeout)
+        return self.all_to_all_async(mats,
+                                     priority=priority).wait(timeout)
 
     def barrier(self, timeout: float = 60.0) -> None:
         """Block (in virtual time) until every rank reaches the barrier."""
@@ -476,12 +593,19 @@ class JcclWorld:
             "peak_live_collectives": self.peak_live,
             "live_collectives": len(self._live),
             "inflight_tags": len(self._tags),
+            "class_dispatched": {
+                k: sum(ch.class_dispatched[k] for ch in self.channels)
+                for k in PRIORITY_CLASSES},
+            "priority_overtakes": sum(ch.priority_overtakes
+                                      for ch in self.channels),
+            "class_latency": self.class_latency_stats(),
         }
 
 
 def build_world(n_ranks: int = 2, lib_kind: str = "shift",
                 nics_per_host: int = 2, probe_interval: float = 5e-3,
-                max_chunk_bytes: int = 1 << 16, strict_order: bool = True,
+                max_chunk_bytes: int = DEFAULT_MAX_CHUNK_BYTES,
+                strict_order: bool = True,
                 fast: bool = True, channels: int = 1,
                 **world_kw) -> Tuple[Cluster, List, JcclWorld]:
     """Scenario-harness entry point: a fresh cluster + per-rank libs + a

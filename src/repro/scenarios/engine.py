@@ -31,6 +31,13 @@ Workloads, in increasing weight:
   fault timeline, with request-level invariants (no dropped requests,
   no duplicated/truncated/corrupted tokens — byte-exact against the
   single-host reference run).
+* ``mixed`` — all three latency classes live at once (DESIGN.md §10):
+  every round issues bulk gradient-bucket allreduces, then a small
+  latency-critical serving-style gather that must overtake them at the
+  dispatch queues, while a real ``CheckpointStore`` replicates
+  checkpoints over the fabric as background broadcasts. Verifies that
+  priority never breaks byte-identity or exactly-once, and the
+  invariants assert no class starves (``RunResult.class_latency``).
 
 Every run returns a :class:`RunResult` whose :meth:`RunResult.fingerprint`
 is a pure function of the virtual-clock execution — same seed implies an
@@ -105,6 +112,11 @@ class RunResult:
     requests_done: int = 0
     requests_failed: int = 0
     token_mismatches: int = 0
+    # per-latency-class completion stats (mixed workload only): class ->
+    # {count, p50_virtual_ms, p99_virtual_ms} from
+    # JcclWorld.class_latency_stats. The invariants require every class
+    # to have completed work on a completed run (no starvation).
+    class_latency: Optional[Dict[str, Dict[str, float]]] = None
 
     @property
     def ok(self) -> bool:
@@ -128,6 +140,9 @@ class RunResult:
             tuple((c["chunks_assigned"], c["chunks_delivered"])
                   for c in self.channel_stats)
             if self.channel_stats is not None else None,
+            tuple((k, s["count"], s["p50_virtual_ms"], s["p99_virtual_ms"])
+                  for k, s in sorted(self.class_latency.items()))
+            if self.class_latency is not None else None,
         )
 
 
@@ -778,6 +793,98 @@ def run_serving(scenario: Scenario, seed: int = 0, n_requests: int = 4,
 
 
 # ---------------------------------------------------------------------------
+# mixed latency-class workload
+# ---------------------------------------------------------------------------
+
+
+def run_mixed(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
+              elems: int = 1 << 14, buckets: int = 3,
+              max_rounds: int = 400, probe_interval: float = 5e-3,
+              fast: bool = True, channels: int = 2, ckpt_every: int = 4,
+              nics_per_host: Optional[int] = None) -> RunResult:
+    """All three latency classes concurrently under the fault timeline
+    (DESIGN.md §10) — the scheduling twin of ``overlap_allreduce``.
+
+    Every round issues ``buckets`` BULK gradient-bucket allreduces and
+    then a small LATENCY-CRITICAL serving-style gather; because the
+    gather is issued last, it only finishes early if the classful
+    dispatch queues actually reorder its chunks past the queued bulk
+    backlog. Every ``ckpt_every`` rounds a real
+    :class:`~repro.checkpoint.CheckpointStore` saves a small state tree,
+    whose fabric replication rides as BACKGROUND broadcasts that yield
+    to everything and are only drained at the end.
+
+    Verified per round: the gather's reconstruction is byte-identical
+    to its input and every bucket's sum is exact — priority reordering
+    must never break byte-identity or exactly-once. The harvested
+    ``RunResult.class_latency`` lets the invariants assert that no
+    class starved (every class completed > 0 works).
+    """
+    from repro.checkpoint import CheckpointStore
+    from repro.collectives import CollectiveError, build_world
+
+    result = RunResult(scenario=scenario.name, workload="mixed",
+                       seed=seed, min_concurrency=2)
+    cluster, libs, world = build_world(
+        n_ranks=n_ranks, probe_interval=probe_interval,
+        max_chunk_bytes=1 << 12, strict_order=False, fast=fast,
+        channels=channels,
+        nics_per_host=nics_per_host or max(2, channels))
+    _observe(cluster, libs, result)
+    ckpt_dir = tempfile.mkdtemp(prefix="repro-mixed-ckpt-")
+    store = CheckpointStore(ckpt_dir, keep=2)
+    store.attach_world(world)
+    t0 = cluster.sim.now
+    scenario.schedule(cluster, t0)
+    deadline = t0 + scenario.duration
+    rng = np.random.RandomState(seed)
+    mismatched = 0
+    timeout = scenario.duration + 1.0
+    horizon = t0 + min(scenario.duration,
+                       _traffic_horizon(scenario, probe_interval))
+    try:
+        while cluster.sim.now < horizon or (
+                cluster.sim.now < deadline and result.rounds < max_rounds):
+            if result.rounds % ckpt_every == 0:
+                store.save(result.rounds,
+                           {"w": rng.randn(256).astype(np.float32)},
+                           {"reason": "mixed-workload"})
+            arrays = [rng.randn(elems).astype(np.float32)
+                      for _ in range(n_ranks)]
+            expect = np.sum(arrays, axis=0)
+            bounds = world.aligned_bucket_bounds(elems, 4,
+                                                 elems * 4 // buckets)
+            works = [world.allreduce_async([a[lo:hi] for a in arrays],
+                                           priority="bulk")
+                     for lo, hi in bounds]
+            small = rng.randn(256).astype(np.float32)
+            crit = world.gather_replicated_async(
+                small, priority="latency_critical")
+            world.wait_all(works + [crit], timeout=timeout)
+            for rec in crit.result():
+                if not np.array_equal(rec, small):
+                    mismatched += 1
+            for arr in arrays:
+                if not np.allclose(arr, expect, atol=1e-4):
+                    mismatched += 1
+            result.rounds += 1
+        store.drain_stream(timeout)
+        result.completed = result.rounds > 0
+    except CollectiveError:
+        result.aborted = True
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+    cluster.sim.run(until=deadline + 0.05)
+    result.payload_mismatches = mismatched
+    result.event_count = cluster.sim._executed
+    result.sim_elapsed = cluster.sim.now - t0
+    snap = world.stats_snapshot()
+    _from_snapshot(snap, result)
+    result.class_latency = snap["class_latency"]
+    return result
+
+
+# ---------------------------------------------------------------------------
 # campaign runner
 # ---------------------------------------------------------------------------
 
@@ -805,6 +912,7 @@ WORKLOADS: Dict[str, Callable[..., RunResult]] = {
     "ddp": run_ddp,
     "ddp_bucketed": run_ddp_bucketed,
     "serving": run_serving,
+    "mixed": run_mixed,
 }
 
 

@@ -31,7 +31,10 @@ overlap floor (``RunResult.min_concurrency``) must have actually run
 that many collectives simultaneously (``peak_concurrency`` — the
 overlap claim is vacuous otherwise), and after a completed run no
 in-flight tag entries may remain in ``JcclWorld._tags``
-(``leaked_tags`` — cross-collective tag hygiene).
+(``leaked_tags`` — cross-collective tag hygiene). Runs that drive every
+latency class (``RunResult.class_latency``, the mixed workload) must
+complete work in EVERY class — classful dispatch may reorder, never
+starve (DESIGN.md §10).
 
 Scenario expectations (masked vs. propagated, minimum fallback count,
 recovery) are checked alongside: a fault-tolerance claim is vacuous if
@@ -86,6 +89,18 @@ def check_invariants(result: RunResult, scenario: Scenario) -> List[str]:
     if result.leaked_tags and result.completed and not result.aborted:
         v.append(f"tag leak: {result.leaked_tags} in-flight tag entries "
                  f"left in JcclWorld._tags after completion")
+    # Latency-class starvation: a workload that drives every priority
+    # class (the mixed workload harvests RunResult.class_latency) must
+    # see every class actually complete work — latency-critical
+    # preference that starves bulk or background would otherwise pass
+    # unnoticed as long as the favored class stayed fast.
+    if (result.class_latency is not None and result.completed
+            and not result.aborted):
+        starved = sorted(k for k, s in result.class_latency.items()
+                         if not s.get("count"))
+        if starved:
+            v.append(f"class starvation: {starved} completed zero works "
+                     f"under mixed-class load")
 
     # -- world-level notify counters ----------------------------------------
     if result.duplicate_notifies:

@@ -1,3 +1,7 @@
+"""Fault-tolerant model serving on the JCCL fabric: request scheduling
+plus single-host and tensor-parallel decode engines whose collectives
+ride the latency-critical dispatch class (DESIGN.md §10)."""
+
 from .engine import ServeEngine  # noqa: F401
 from .scheduler import Request, RequestScheduler  # noqa: F401
 from .tp import TPServeEngine  # noqa: F401

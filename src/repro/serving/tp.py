@@ -122,7 +122,8 @@ class TPServeEngine:
         mat = np.zeros((n, width), dtype=np.uint8)
         mat.reshape(-1)[:flat.size] = flat
         mats = [mat.copy() for _ in range(n)]
-        return mat, self.world.all_to_all_async(mats)
+        return mat, self.world.all_to_all_async(
+            mats, priority="latency_critical")
 
     def _expert_combine(self, mat: np.ndarray, dispatch) -> None:
         """Verify the dispatch leg, then run the combine leg (the return
@@ -133,7 +134,8 @@ class TPServeEngine:
             for i in range(n):
                 if not np.array_equal(outs[j][i], mat[j]):
                     self.reconstruction_mismatches += 1
-        combine = self.world.all_to_all_async([o.copy() for o in outs])
+        combine = self.world.all_to_all_async([o.copy() for o in outs],
+                                              priority="latency_critical")
         self.world.wait_all([combine], timeout=self.timeout)
         for back in combine.result():
             if not np.array_equal(back, mat):
@@ -144,7 +146,11 @@ class TPServeEngine:
 
         Issues EVERY work of the step before waiting on any of them —
         the logits all-gather, one K/V-row all-gather per layer, and
-        (MoE) the expert dispatch — so faults land mid-overlap; then
+        (MoE) the expert dispatch — so faults land mid-overlap. All of
+        a step's works carry the ``latency_critical`` class: a decode
+        step is a tail-latency SLO, so its chunks overtake queued bulk
+        gradient buckets and background checkpoint streams at the
+        per-(rank, peer) dispatch queues (DESIGN.md §10). It then
         waits the batch, byte-verifies each reconstruction against the
         local truth, and runs the MoE combine leg. Returns the logits
         rebuilt FROM FABRIC BYTES as a device array: the sampler only
@@ -157,7 +163,8 @@ class TPServeEngine:
         payloads = {"logits": _bytes_of(lg)}
         if cache is not None and prev_len is not None:
             payloads.update(self._step_kv_bytes(cache, prev_len))
-        works = {name: self.world.gather_replicated_async(b)
+        works = {name: self.world.gather_replicated_async(
+                     b, priority="latency_critical")
                  for name, b in payloads.items()}
         moe = None
         if self.model.cfg.family == "moe" and "kv0" in payloads:

@@ -1,1 +1,5 @@
+"""Data-parallel training on the JCCL fabric: bucketed/overlapped DDP
+(bulk-class gradient collectives), straggler mitigation, and
+fault-injected end-to-end runs."""
+
 from .trainer import DDPTrainer, TrainerConfig, TrainRun  # noqa: F401

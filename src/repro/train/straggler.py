@@ -22,6 +22,8 @@ from repro.core.shift import ShiftLib, ShiftQP
 
 @dataclasses.dataclass
 class StragglerConfig:
+    """Detection/action thresholds for the straggler monitor."""
+
     ewma: float = 0.5             # smoothing of per-rank comm time
     threshold: float = 2.0        # rank is a straggler at N x fleet median
     patience: int = 3             # consecutive slow steps before acting
@@ -29,7 +31,12 @@ class StragglerConfig:
 
 
 class StragglerMonitor:
+    """Watches per-rank communication-time EWMAs and force-fails ranks
+    persistently slower than the fleet median over to their backup NIC
+    (SHIFT's degraded-but-alive straggler mitigation)."""
+
     def __init__(self, libs: List, cfg: Optional[StragglerConfig] = None):
+        """``libs`` are the per-rank ShiftLib handles to migrate."""
         self.libs = libs
         self.cfg = cfg or StragglerConfig()
         self.ewma: Dict[int, float] = {}

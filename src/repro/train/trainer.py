@@ -44,6 +44,9 @@ from repro.optim.compress import int8_compress, int8_decompress
 
 @dataclasses.dataclass
 class TrainerConfig:
+    """Run-length, checkpoint, optimizer and DDP-overlap knobs for
+    :class:`DDPTrainer`."""
+
     steps: int = 100
     ckpt_every: int = 25
     ckpt_dir: str = "/tmp/repro-ckpt"
@@ -69,6 +72,9 @@ class TrainerConfig:
 
 @dataclasses.dataclass
 class TrainRun:
+    """Outcome of one training run: the (time, step, loss) timeline plus
+    fault/recovery counters and communication-time accounting."""
+
     timeline: List[Tuple[float, int, float]]
     restarts: int = 0
     fallbacks: int = 0
@@ -84,8 +90,14 @@ class TrainRun:
 
 
 class DDPTrainer:
+    """Data-parallel trainer over a JcclWorld: per-rank forward/backward,
+    bucketed+overlapped bulk-class gradient all-reduce, periodic
+    checkpointing with background-class replication, and SHIFT-aware
+    fault accounting."""
+
     def __init__(self, cluster, libs, model_cfg, tcfg: TrainerConfig,
                  batch_per_rank: int = 4, seq_len: int = 128):
+        """Build the model, per-rank datasets and checkpoint store."""
         self.cluster = cluster
         self.libs = libs
         self.n = len(libs)
@@ -141,7 +153,11 @@ class DDPTrainer:
         ``ddp_overlap_speedup`` benchmark gates against."""
         bounds = self._grad_buckets(world, grad_vecs[0].size)
         if self.tcfg.overlap:
-            works = [world.allreduce_async([v[lo:hi] for v in grad_vecs])
+            # gradient buckets are explicitly BULK class: they should
+            # pipeline at full busbw but yield the head of the dispatch
+            # queues to latency-critical serving works (DESIGN.md §10)
+            works = [world.allreduce_async([v[lo:hi] for v in grad_vecs],
+                                           priority="bulk")
                      for lo, hi in bounds]
             run.peak_works = max(run.peak_works, len(works))
             world.wait_all(works, timeout=300.0)
@@ -149,16 +165,23 @@ class DDPTrainer:
             run.peak_works = max(run.peak_works, 1)
             for lo, hi in bounds:
                 world.allreduce([v[lo:hi] for v in grad_vecs],
-                                timeout=300.0)
+                                timeout=300.0, priority="bulk")
 
     # ------------------------------------------------------------------
     def train(self, world: JcclWorld,
               on_step: Optional[Callable] = None) -> TrainRun:
+        """Run the configured number of steps on ``world``; returns the
+        :class:`TrainRun` (timeline + fault/comm accounting). Faults on
+        the fabric surface as fallbacks/restarts, not training errors."""
         tcfg = self.tcfg
         run = TrainRun(timeline=[])
         state = self._init_state()
         step = 0
         t = 0.0  # combined (compute + simulated-network) clock
+        # checkpoint saves replicate over the fabric as background-class
+        # traffic that yields to the gradient buckets (and to any
+        # co-located serving works); drained best-effort at run end
+        self.store.attach_world(world)
         shift_libs = [l for l in self.libs if isinstance(l, ShiftLib)]
         last_fallbacks = sum(l.stats.fallbacks for l in shift_libs)
         ckpt_after_fallback_pending = False
@@ -233,6 +256,7 @@ class DDPTrainer:
                 # rebuild the communicator world on fresh QPs
                 raise RestartNeeded(run, state, step, t)
 
+        self.store.drain_stream()
         run.final_step = step
         run.fallbacks = sum(l.stats.fallbacks for l in shift_libs)
         run.recoveries = sum(l.stats.recoveries for l in shift_libs)
@@ -279,6 +303,9 @@ def resume_training(trainer: DDPTrainer, world: JcclWorld, rn: RestartNeeded,
     """Continue a crashed run with a fresh world (baseline restart path)."""
     tcfg = trainer.tcfg
     run, state, step, t = rn.run, rn.state, rn.step, rn.t
+    # re-attach replication to the FRESH world; stream works issued
+    # against the crashed world are dropped, not waited
+    trainer.store.attach_world(world)
     while step < tcfg.steps:
         wall0 = time.time()
         losses, grad_vecs, unflatten = [], [], None
@@ -303,5 +330,6 @@ def resume_training(trainer: DDPTrainer, world: JcclWorld, rn: RestartNeeded,
             on_step(step, t, float(np.mean(losses)))
         if step % tcfg.ckpt_every == 0:
             trainer.store.save(step, state, {"reason": "scheduled"})
+    trainer.store.drain_stream()
     run.final_step = step
     return run

@@ -1,0 +1,284 @@
+"""Latency-class scheduling: priority plumbing, EDF dispatch ordering,
+byte-identity under mixed classes, retire-time purge accounting,
+per-rail chunk-size adaptation, and the mixed campaign workload."""
+
+import numpy as np
+import pytest
+
+from hyp_compat import given, settings, st
+from repro.collectives import (CollectiveError, PRIORITY_CLASSES,
+                               build_world)
+from repro.collectives.channel import SchedulerConfig
+from repro.scenarios import SCENARIOS, run_scenario
+
+
+# ---------------------------------------------------------------------------
+# priority plumbing
+# ---------------------------------------------------------------------------
+
+def test_priority_kwarg_stamps_work_handle():
+    _, _, w = build_world(n_ranks=2, max_chunk_bytes=4096)
+    for klass in PRIORITY_CLASSES:
+        arrays = [np.ones(64, dtype=np.float32) for _ in range(2)]
+        work = w.allreduce_async(arrays, priority=klass)
+        assert work.priority == klass
+        work.wait()
+        assert work.completion_latency is not None
+        assert work.completion_latency >= 0.0
+    stats = w.class_latency_stats()
+    for klass in PRIORITY_CLASSES:
+        assert stats[klass]["count"] == 1
+
+
+def test_invalid_priority_rejected():
+    _, _, w = build_world(n_ranks=2, max_chunk_bytes=4096)
+    arrays = [np.ones(64, dtype=np.float32) for _ in range(2)]
+    with pytest.raises(ValueError, match="priority"):
+        w.allreduce_async(arrays, priority="realtime")
+
+
+def test_default_priority_is_bulk():
+    _, _, w = build_world(n_ranks=2, max_chunk_bytes=4096)
+    arrays = [np.ones(64, dtype=np.float32) for _ in range(2)]
+    work = w.allreduce_async(arrays)
+    assert work.priority == "bulk"
+    work.wait()
+
+
+# ---------------------------------------------------------------------------
+# EDF dispatch ordering
+# ---------------------------------------------------------------------------
+
+def test_critical_overtakes_queued_bulk():
+    """A small latency-critical work issued AFTER a large bulk work must
+    jump the dispatch queues (bounded by the in-flight window) and
+    finish with a lower completion latency; the overtake counter proves
+    the reorder actually happened rather than the critical work merely
+    being cheap."""
+    _, _, w = build_world(n_ranks=2, channels=2, max_chunk_bytes=4096,
+                          src_slots=1)
+    big = [np.ones(4096 * 32, dtype=np.float32) for _ in range(2)]
+    bulk = w.allreduce_async(big, priority="bulk")
+    crit = w.gather_replicated_async(np.arange(64, dtype=np.float32),
+                                     priority="latency_critical")
+    w.wait_all([bulk, crit])
+    assert crit.completion_latency < bulk.completion_latency
+    snap = w.stats_snapshot()
+    assert snap["priority_overtakes"] >= 1
+
+
+def test_fifo_baseline_never_overtakes():
+    """With ``classful`` off every chunk shares one dispatch key: the
+    no-priority baseline the SLO benchmark compares against must show
+    zero overtakes on the same traffic."""
+    _, _, w = build_world(n_ranks=2, channels=2, max_chunk_bytes=4096,
+                          src_slots=1, sched=SchedulerConfig(classful=False))
+    big = [np.ones(4096 * 32, dtype=np.float32) for _ in range(2)]
+    bulk = w.allreduce_async(big, priority="bulk")
+    crit = w.gather_replicated_async(np.arange(64, dtype=np.float32),
+                                     priority="latency_critical")
+    w.wait_all([bulk, crit])
+    assert w.stats_snapshot()["priority_overtakes"] == 0
+
+
+def test_priority_never_breaks_byte_identity():
+    """Classful reordering may change WHEN chunks go out, never what
+    they compute: results must be byte-identical to the FIFO baseline
+    across every collective kind under mixed classes."""
+    rng = np.random.RandomState(7)
+    payloads = [rng.randn(4096 * 8).astype(np.float32) for _ in range(2)]
+    gat = rng.randn(512).astype(np.float32)
+
+    results = []
+    for classful in (True, False):
+        _, _, w = build_world(n_ranks=2, channels=2, max_chunk_bytes=4096,
+                              sched=SchedulerConfig(classful=classful))
+        arrays = [p.copy() for p in payloads]
+        bulk = w.allreduce_async(arrays, priority="bulk")
+        crit = w.gather_replicated_async(gat.copy(),
+                                         priority="latency_critical")
+        bg = w.broadcast_async(gat.copy(), root=0, priority="background")
+        w.wait_all([bulk, crit, bg])
+        results.append((arrays[0].tobytes(),
+                        np.asarray(crit.result()).tobytes(),
+                        np.asarray(bg.result()).tobytes()))
+    assert results[0] == results[1]
+
+
+# ---------------------------------------------------------------------------
+# retire() purge accounting
+# ---------------------------------------------------------------------------
+
+def test_retire_purges_queued_chunks_without_double_decrement():
+    """A stalled high-priority collective with chunks still QUEUED in
+    the dispatch heaps (never posted to the wire) must drain them at
+    retire: nothing dispatches posthumously, no channel queue retains
+    entries, and the scheduler's in-flight counters reconcile to zero
+    (a purge that also decremented delivered-chunk accounting would go
+    negative)."""
+    c, _, w = build_world(n_ranks=2, lib_kind="standard", channels=2,
+                          max_chunk_bytes=4096, src_slots=1)
+    arrays = [np.ones(4096 * 64, dtype=np.float64) for _ in range(2)]
+    c.sim.at(c.sim.now + 1e-4, c.fail_nic, "host1/mlx5_0")
+    work = w.allreduce_async(arrays, priority="latency_critical")
+    with pytest.raises(CollectiveError):
+        work.wait(timeout=5.0)
+    for ch in w.channels:
+        assert ch.queued_chunks() == 0
+        assert ch.queued_chunks(work.cid) == 0
+    assert all(k == 0 for k in w.scheduler.inflight)
+    assert w.scheduler.inflight_by_cid.get(work.cid) is None
+
+
+# ---------------------------------------------------------------------------
+# no-starvation property
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=5, deadline=None)
+@given(rounds=st.integers(min_value=1, max_value=4),
+       bulk_elems=st.sampled_from([1 << 10, 1 << 12]))
+def test_no_class_starves_property(rounds, bulk_elems):
+    """Property: for any mix of per-round class traffic, every class
+    completes all its works — latency preference reorders, never
+    starves (the wait_all barrier would hang, and the per-class
+    histograms would show missing counts, if background never ran)."""
+    _, _, w = build_world(n_ranks=2, channels=2, max_chunk_bytes=4096)
+    for _ in range(rounds):
+        works = [
+            w.broadcast_async(np.ones(bulk_elems, dtype=np.uint8),
+                              root=0, priority="background"),
+            w.allreduce_async([np.ones(bulk_elems, dtype=np.float32)
+                               for _ in range(2)], priority="bulk"),
+            w.gather_replicated_async(np.ones(64, dtype=np.float32),
+                                      priority="latency_critical"),
+        ]
+        w.wait_all(works)
+    stats = w.class_latency_stats()
+    for klass in PRIORITY_CLASSES:
+        assert stats[klass]["count"] == rounds
+
+
+# ---------------------------------------------------------------------------
+# per-rail chunk-size adaptation
+# ---------------------------------------------------------------------------
+
+def test_adaptive_chunk_bytes_tracks_busbw_ratio():
+    """Unit contract of the adaptation curve: a rail at 1/8 the best
+    rail's busbw gets chunks shrunk to the floor fraction, the best
+    rail keeps full-size chunks, equal rails are untouched, and the
+    knob can be switched off."""
+    c, _, w = build_world(n_ranks=2, channels=2, max_chunk_bytes=1 << 16)
+    sched = w.scheduler
+    tel = c.telemetry
+    rails = [ch.rail for ch in w.channels]
+    full = w.max_chunk_bytes
+
+    tel.busbw_ewma[rails[0]] = 10.0
+    tel.busbw_ewma[rails[1]] = 80.0
+    assert sched.adaptive_chunk_bytes(1) == full          # best rail
+    assert sched.adaptive_chunk_bytes(0) == full // 8     # floor = 1/8
+
+    tel.busbw_ewma[rails[0]] = 40.0
+    assert sched.adaptive_chunk_bytes(0) == full // 2     # half-speed
+
+    tel.busbw_ewma[rails[0]] = 80.0
+    assert sched.adaptive_chunk_bytes(0) == full          # equal rails
+
+    sched.cfg = SchedulerConfig(adapt_chunk_size=False)
+    tel.busbw_ewma[rails[0]] = 10.0
+    assert sched.adaptive_chunk_bytes(0) == full          # knob off
+
+
+def test_adaptive_chunk_bytes_degenerate_cases():
+    """Single-channel worlds and rails without telemetry data must pass
+    through full-size chunks (no adaptation without a comparison)."""
+    _, _, w1 = build_world(n_ranks=2, max_chunk_bytes=1 << 16)
+    assert w1.scheduler.adaptive_chunk_bytes(0) == w1.max_chunk_bytes
+    _, _, w2 = build_world(n_ranks=2, channels=2, max_chunk_bytes=1 << 16)
+    assert w2.scheduler.adaptive_chunk_bytes(0) == w2.max_chunk_bytes
+
+
+# ---------------------------------------------------------------------------
+# wait timeout default + error context
+# ---------------------------------------------------------------------------
+
+def test_wait_timeout_default_and_error_context():
+    """``Work.wait()`` without a timeout uses the world-level default,
+    and the resulting CollectiveError names the collective: cid, kind
+    and latency class — enough to identify WHICH work of a mixed batch
+    stalled without reproducing the run."""
+    c, _, w = build_world(n_ranks=2, lib_kind="standard",
+                          max_chunk_bytes=4096, wait_timeout=5.0)
+    assert w.wait_timeout == 5.0
+    arrays = [np.ones(4096 * 16, dtype=np.float64) for _ in range(2)]
+    c.sim.at(c.sim.now + 1e-4, c.fail_nic, "host1/mlx5_0")
+    work = w.allreduce_async(arrays, priority="latency_critical")
+    with pytest.raises(CollectiveError) as ei:
+        work.wait()   # no timeout argument: world default applies
+    msg = str(ei.value)
+    assert f"cid={work.cid}" in msg
+    assert "allreduce" in msg
+    assert "latency_critical" in msg
+
+
+# ---------------------------------------------------------------------------
+# checkpoint background replication
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_store_streams_background_replicas(tmp_path):
+    from repro.checkpoint import CheckpointStore
+
+    _, _, w = build_world(n_ranks=2, max_chunk_bytes=4096)
+    store = CheckpointStore(str(tmp_path), stream_limit=1 << 12)
+    assert store.streamed_saves == 0
+    store.save(1, {"w": np.ones(256, dtype=np.float32)}, {})
+    assert store.streamed_saves == 0          # no world attached: local only
+    store.attach_world(w)
+    store.save(2, {"w": np.ones(256, dtype=np.float32)}, {})
+    assert store.streamed_saves == 1
+    assert 0 < store.streamed_bytes <= 1 << 12
+    assert store.drain_stream(timeout=30.0) == 1
+    assert w.class_latency_stats()["background"]["count"] == 1
+
+
+def test_checkpoint_stream_swallows_fabric_failure(tmp_path):
+    """Replication is best-effort: the checkpoint is durably committed
+    locally before streaming, so a dead fabric must neither raise out
+    of ``save`` nor out of ``drain_stream``."""
+    from repro.checkpoint import CheckpointStore
+
+    c, _, w = build_world(n_ranks=2, lib_kind="standard",
+                          max_chunk_bytes=4096)
+    store = CheckpointStore(str(tmp_path), stream_limit=1 << 12)
+    store.attach_world(w)
+    c.fail_nic("host0/mlx5_0")
+    c.fail_nic("host1/mlx5_0")
+    store.save(1, {"w": np.ones(256, dtype=np.float32)}, {})
+    done = store.drain_stream(timeout=2.0)    # stalled works: swallowed
+    assert done == 0
+    assert store.latest_step() == 1           # local commit survived
+
+
+# ---------------------------------------------------------------------------
+# mixed campaign workload
+# ---------------------------------------------------------------------------
+
+def test_mixed_workload_clean_and_deterministic():
+    r1 = run_scenario(SCENARIOS["baseline_clean"], workload="mixed",
+                      fast=True)
+    assert r1.ok, r1.violations
+    assert r1.class_latency is not None
+    for klass in PRIORITY_CLASSES:
+        assert r1.class_latency[klass]["count"] > 0
+    r2 = run_scenario(SCENARIOS["baseline_clean"], workload="mixed",
+                      fast=True)
+    assert r1.fingerprint() == r2.fingerprint()
+
+
+def test_mixed_workload_masks_rail_kill():
+    r = run_scenario(SCENARIOS["rail_kill_striped"], workload="mixed",
+                     fast=True)
+    assert r.ok, r.violations
+    assert r.fallbacks >= 1
+    for klass in PRIORITY_CLASSES:
+        assert r.class_latency[klass]["count"] > 0

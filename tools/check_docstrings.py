@@ -20,7 +20,8 @@ from pathlib import Path
 REPO = Path(__file__).resolve().parent.parent
 
 #: packages whose public API must be fully documented
-AUDITED = ("src/repro/collectives", "src/repro/core")
+AUDITED = ("src/repro/collectives", "src/repro/core",
+           "src/repro/serving", "src/repro/train")
 
 
 def _public(name: str) -> bool:
