@@ -86,6 +86,20 @@ Benchmarks
     adapted skew strictly below fixed skew — all absolute floors plus
     the 20% rule.
 
+``hierarchical_busbw``
+    Two-tier hierarchical allreduce (DESIGN.md §11) on an asymmetric
+    2-pod fabric (2 rails/host at 100 Gbps + 10 Gbps DCN uplinks),
+    VIRTUAL time: a flat ring allreduce — whose cross-pod hops the
+    scheduler resteers onto the thin DCN links — vs the hierarchical
+    reduce-scatter / compressed cross-pod exchange / all-gather
+    pipeline with int8 error feedback. Gated on two absolute floors
+    plus the 20% rule: hierarchical-compressed must finish >= 2x
+    faster than flat (``wallclock_ratio``, virtual wall) and move
+    >= 3x fewer DCN bytes (``dcn_bytes_ratio``, from the fabric's
+    per-tier byte accounting) — a miss means the topology-aware
+    decomposition or the DCN compression stopped working, which is a
+    correctness bug in the hierarchical path, not a perf regression.
+
 ``fallback_latency``
     Max virtual-time fallback latency over the sender_nic_down scenario
     in fast mode — a determinism canary: it must not drift at all.
@@ -131,6 +145,8 @@ GATED_RATIOS = {
     "latency_slo.p99_ratio": False,
     "latency_slo.bulk_retention": True,
     "latency_slo.skew_ratio_adapted": False,
+    "hierarchical_busbw.wallclock_ratio": True,
+    "hierarchical_busbw.dcn_bytes_ratio": True,
 }
 TOLERANCE = 0.20
 # Absolute floors (not baseline-relative), all in deterministic virtual
@@ -154,6 +170,12 @@ DDP_OVERLAP_MIN_RATIO = 1.2
 # scheduler rather than a perf regression.
 SLO_MAX_P99_RATIO = 2.0
 SLO_MIN_BULK_RETENTION = 0.9
+# hierarchical allreduce on the asymmetric 2-pod fabric (ISSUE-8
+# acceptance floors, both deterministic virtual-time/byte-count
+# ratios): the two-tier compressed pipeline must beat the flat ring
+# by >= 2x on virtual wall clock AND move >= 3x fewer DCN bytes.
+HIER_MIN_WALLCLOCK_RATIO = 2.0
+HIER_MIN_DCN_BYTES_RATIO = 3.0
 
 
 def bench_fig5_msg_rate(msg_size: int = 1 << 16, duration: float = 2.0):
@@ -666,6 +688,70 @@ def bench_latency_slo(rounds: int = 40, elems: int = 1 << 14,
     }
 
 
+def bench_hierarchical_busbw(n_ranks: int = 4, n_pods: int = 2,
+                             elems: int = 1 << 16, rounds: int = 3):
+    """Hierarchical vs flat allreduce on the asymmetric 2-pod fabric,
+    all VIRTUAL time (deterministic).
+
+    Three runs on identical 2-pod worlds (2 ranks/pod, 2 rails/host at
+    100 Gbps plus the two 10 Gbps DCN uplinks, 3 channels = 2 rails +
+    dcn0): ``flat`` is the plain ring allreduce — the scheduler's
+    path-feasibility filter resteers every cross-pod hop onto the thin
+    DCN links, so the whole ring drains at DCN speed; ``hier`` is the
+    two-tier pipeline (intra-pod reduce-scatter, direct cross-pod
+    shard exchange, intra-pod all-gather) uncompressed; ``hier_c``
+    adds int8 error-feedback compression on the cross-pod stage only.
+    Gates (absolute floors + the 20% rule): ``wallclock_ratio`` =
+    flat/hier_c virtual wall >= 2.0, ``dcn_bytes_ratio`` = flat/hier_c
+    DCN tx bytes >= 3.0 (from ``Cluster.tier_bytes()``)."""
+    import numpy as np
+    from repro.collectives import build_world
+
+    def one(mode):
+        cluster, _, world = build_world(
+            n_ranks=n_ranks, channels=3, nics_per_host=2,
+            n_pods=n_pods, max_chunk_bytes=1 << 14)
+        rng = np.random.RandomState(0)
+        feedback = {}
+        t0 = cluster.sim.now
+        for _ in range(rounds):
+            arrays = [rng.randn(elems).astype(np.float32)
+                      for _ in range(n_ranks)]
+            if mode == "flat":
+                world.allreduce(arrays)
+            else:
+                world.hierarchical_allreduce(
+                    arrays, compress=(mode == "hier_c"),
+                    feedback=feedback)
+        elapsed = cluster.sim.now - t0
+        tiers = cluster.tier_bytes()
+        return {
+            "virtual_ms": round(elapsed * 1e3, 6),
+            "dcn_tx_bytes": tiers["dcn"]["tx_bytes"],
+            "rail_tx_bytes": tiers["rail"]["tx_bytes"],
+        }
+
+    flat = one("flat")
+    hier = one("hier")
+    hier_c = one("hier_c")
+    return {
+        "config": {"n_ranks": n_ranks, "n_pods": n_pods, "elems": elems,
+                   "rounds": rounds,
+                   "note": "virtual time + per-tier byte counters "
+                           "(deterministic); flat = ring allreduce with "
+                           "cross-pod hops resteered onto 10 Gbps DCN, "
+                           "hier = two-tier pipeline, hier_c = + int8 "
+                           "error-feedback DCN compression"},
+        "flat_ring": flat,
+        "hierarchical": hier,
+        "hierarchical_compressed": hier_c,
+        "wallclock_ratio": round(flat["virtual_ms"]
+                                 / hier_c["virtual_ms"], 3),
+        "dcn_bytes_ratio": round(flat["dcn_tx_bytes"]
+                                 / max(hier_c["dcn_tx_bytes"], 1), 3),
+    }
+
+
 def bench_allreduce(n_ranks: int = 2, elems: int = 1 << 16,
                     rounds: int = 12):
     import numpy as np
@@ -710,6 +796,7 @@ def run_suite(quick: bool = False) -> dict:
     ddp_overlap = bench_ddp_overlap()
     serving = bench_serving_tp()
     latency_slo = bench_latency_slo()
+    hier = bench_hierarchical_busbw()
     return {
         "schema": SCHEMA,
         "note": "before = pre-fast-path configuration (legacy per-WQE "
@@ -727,6 +814,7 @@ def run_suite(quick: bool = False) -> dict:
             "ddp_overlap_speedup": ddp_overlap,
             "serving_tp": serving,
             "latency_slo": latency_slo,
+            "hierarchical_busbw": hier,
         },
     }
 
@@ -878,6 +966,24 @@ def emit(path: str, quick: bool = False,
               f"reduce degraded-rail skew (adapted "
               f"{ls['skew_ratio_adapted']} vs fixed "
               f"{ls['skew_ratio_fixed']})", flush=True)
+        return 1
+    hb = b["hierarchical_busbw"]
+    print(f"# perf: hierarchical allreduce "
+          f"{hb['flat_ring']['virtual_ms']:.3f}ms flat -> "
+          f"{hb['hierarchical_compressed']['virtual_ms']:.3f}ms "
+          f"hier+int8 virtual ({hb['wallclock_ratio']:.2f}x), DCN bytes "
+          f"{hb['flat_ring']['dcn_tx_bytes']} -> "
+          f"{hb['hierarchical_compressed']['dcn_tx_bytes']} "
+          f"({hb['dcn_bytes_ratio']:.2f}x fewer)", flush=True)
+    if hb["wallclock_ratio"] < HIER_MIN_WALLCLOCK_RATIO:
+        print(f"# PERF HIERARCHICAL FLOOR: wallclock_ratio "
+              f"{hb['wallclock_ratio']} < required "
+              f"{HIER_MIN_WALLCLOCK_RATIO}", flush=True)
+        return 1
+    if hb["dcn_bytes_ratio"] < HIER_MIN_DCN_BYTES_RATIO:
+        print(f"# PERF HIERARCHICAL FLOOR: dcn_bytes_ratio "
+              f"{hb['dcn_bytes_ratio']} < required "
+              f"{HIER_MIN_DCN_BYTES_RATIO}", flush=True)
         return 1
     # invariant violations fail UNCONDITIONALLY — no baseline needed: a
     # fast datapath that breaks exactly-once/zero-copy/ordering is a

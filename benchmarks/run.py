@@ -9,8 +9,10 @@ campaign (pingpong workload over the full library), the concurrent-
 collective overlap smoke (overlap_allreduce + bucketed-overlapped DDP
 with >= 4 works in flight), the fault-tolerant TP serving smoke
 (request-level invariants under rail kills, both datapaths), the
-mixed latency-class smoke (priority scheduling under faults) and fig7
-— and exits non-zero on any invariant violation: the fast CI pass.
+mixed latency-class smoke (priority scheduling under faults), the
+asymmetric-topology smoke (hierarchical allreduce on a 2-pod world
+under DCN degradation/partition scenarios) and fig7 — and exits
+non-zero on any invariant violation: the fast CI pass.
 
 ``--matrix-md PATH`` additionally appends the per-class completion-
 latency p50/p99 table (the mixed workload's class histograms) to the
@@ -187,6 +189,32 @@ def mixed_rows(fast: bool = True):
     return out
 
 
+def hierarchical_rows(fast: bool = True):
+    """Asymmetric-topology smoke: the hierarchical_allreduce workload
+    (two-tier reduce-scatter / compressed cross-pod exchange /
+    all-gather on a 2-pod world, DESIGN.md §11) under a clean fabric,
+    a 4x DCN bandwidth degradation (must ride it out with ZERO
+    fallbacks) and a transient-blip-then-permanent DCN partition (must
+    fail over dcn0 -> dcn1). Honours ``fast`` so CI covers both
+    datapaths. The payload invariant is byte-identity across ranks
+    plus closeness to the true sum within the int8 error-feedback
+    bound."""
+    from repro.scenarios import SCENARIOS, run_scenario
+
+    names = ("baseline_clean", "dcn_degrade", "dcn_partition_transient")
+    out = []
+    for name in names:
+        r = run_scenario(SCENARIOS[name],
+                         workload="hierarchical_allreduce", fast=fast)
+        lat_us = max(r.fallback_latencies) * 1e6 if r.fallback_latencies \
+            else float("nan")
+        status = "ok" if r.ok else _violation_status(r.violations)
+        out.append((f"hierarchical/{r.scenario}", lat_us,
+                    f"{status}|fb={r.fallbacks}|rounds={r.rounds}|"
+                    f"events={r.event_count}"))
+    return out
+
+
 def class_latency_markdown(fast: bool = True):
     """Per-class completion-latency p50/p99 table for the CI job summary
     (published alongside the campaign matrix): the ``mixed`` workload on
@@ -286,6 +314,8 @@ def main(smoke: bool = False, bench_json: str = None,
              lambda: serving_rows(fast=fast)),
             ("mixed (latency classes under faults)",
              lambda: mixed_rows(fast=fast)),
+            ("hierarchical (asymmetric 2-pod topology)",
+             lambda: hierarchical_rows(fast=fast)),
             ("fig7 (verb overhead)", fig7_verbs_rows),
         ]
     else:

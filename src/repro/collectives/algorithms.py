@@ -31,7 +31,7 @@ independent, so they ride different rails concurrently):
 
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -299,6 +299,275 @@ class _PipelineBroadcast(_Collective):
 
     def done(self) -> bool:
         return self.done_ranks == self.world.n_ranks
+
+
+class _HierarchicalAllReduce(_Collective):
+    """Two-tier allreduce for multi-pod clusters (DESIGN.md §11):
+    intra-pod ring reduce-scatter, cross-pod exchange of each owned
+    shard between the pods' counterpart owners (optionally
+    int8-compressed with error feedback), intra-pod ring all-gather.
+
+    Rank layout follows the fabric's block partition: rank r sits in
+    pod ``r // R`` with local index ``j = r % R`` (R ranks per pod).
+    After the pod-local reduce-scatter, local rank j owns shard
+    ``(j + 1) % R`` of each bucket fully pod-reduced — the same
+    ownership convention as the flat ring. The owner then exchanges
+    that shard DIRECTLY with its counterparts (same local index) in
+    every other pod over the DCN tier, and each owner computes the
+    final shard as the sum of every pod's contribution **in pod-index
+    order, its own contribution passed through the same
+    compress/decompress round-trip** — so the result is byte-identical
+    across pods regardless of arrival order or which side compressed.
+    Compression error (what int8 dropped of THIS pod's partial sum) is
+    carried in the caller's ``feedback`` dict keyed ``(pod, bucket,
+    shard)`` and fed into the next step's compression — no gradient
+    mass is lost, only deferred (see ``repro.optim.compress``).
+
+    All three stages dispatch through the ordinary cid-keyed send path:
+    SHIFT fallback, EDF latency classes and the campaign invariants
+    apply unchanged on both tiers. Cross-pod chunks home on the DCN
+    channels (the scheduler's path-feasibility filter would route them
+    there anyway); intra-pod chunks stripe over the rails by bucket.
+    """
+
+    kind = "hier_allreduce"
+
+    def __init__(self, world, arrays: List[np.ndarray], op: str = "sum",
+                 compress: bool = True,
+                 feedback: Optional[Dict] = None):
+        super().__init__(world)
+        n = world.n_ranks
+        pods = world.n_pods
+        if pods < 2:
+            raise ValueError("hierarchical allreduce needs n_pods >= 2")
+        if n % pods != 0:
+            raise ValueError(f"n_ranks={n} not divisible by n_pods={pods}")
+        if op != "sum":
+            raise ValueError("hierarchical allreduce supports op='sum' "
+                             "only (compression commutes with sums)")
+        assert len(arrays) == n
+        self.op = op
+        self.compress = compress
+        self.feedback = feedback if feedback is not None else {}
+        self.pods = pods
+        self.R = n // pods
+        self.arrays = arrays
+        self.flat = [a.reshape(-1) for a in arrays]
+        self.dtype = self.flat[0].dtype
+        if self.dtype != np.float32:
+            raise ValueError("hierarchical allreduce is float32-only "
+                             "(the int8 wire format is fixed)")
+        self.itemsize = self.dtype.itemsize
+        total = self.flat[0].size
+        max_chunk_elems = world.max_chunk_bytes // self.itemsize
+        if total and max_chunk_elems == 0:
+            raise ValueError(
+                f"max_chunk_bytes={world.max_chunk_bytes} cannot hold one "
+                f"{self.dtype} element")
+        # bucket so one per-pod shard chunk fits the staging slot (the
+        # compressed X payload is 4 + elems bytes <= elems * 4, so it
+        # fits wherever the raw shard does)
+        self.bucket_elems = min(total, max_chunk_elems * self.R)
+        self.n_buckets = ((total + self.bucket_elems - 1)
+                          // self.bucket_elems if self.bucket_elems else 0)
+        self.rs_steps = self.R - 1
+        # tag layout: [0, X0) intra-pod RS steps, [X0, A0) cross-pod
+        # exchange, [A0, end) intra-pod all-gather
+        self.X0 = self.n_buckets * max(self.rs_steps, 0)
+        self.A0 = self.X0 + self.n_buckets * self.R
+        self.tag_end = self.A0 + self.n_buckets * self.R
+        # per-rank finalize countdown: every rank finalizes R chunks per
+        # bucket (1 own X combine + R-1 all-gather receives)
+        self.remaining = [self.n_buckets * self.R] * n
+        # cross-pod receive buffers: (rank, bucket, shard) -> {src_pod:
+        # packed payload copy}; own packed contribution kept alongside
+        # so the combine sums ALL pods' bytes in pod-index order
+        self._xrecv: Dict[Tuple[int, int, int], Dict[int, np.ndarray]] = {}
+        self._xown: Dict[Tuple[int, int, int], np.ndarray] = {}
+
+    # -- index helpers ------------------------------------------------------
+    def _pod(self, rank: int) -> int:
+        return rank // self.R
+
+    def _local(self, rank: int) -> int:
+        return rank % self.R
+
+    def _lnext(self, rank: int) -> int:
+        return self._pod(rank) * self.R + (self._local(rank) + 1) % self.R
+
+    def _lprev(self, rank: int) -> int:
+        return self._pod(rank) * self.R + (self._local(rank) - 1) % self.R
+
+    def _chunk_bounds(self, bucket: int, chunk: int) -> Tuple[int, int]:
+        b0 = bucket * self.bucket_elems
+        b1 = min(b0 + self.bucket_elems, self.flat[0].size)
+        size = b1 - b0
+        per = (size + self.R - 1) // self.R
+        c0 = b0 + chunk * per
+        c1 = min(b0 + (chunk + 1) * per, b1)
+        return c0, max(c0, c1)
+
+    def _dcn_home(self, bucket: int) -> int:
+        dcn = self.world.dcn_channels
+        return dcn[bucket % len(dcn)] if dcn else bucket
+
+    # -- stage 1: intra-pod ring reduce-scatter -----------------------------
+    def _send_rs(self, rank: int, bucket: int, step: int) -> None:
+        if step >= self.rs_steps:
+            # pod-local reduction complete: this rank owns shard
+            # (local + 1) % R of the bucket — start the cross exchange
+            self._start_x(rank, bucket)
+            return
+        j = self._local(rank)
+        chunk = (j - step) % self.R
+        c0, c1 = self._chunk_bounds(bucket, chunk)
+        self._send(rank, self._lnext(rank), self.flat[rank][c0:c1],
+                   tag=bucket * self.rs_steps + step, home=bucket)
+
+    # -- stage 2: cross-pod compressed exchange -----------------------------
+    def _pack(self, rank: int, bucket: int, shard: int) -> np.ndarray:
+        """Pack this pod's reduced shard for the wire: raw float32
+        bytes, or ``scale || q`` with the quantization residual written
+        back into the feedback dict."""
+        from repro.optim.compress import int8_compress
+
+        c0, c1 = self._chunk_bounds(bucket, shard)
+        vec = self.flat[rank][c0:c1]
+        if not self.compress:
+            return np.ascontiguousarray(vec).view(np.uint8).copy()
+        key = (self._pod(rank), bucket, shard)
+        err = self.feedback.get(key)
+        if err is not None and err.shape != vec.shape:
+            err = None      # bucket layout changed: stale feedback
+        q, scale, new_err = int8_compress(vec, err)
+        self.feedback[key] = new_err
+        buf = np.empty(4 + q.size, dtype=np.uint8)
+        buf[:4].view(np.float32)[0] = scale
+        buf[4:] = q.view(np.uint8)
+        return buf
+
+    def _unpack(self, raw: np.ndarray, elems: int) -> np.ndarray:
+        """Decode one packed contribution back to float32."""
+        from repro.optim.compress import int8_decompress
+
+        if not self.compress:
+            return raw.view(np.float32)
+        scale = raw[:4].view(np.float32)[0]
+        return int8_decompress(raw[4:].view(np.int8), scale)
+
+    def _start_x(self, rank: int, bucket: int) -> None:
+        shard = (self._local(rank) + 1) % self.R
+        packed = self._pack(rank, bucket, shard)
+        self._xown[(rank, bucket, shard)] = packed
+        tag = self.X0 + bucket * self.R + shard
+        for p in range(self.pods):
+            if p == self._pod(rank):
+                continue
+            peer = p * self.R + self._local(rank)
+            self._send(rank, peer, packed, tag=tag,
+                       home=self._dcn_home(bucket))
+        # counterpart payloads may already be buffered: under
+        # concurrent collectives (or a fast DCN) another pod's X chunk
+        # can land BEFORE this rank's own reduce-scatter finishes
+        self._maybe_combine(rank, bucket, shard)
+
+    def _maybe_combine(self, rank: int, bucket: int, shard: int) -> None:
+        """Combine once BOTH sides are ready: this rank's own packed
+        contribution exists (reduce-scatter done) and every other pod's
+        payload has been buffered — whichever happens last triggers."""
+        key = (rank, bucket, shard)
+        if key not in self._xown:
+            return      # own RS not done yet (or already combined)
+        if len(self._xrecv.get(key, ())) >= self.pods - 1:
+            self._combine(rank, bucket, shard)
+
+    def _combine(self, rank: int, bucket: int, shard: int) -> None:
+        """All pods' contributions arrived: sum them in POD-INDEX order
+        (own pod included, through the same pack/unpack round-trip) so
+        every pod's owner materializes byte-identical final bytes."""
+        c0, c1 = self._chunk_bounds(bucket, shard)
+        got = self._xrecv.pop((rank, bucket, shard), {})
+        own = self._xown.pop((rank, bucket, shard))
+        acc = np.zeros(c1 - c0, dtype=np.float32)
+        for p in range(self.pods):
+            raw = own if p == self._pod(rank) else got[p]
+            acc += self._unpack(raw, c1 - c0)
+        self.flat[rank][c0:c1] = acc
+        self._finalize(rank)
+        self._forward_ag(rank, bucket, shard)
+
+    # -- stage 3: intra-pod ring all-gather ---------------------------------
+    def _forward_ag(self, rank: int, bucket: int, shard: int) -> None:
+        nxt = self._lnext(rank)
+        if self.R == 1 or self._local(nxt) == (shard - 1) % self.R:
+            return      # next hop is the shard's owner: chain complete
+        c0, c1 = self._chunk_bounds(bucket, shard)
+        self._send(rank, nxt, self.flat[rank][c0:c1],
+                   tag=self.A0 + bucket * self.R + shard, home=bucket)
+
+    def _finalize(self, rank: int) -> None:
+        self.remaining[rank] -= 1
+
+    # -- actor interface ----------------------------------------------------
+    def start(self) -> None:
+        if self.n_buckets == 0:
+            return
+        for r in range(self.world.n_ranks):
+            for b in range(self.n_buckets):
+                self._send_rs(r, b, 0)
+
+    def on_notify(self, rank: int, peer: int, tag, ep, seq: int) -> None:
+        if not isinstance(tag, int) or not 0 <= tag < self.tag_end:
+            return      # foreign tag
+        if tag < self.X0:
+            self._on_rs(rank, peer, tag, ep, seq)
+        elif tag < self.A0:
+            self._on_x(rank, peer, tag, ep, seq)
+        else:
+            self._on_ag(rank, peer, tag, ep, seq)
+
+    def _on_rs(self, rank: int, peer: int, tag: int, ep, seq: int) -> None:
+        if peer != self._lprev(rank) or peer == rank:
+            return
+        bucket, step = divmod(tag, self.rs_steps)
+        chunk = (self._local(rank) - step - 1) % self.R
+        c0, c1 = self._chunk_bounds(bucket, chunk)
+        stage = ep.staging_slot_view(
+            peer, seq, (c1 - c0) * self.itemsize).view(self.dtype)
+        _reduce(self.flat[rank][c0:c1], stage, self.op)
+        self._send_rs(rank, bucket, step + 1)
+
+    def _on_x(self, rank: int, peer: int, tag: int, ep, seq: int) -> None:
+        bucket, shard = divmod(tag - self.X0, self.R)
+        if (self._local(peer) != self._local(rank)
+                or self._pod(peer) == self._pod(rank)):
+            return      # foreign: not a counterpart owner
+        if (shard - 1) % self.R != self._local(rank):
+            return      # not a shard this rank owns
+        c0, c1 = self._chunk_bounds(bucket, shard)
+        nbytes = (4 + (c1 - c0)) if self.compress \
+            else (c1 - c0) * self.itemsize
+        stage = ep.staging_slot_view(peer, seq, nbytes)
+        # buffer unconditionally: this payload may arrive before the
+        # local reduce-scatter registers its own contribution, and a
+        # stray post-combine duplicate just parks here harmlessly
+        got = self._xrecv.setdefault((rank, bucket, shard), {})
+        got[self._pod(peer)] = np.asarray(stage, dtype=np.uint8).copy()
+        self._maybe_combine(rank, bucket, shard)
+
+    def _on_ag(self, rank: int, peer: int, tag: int, ep, seq: int) -> None:
+        if peer != self._lprev(rank) or peer == rank:
+            return
+        bucket, shard = divmod(tag - self.A0, self.R)
+        c0, c1 = self._chunk_bounds(bucket, shard)
+        stage = ep.staging_slot_view(
+            peer, seq, (c1 - c0) * self.itemsize).view(self.dtype)
+        self.flat[rank][c0:c1] = stage
+        self._finalize(rank)
+        self._forward_ag(rank, bucket, shard)
+
+    def done(self) -> bool:
+        return all(r <= 0 for r in self.remaining)
 
 
 class _AllToAll(_Collective):

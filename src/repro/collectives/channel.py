@@ -88,9 +88,13 @@ class Channel:
         self.world = world
         self.index = index
         self.nic_names = list(nic_names)
-        # rail index this channel's default path rides (telemetry key)
-        self.rail = world.cluster.nic_by_gid[
-            f"{libs[0].host}/{nic_names[0]}"].index
+        # rail index this channel's default path rides (telemetry key),
+        # plus its tier ("rail" intra-pod / "dcn" cross-pod) and link
+        # bandwidth — the scheduler's prior before telemetry exists
+        nic0 = world.cluster.nic_by_gid[f"{libs[0].host}/{nic_names[0]}"]
+        self.rail = nic0.index
+        self.tier = nic0.tier
+        self.link_bandwidth = nic0.link.bandwidth if nic0.link else 0.0
         self.endpoints: List[RankEndpoint] = [
             RankEndpoint(self, r, lib, nic_names[r])
             for r, lib in enumerate(libs)]
@@ -275,6 +279,7 @@ class Channel:
         return {
             "channel": self.index,
             "rail": self.rail,
+            "tier": self.tier,
             "nics": sorted(set(self.nic_names)),
             "chunks_assigned": sched.assigned[self.index],
             "chunks_delivered": self.chunks_delivered,
@@ -399,6 +404,21 @@ class ChannelScheduler:
         # post-recovery picks don't each restart the channel-wide ramp
         self._impaired: List[bool] = [False] * self.n
         self._win_seq = world.cluster.telemetry.window_seq
+        # heterogeneous-fabric awareness: on a multi-tier cluster the
+        # scheduler seeds weights/chunk sizes from link-bandwidth priors
+        # (a DCN channel with no telemetry yet must NOT default to a
+        # mean-rail share) and compares stragglers within a tier only.
+        # Single-tier clusters keep the historical behavior exactly.
+        self._multi_tier = any(ch.tier == "dcn" for ch in world.channels)
+        self._rank_pods: Optional[List[int]] = None
+
+    def _pod_of(self, rank: int) -> int:
+        """Pod membership of ``rank`` (cached from the world's libs)."""
+        if self._rank_pods is None:
+            self._rank_pods = [
+                self.world.cluster.hosts[lib.host].pod
+                for lib in self.world.libs]
+        return self._rank_pods[rank]
 
     # ------------------------------------------------------------------
     # latency classes
@@ -439,6 +459,11 @@ class ChannelScheduler:
             return full
         tel = self.world.cluster.telemetry
         bus = [tel.busbw_ewma.get(ch.rail) for ch in self.world.channels]
+        if self._multi_tier:
+            # link-bandwidth prior: a slow DCN channel gets small chunks
+            # from the first dispatch, not only after telemetry warms up
+            bus = [b if b else ch.link_bandwidth
+                   for b, ch in zip(bus, self.world.channels)]
         known = [b for b in bus if b]
         if len(known) < 2:
             return full
@@ -472,13 +497,20 @@ class ChannelScheduler:
         """Leave-one-out straggler test: rail ``c`` is demoted when its
         latency EWMA exceeds ``straggler_factor`` x the median of the
         OTHER rails' EWMAs (excluding ``c`` keeps a 2-rail straggler
-        from pulling the reference up toward itself)."""
+        from pulling the reference up toward itself). The comparison is
+        SAME-TIER only: a DCN uplink is intrinsically orders of
+        magnitude slower than an intra-pod rail, and judging it against
+        rail latencies would permanently demote a perfectly healthy
+        cross-pod path."""
         cfg = self.cfg
         if lats[c] is None or counts[c] < cfg.straggler_min_samples:
             return False
+        channels = self.world.channels
+        tier = channels[c].tier
         others = [lats[o] for o in range(self.n)
                   if o != c and lats[o] is not None
-                  and counts[o] >= cfg.straggler_min_samples]
+                  and counts[o] >= cfg.straggler_min_samples
+                  and channels[o].tier == tier]
         if not others:
             return False
         return lats[c] > cfg.straggler_factor * median(others)
@@ -512,15 +544,28 @@ class ChannelScheduler:
             elif self._impaired[c]:
                 self._impaired[c] = False
                 self._ramp_start[c] = now
+        # path feasibility: across pods only DCN channels are routable
+        # (rail switches are pod-local), so cross-pod pairs must never
+        # see a rail channel as usable — and vice versa an intra-pod
+        # pair may use the DCN, just at its proportionally small share.
+        cross_pod = (self._multi_tier
+                     and self._pod_of(rank) != self._pod_of(peer))
         bus = [tel.busbw_ewma.get(channels[c].rail) for c in range(self.n)]
         known = [bus[c] for c in range(self.n)
                  if states[c] == HEALTH_OK and bus[c]]
         mean_bw = sum(known) / len(known) if known else 0.0
+        link_bw = [getattr(channels[c], "link_bandwidth", 0.0)
+                   for c in range(self.n)]
+        mean_link_bw = (sum(link_bw) / len(link_bw)) if link_bw else 0.0
         lats = [tel.lat_ewma.get(channels[c].rail) for c in range(self.n)]
         counts = [tel.samples.get(channels[c].rail, 0)
                   for c in range(self.n)]
         weights: List[float] = []
         for c, st in enumerate(states):
+            if cross_pod and channels[c].tier != "dcn":
+                self.demoted[c] = False
+                weights.append(0.0)
+                continue
             if st == HEALTH_DOWN:
                 self.demoted[c] = False
                 weights.append(0.0)
@@ -529,8 +574,18 @@ class ChannelScheduler:
                 self.demoted[c] = False
                 weights.append(cfg.degraded_weight)
                 continue
-            # healthy: proportional to measured busbw (no data -> mean)
-            base = (bus[c] / mean_bw) if (bus[c] and mean_bw) else 1.0
+            # healthy: proportional to measured busbw; before telemetry
+            # exists a multi-tier cluster falls back to the
+            # link-bandwidth PRIOR (a cold DCN channel gets its
+            # proportionally small share, not a mean-rail share) while
+            # single-tier clusters keep the historical no-data -> mean
+            # behavior
+            if bus[c] and mean_bw:
+                base = bus[c] / mean_bw
+            elif self._multi_tier and mean_link_bw:
+                base = link_bw[c] / mean_link_bw
+            else:
+                base = 1.0
             self.demoted[c] = self._is_straggler(c, lats, counts)
             if self.demoted[c]:
                 base = min(base, cfg.straggler_weight)
@@ -659,4 +714,5 @@ class ChannelScheduler:
                 "resteered": self.resteered,
                 "recent": [round(r, 3) for r in self.recent],
                 "weights": [round(x, 4) for x in self.last_weights],
-                "demoted": list(self.demoted)}
+                "demoted": list(self.demoted),
+                "tiers": [ch.tier for ch in self.world.channels]}

@@ -39,8 +39,8 @@ import numpy as np
 from repro.core.fabric import Cluster
 from repro.core.shift import ShiftLib, StandardLib
 
-from .algorithms import (_AllToAll, _Collective, _PipelineBroadcast,
-                         _RingAllGather, _RingAllReduce)
+from .algorithms import (_AllToAll, _Collective, _HierarchicalAllReduce,
+                         _PipelineBroadcast, _RingAllGather, _RingAllReduce)
 from .channel import (PRIORITY_CLASSES, Channel, ChannelScheduler,
                       SchedulerConfig)
 from .endpoint import RankEndpoint, _ListenedCQ  # noqa: F401 (re-export)
@@ -188,6 +188,12 @@ class JcclWorld:
             Channel(self, c, self.libs,
                     [self._nic_name(lib, c, nic) for lib in self.libs])
             for c in range(self.n_channels)]
+        #: pod count of the underlying cluster (1 = flat single-pod)
+        self.n_pods: int = getattr(cluster, "n_pods", 1)
+        #: channel indices riding DCN uplinks (cross-pod tier) — the
+        #: hierarchical allreduce homes its exchange chunks here
+        self.dcn_channels: Tuple[int, ...] = tuple(
+            c for c, ch in enumerate(self.channels) if ch.tier == "dcn")
         self.scheduler = ChannelScheduler(self, config=sched)
         # (channel, receiver, sender, seq) -> (cid, tag) of the in-flight
         # chunk: the cid routes the eventual notify to the right live
@@ -434,6 +440,28 @@ class JcclWorld:
         coll = _RingAllReduce(self, arrays, op)
         return self._launch(coll, lambda: arrays, priority=priority)
 
+    def hierarchical_allreduce_async(self, arrays: List[np.ndarray],
+                                     compress: bool = True,
+                                     feedback: Optional[Dict] = None,
+                                     priority: str = "bulk") -> Work:
+        """Launch the two-tier allreduce (intra-pod reduce-scatter,
+        cross-pod shard exchange over the DCN — int8-compressed with
+        error feedback unless ``compress=False`` — intra-pod
+        all-gather). Requires a multi-pod world (``n_pods >= 2``) with
+        at least one DCN channel; float32 sum only. ``feedback`` is the
+        caller-owned error-feedback dict keyed ``(pod, bucket, shard)``
+        — pass the SAME dict every step so quantization residue carries
+        across steps (see ``repro.optim.compress``). The work's result
+        is ``arrays``, reduced in place."""
+        if self.n_pods >= 2 and not self.dcn_channels:
+            raise ValueError(
+                "hierarchical allreduce needs a DCN channel: build the "
+                "world with channels > nics_per_host so the uplinks are "
+                "striped (e.g. channels=nics_per_host+1)")
+        coll = _HierarchicalAllReduce(self, arrays, compress=compress,
+                                      feedback=feedback)
+        return self._launch(coll, lambda: arrays, priority=priority)
+
     def reduce_scatter_async(self, arrays: List[np.ndarray],
                              op: str = "sum",
                              priority: str = "bulk") -> Work:
@@ -532,6 +560,17 @@ class JcclWorld:
         return self.allreduce_async(arrays, op,
                                     priority=priority).wait(timeout)
 
+    def hierarchical_allreduce(self, arrays: List[np.ndarray],
+                               compress: bool = True,
+                               feedback: Optional[Dict] = None,
+                               timeout: Optional[float] = None,
+                               priority: str = "bulk") -> List[np.ndarray]:
+        """Two-tier (pod-hierarchical) allreduce of ``arrays`` in place;
+        see :meth:`hierarchical_allreduce_async`."""
+        return self.hierarchical_allreduce_async(
+            arrays, compress=compress, feedback=feedback,
+            priority=priority).wait(timeout)
+
     def reduce_scatter(self, arrays: List[np.ndarray], op: str = "sum",
                        timeout: Optional[float] = None,
                        priority: str = "bulk") -> List[np.ndarray]:
@@ -607,6 +646,10 @@ def build_world(n_ranks: int = 2, lib_kind: str = "shift",
                 max_chunk_bytes: int = DEFAULT_MAX_CHUNK_BYTES,
                 strict_order: bool = True,
                 fast: bool = True, channels: int = 1,
+                n_pods: int = 1,
+                dcn_bandwidth: Optional[float] = None,
+                dcn_latency: Optional[float] = None,
+                dcn_loss: float = 0.0,
                 **world_kw) -> Tuple[Cluster, List, JcclWorld]:
     """Scenario-harness entry point: a fresh cluster + per-rank libs + a
     fully wired JcclWorld. Consolidates the setup previously copy-pasted
@@ -616,24 +659,55 @@ def build_world(n_ranks: int = 2, lib_kind: str = "shift",
     collectives across that many rails (requires ``nics_per_host >=
     channels``); SHIFT backup placement is made rail-aware via
     ``ShiftConfig.data_rails`` so channels prefer spare rails over each
-    other's default rails."""
+    other's default rails.
+
+    ``n_pods > 1`` builds the heterogeneous two-tier fabric: rail
+    switches become pod-local and every host gains two DCN uplinks
+    (``dcn0``/``dcn1`` at NIC indices ``nics_per_host`` and
+    ``nics_per_host + 1``, with ``dcn_*`` link parameters — defaults in
+    ``repro.core.fabric.build_cluster``). Pass ``channels =
+    nics_per_host + 1`` to stripe a DCN channel alongside the rails
+    (the hierarchical allreduce requires one). SHIFT backup placement
+    is tier-pinned: rail i falls back to rail ``(i+1) % nics_per_host``
+    and ``dcn0`` to ``dcn1`` — a rail never falls back onto the
+    thousand-times-thinner DCN, and the DCN uplink pair covers each
+    other (the ``dcn_partition_transient`` scenario's failover)."""
     from repro.core import verbs as V
     from repro.core.fabric import build_cluster
     from repro.core.shift import ShiftConfig
 
-    if channels > nics_per_host:
-        raise ValueError(f"channels={channels} > nics_per_host="
-                         f"{nics_per_host}")
+    host_nics = nics_per_host + (2 if n_pods > 1 else 0)
+    if channels > host_nics:
+        raise ValueError(f"channels={channels} > NICs per host="
+                         f"{host_nics}")
     V.reset_registries()
-    cluster = build_cluster(n_hosts=n_ranks, nics_per_host=nics_per_host)
+    cluster_kw = {}
+    if n_pods > 1:
+        cluster_kw["n_pods"] = n_pods
+        if dcn_bandwidth is not None:
+            cluster_kw["dcn_bandwidth"] = dcn_bandwidth
+        if dcn_latency is not None:
+            cluster_kw["dcn_latency"] = dcn_latency
+        if dcn_loss:
+            cluster_kw["dcn_loss"] = dcn_loss
+    cluster = build_cluster(n_hosts=n_ranks, nics_per_host=nics_per_host,
+                            **cluster_kw)
     cluster.fast_datapath = fast
+    backup_overrides = None
+    if n_pods > 1:
+        backup_overrides = {i: (i + 1) % nics_per_host
+                            for i in range(nics_per_host)}
+        backup_overrides[nics_per_host] = nics_per_host + 1
+        backup_overrides[nics_per_host + 1] = nics_per_host
     libs: List = []
     if lib_kind == "shift":
         kv = None
         for r in range(n_ranks):
             lib = ShiftLib(cluster, f"host{r}", kv=kv,
                            config=ShiftConfig(probe_interval=probe_interval,
-                                              data_rails=max(1, channels)))
+                                              data_rails=max(1, channels),
+                                              backup_overrides=(
+                                                  backup_overrides)))
             kv = lib.kv
             libs.append(lib)
     else:

@@ -199,6 +199,13 @@ class Link:
     bandwidth: float = 100 * GBPS  # bytes/sec
     latency: float = 2e-6  # seconds, one-way propagation
     up: bool = True
+    # Declared loss character of the medium (fraction of time the link
+    # drops traffic). Loss is injected DETERMINISTICALLY as scheduled
+    # link-down pulses (:func:`loss_windows`) rather than per-packet
+    # randomness — an in-flight segment whose delivery lands inside a
+    # pulse is dropped by the existing path_up-at-delivery check and
+    # ridden out by RC segment retransmission, with no RNG in the fabric.
+    loss: float = 0.0
     # pre-degradation values, remembered by the first bw_degrade /
     # lat_inflate fault so the matching restore puts them back exactly
     base_bandwidth: Optional[float] = None
@@ -246,10 +253,12 @@ class RNIC:
     """
 
     def __init__(self, name: str, host: "Host", index: int,
-                 pcie_bandwidth: float = 14 * GBPS * 8):  # ~14 GB/s x16 gen3
+                 pcie_bandwidth: float = 14 * GBPS * 8,  # ~14 GB/s x16 gen3
+                 tier: str = "rail"):
         self.name = name
         self.host = host
         self.index = index  # rail index
+        self.tier = tier    # "rail" (intra-pod) or "dcn" (cross-pod)
         self.gid = f"{host.name}/{name}"
         self.up = True
         self.switch: Optional[Switch] = None
@@ -306,9 +315,10 @@ class RNIC:
 class Host:
     """A GPU server with multiple RNICs and a flat registered-memory space."""
 
-    def __init__(self, name: str, cluster: "Cluster"):
+    def __init__(self, name: str, cluster: "Cluster", pod: int = 0):
         self.name = name
         self.cluster = cluster
+        self.pod = pod  # pod membership (0 in single-pod clusters)
         self.nics: List[RNIC] = []
         # Bump allocator for MR base addresses (per-host address space).
         self._next_addr = 0x1000
@@ -478,11 +488,18 @@ class Cluster:
         # the verbs engine and SHIFT feed it, the channel scheduler and
         # benchmarks read it
         self.telemetry = RailTelemetry(self)
+        # heterogeneous-topology metadata (build_cluster fills these in
+        # for multi-pod clusters; single-pod clusters keep the defaults)
+        self.n_pods: int = 1
+        #: NIC indices that sit on the cross-pod DCN tier (empty when the
+        #: cluster is single-pod — every index is then an intra-pod rail)
+        self.dcn_rail_indices: Tuple[int, ...] = ()
 
     # -- construction ---------------------------------------------------------
-    def add_host(self, name: str) -> Host:
-        """Create and register a host."""
-        h = Host(name, self)
+    def add_host(self, name: str, pod: int = 0) -> Host:
+        """Create and register a host (``pod`` assigns its pod in
+        multi-pod clusters; single-pod callers leave the default)."""
+        h = Host(name, self, pod=pod)
         self.hosts[name] = h
         return h
 
@@ -494,13 +511,17 @@ class Cluster:
 
     def add_nic(self, host: Host, name: str, switch: Switch,
                 bandwidth: float = 100 * GBPS, latency: float = 2e-6,
-                pcie_bandwidth: Optional[float] = None) -> RNIC:
-        """Create a NIC on ``host``, cable it to ``switch``, register it."""
+                pcie_bandwidth: Optional[float] = None,
+                loss: float = 0.0, tier: str = "rail") -> RNIC:
+        """Create a NIC on ``host``, cable it to ``switch``, register it.
+        ``tier`` marks intra-pod rails vs cross-pod DCN uplinks; ``loss``
+        declares the link's loss character (see :class:`Link`)."""
         nic = RNIC(name, host, index=len(host.nics),
-                   pcie_bandwidth=pcie_bandwidth or 14 * GBPS * 8)
+                   pcie_bandwidth=pcie_bandwidth or 14 * GBPS * 8,
+                   tier=tier)
         host.add_nic(nic)
         link = Link(f"{host.name}.{name}<->{switch.name}",
-                    bandwidth=bandwidth, latency=latency)
+                    bandwidth=bandwidth, latency=latency, loss=loss)
         switch.attach(nic, link)
         self.nic_by_gid[nic.gid] = nic
         return nic
@@ -509,10 +530,16 @@ class Cluster:
     def path_up(self, src: RNIC, dst: RNIC) -> bool:
         """End-to-end availability src NIC -> (rail/spine) -> dst NIC.
 
-        Inter-switch (spine) connectivity is assumed always available:
-        fabric-internal failures are masked by in-network rerouting
-        (paper Fig. 1 — the layer below the one SHIFT adds).
+        Inter-switch (spine) connectivity is assumed always available
+        WITHIN a pod: fabric-internal failures are masked by in-network
+        rerouting (paper Fig. 1 — the layer below the one SHIFT adds).
+        ACROSS pods only the DCN tier is physically routable: a
+        cross-pod pair of rail NICs has no path, so cross-pod traffic is
+        forced onto the DCN uplinks.
         """
+        if src.host.pod != dst.host.pod and (
+                src.tier != "dcn" or dst.tier != "dcn"):
+            return False
         return src.path_up() and dst.path_up()
 
     def path_latency(self, src: RNIC, dst: RNIC) -> float:
@@ -535,6 +562,19 @@ class Cluster:
             for nic in host.nics:
                 d = out.setdefault(nic.index,
                                    {"tx_bytes": 0, "delivered_bytes": 0})
+                d["tx_bytes"] += nic.tx_bytes
+                d["delivered_bytes"] += nic.delivered_bytes
+        return out
+
+    def tier_bytes(self) -> Dict[str, Dict[str, int]]:
+        """Aggregate traffic per TIER ("rail" vs "dcn"): the DCN row is
+        the cross-pod bytes-moved numerator the hierarchical-allreduce
+        benchmark gates on (compression must shrink it)."""
+        out = {"rail": {"tx_bytes": 0, "delivered_bytes": 0},
+               "dcn": {"tx_bytes": 0, "delivered_bytes": 0}}
+        for host in self.hosts.values():
+            for nic in host.nics:
+                d = out[nic.tier]
                 d["tx_bytes"] += nic.tx_bytes
                 d["delivered_bytes"] += nic.delivered_bytes
         return out
@@ -655,11 +695,30 @@ class Cluster:
         self.fault_listeners.append(cb)
 
     def resolve_targets(self, target: str) -> List[str]:
-        """Expand a target selector to concrete NIC GIDs."""
+        """Expand a target selector to concrete NIC GIDs.
+
+        ``rail:k`` selects NIC index k of every host (correlated rail
+        failure); ``dcn`` selects every cross-pod uplink NIC, and
+        ``dcn:k`` the k-th DCN uplink of every host (``dcn:0`` = the
+        primary uplink, ``dcn:1`` = its SHIFT backup)."""
         if target.startswith("rail:"):
             k = int(target.split(":", 1)[1])
             return [nic.gid for host in self.hosts.values()
                     for nic in host.nics if nic.index == k]
+        if target == "dcn" or target.startswith("dcn:"):
+            dcn = [nic for host in self.hosts.values()
+                   for nic in host.nics if nic.tier == "dcn"]
+            if ":" in target:
+                k = int(target.split(":", 1)[1])
+                dcn = [nic for nic in dcn
+                       if nic.index - min(self.dcn_rail_indices or (0,)) == k]
+            return [nic.gid for nic in dcn]
+        if (target not in self.nic_by_gid and "/" in target
+                and target.split("/", 1)[1].startswith("dcn")):
+            # a concrete DCN-uplink GID on a single-pod cluster: no-op,
+            # so the dcn_* scenarios stay runnable under flat workloads
+            # (same contract as a rail selector that matches nothing)
+            return []
         return [target]
 
     def apply_fault(self, kind: str, target: str,
@@ -726,22 +785,81 @@ def correlated_failure(targets: Sequence[str], at: float,
     return [(at, kind, t) for t in targets]
 
 
+def loss_windows(target: str, start: float, span: float, loss: float,
+                 period: float = 2e-3) -> List[FaultTriple]:
+    """Deterministic loss model: turn a loss FRACTION into link-down
+    pulses with duty cycle ``loss`` over ``[start, start+span)``.
+
+    Segments whose delivery lands inside a pulse are dropped in flight
+    (the delivery-time ``path_up`` check) and recovered by RC segment
+    retransmission — the same machinery per-packet random loss would
+    exercise, with zero RNG in the fabric. Keep each pulse
+    (``loss * period``) well under the RC retry budget
+    (``retry_cnt x ack_timeout`` ~ 3.2ms) so the loss is transient, not
+    an outage."""
+    if not 0.0 < loss < 1.0:
+        raise ValueError(f"loss fraction must be in (0, 1), got {loss}")
+    down_time = loss * period
+    count = max(1, int(span / period))
+    return flap_train(target, start, count, down_time, period, kind="link")
+
+
 def build_cluster(n_hosts: int = 2, nics_per_host: int = 2,
                   topology: str = "rail",
                   bandwidth: float = 100 * GBPS,
-                  latency: float = 2e-6) -> Cluster:
+                  latency: float = 2e-6,
+                  n_pods: int = 1,
+                  dcn_bandwidth: float = 10 * GBPS,
+                  dcn_latency: float = 50e-6,
+                  dcn_loss: float = 0.0) -> Cluster:
     """Standard testbed: rail-optimized — NIC index k of every host connects
     to rail switch k (the paper's assumed deployment, §4.4), or a single
     shared ToR (``topology="single"``, SPOF — used by tests that demonstrate
-    the hardware constraint)."""
+    the hardware constraint).
+
+    ``n_pods > 1`` builds the heterogeneous two-tier topology: hosts are
+    block-partitioned into pods (``pod = i // (n_hosts // n_pods)``),
+    rail switches become POD-LOCAL (cross-pod rail traffic is physically
+    impossible — see :meth:`Cluster.path_up`), and every host gains two
+    cross-pod DCN uplinks ``dcn0``/``dcn1`` (NIC indices
+    ``nics_per_host`` and ``nics_per_host + 1``) on a shared DCN switch
+    with the slow/lossy per-tier parameters ``dcn_bandwidth`` /
+    ``dcn_latency`` / ``dcn_loss``. dcn1 exists as the SHIFT backup for
+    dcn0 so cross-pod fault masking mirrors the intra-pod rail pairs.
+    ``n_pods=1`` is byte-identical to the historical single-pod layout.
+    """
     c = Cluster()
-    if topology == "rail":
-        switches = [c.add_switch(f"rail{k}") for k in range(nics_per_host)]
-    else:
-        switches = [c.add_switch("tor0")] * nics_per_host
+    if n_pods <= 1:
+        if topology == "rail":
+            switches = [c.add_switch(f"rail{k}")
+                        for k in range(nics_per_host)]
+        else:
+            switches = [c.add_switch("tor0")] * nics_per_host
+        for i in range(n_hosts):
+            h = c.add_host(f"host{i}")
+            for k in range(nics_per_host):
+                c.add_nic(h, f"mlx5_{k}", switches[k],
+                          bandwidth=bandwidth, latency=latency)
+        return c
+    if n_hosts % n_pods != 0:
+        raise ValueError(f"n_hosts={n_hosts} not divisible by "
+                         f"n_pods={n_pods}")
+    if topology != "rail":
+        raise ValueError("multi-pod clusters require the rail topology")
+    per_pod = n_hosts // n_pods
+    c.n_pods = n_pods
+    c.dcn_rail_indices = (nics_per_host, nics_per_host + 1)
+    pod_switches = [[c.add_switch(f"pod{p}.rail{k}")
+                     for k in range(nics_per_host)] for p in range(n_pods)]
+    dcn_switch = c.add_switch("dcn", n_ports=max(64, 2 * n_hosts))
     for i in range(n_hosts):
-        h = c.add_host(f"host{i}")
+        pod = i // per_pod
+        h = c.add_host(f"host{i}", pod=pod)
         for k in range(nics_per_host):
-            c.add_nic(h, f"mlx5_{k}", switches[k],
+            c.add_nic(h, f"mlx5_{k}", pod_switches[pod][k],
                       bandwidth=bandwidth, latency=latency)
+        for k in range(2):
+            c.add_nic(h, f"dcn{k}", dcn_switch,
+                      bandwidth=dcn_bandwidth, latency=dcn_latency,
+                      loss=dcn_loss, tier="dcn")
     return c

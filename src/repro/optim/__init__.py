@@ -1,2 +1,5 @@
+"""Optimizer substrate: AdamW (clipping, cosine schedule, bf16 moments)
+and int8 error-feedback gradient compression for cross-pod DCN sync."""
+
 from .adamw import AdamWConfig, adamw_init, adamw_update, global_norm  # noqa
 from .compress import int8_compress, int8_decompress  # noqa

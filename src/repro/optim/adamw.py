@@ -12,6 +12,8 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class AdamWConfig:
+    """AdamW hyperparameters + schedule shape (frozen, hashable)."""
+
     lr: float = 3e-4
     b1: float = 0.9
     b2: float = 0.95
@@ -24,6 +26,8 @@ class AdamWConfig:
 
 
 def adamw_init(params, cfg: AdamWConfig):
+    """Zeroed optimizer state (first/second moments + step counter)
+    matching the parameter tree, in ``cfg.moment_dtype``."""
     zeros = lambda p: jnp.zeros(p.shape, dtype=cfg.moment_dtype)
     return {
         "mu": jax.tree_util.tree_map(zeros, params),
@@ -33,6 +37,7 @@ def adamw_init(params, cfg: AdamWConfig):
 
 
 def global_norm(tree) -> jnp.ndarray:
+    """L2 norm over every leaf of ``tree`` (float32 accumulation)."""
     leaves = jax.tree_util.tree_leaves(tree)
     return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
                         for l in leaves))
@@ -47,6 +52,8 @@ def _schedule(step, cfg: AdamWConfig):
 
 
 def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step (global-norm clip, bias correction, decoupled
+    weight decay). Returns ``(new_params, new_state, metrics)``."""
     step = state["step"] + 1
     gnorm = global_norm(grads)
     scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))

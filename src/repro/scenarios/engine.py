@@ -19,6 +19,12 @@ Workloads, in increasing weight:
   part, so scenario faults land while several collectives are in flight;
   each part's numeric result is verified and the run must actually
   overlap (``RunResult.peak_concurrency`` floor).
+* ``hierarchical_allreduce`` — the two-tier multi-pod all-reduce on the
+  heterogeneous fabric (intra-pod rails + int8-compressed cross-pod DCN
+  exchange with error feedback carried across rounds); every round's
+  outputs must be byte-identical across ranks and within the
+  quantization bound of the true sum. The DCN fault scenarios target
+  this workload's uplinks.
 * ``ddp`` — a short data-parallel training run (``build_smoke_trainer``);
   scenario times are rebased onto the measured per-step collective time
   so faults land mid-all-reduce regardless of model size.
@@ -426,14 +432,17 @@ def _run_rounds(workload: str, scenario: Scenario, seed: int,
                 n_ranks: int, max_rounds: int, probe_interval: float,
                 fast: bool, channels: int, max_chunk_bytes: int,
                 round_fn, nics_per_host: Optional[int] = None,
-                min_concurrency: int = 0) -> RunResult:
+                min_concurrency: int = 0,
+                build_kw: Optional[dict] = None) -> RunResult:
     """Shared driver for JcclWorld round workloads: build the world,
     schedule the fault timeline, run ``round_fn(world, rng, timeout) ->
     payload mismatches`` until the traffic horizon/deadline, settle, and
     harvest the world snapshot. Rounds are capped for wall time, but
     traffic MUST span the fault timeline (+ probe margin) or recovery
     could never fence (see ``_traffic_horizon``) and min_fallbacks
-    expectations would be vacuous."""
+    expectations would be vacuous. ``build_kw`` forwards extra
+    ``build_world`` parameters (the hierarchical workload's multi-pod
+    topology)."""
     from repro.collectives import CollectiveError, build_world
 
     result = RunResult(scenario=scenario.name, workload=workload,
@@ -442,7 +451,8 @@ def _run_rounds(workload: str, scenario: Scenario, seed: int,
         n_ranks=n_ranks, probe_interval=probe_interval,
         max_chunk_bytes=max_chunk_bytes, strict_order=False, fast=fast,
         channels=channels,
-        nics_per_host=nics_per_host or max(2, channels))
+        nics_per_host=nics_per_host or max(2, channels),
+        **(build_kw or {}))
     _observe(cluster, libs, result)
     t0 = cluster.sim.now
     scenario.schedule(cluster, t0)
@@ -521,6 +531,64 @@ def run_overlap_allreduce(scenario: Scenario, seed: int = 0,
                        max_rounds, probe_interval, fast, channels,
                        max_chunk_bytes, one_round,
                        nics_per_host=nics_per_host, min_concurrency=2)
+
+
+def run_hierarchical_allreduce(scenario: Scenario, seed: int = 0,
+                               n_ranks: int = 4, n_pods: int = 2,
+                               elems: int = 1 << 14,
+                               max_rounds: int = 4000,
+                               probe_interval: float = 5e-3,
+                               fast: bool = True,
+                               nics_per_host: int = 2,
+                               compress: bool = True,
+                               dcn_loss: float = 0.0) -> RunResult:
+    """Repeated two-tier (pod-hierarchical) all-reduces on the
+    heterogeneous multi-pod fabric, under the scenario's fault timeline
+    — the DCN scenarios (``dcn_degrade``, ``dcn_partition_transient``)
+    aim their faults at the uplinks this workload depends on.
+
+    Verified every round:
+
+    * **byte identity across ranks** — all ``n_ranks`` outputs must be
+      bit-equal (the pod-index-order combine makes the cross-pod sum
+      deterministic regardless of arrival order or compression);
+    * **quantization-bounded accuracy** — each output must match the
+      true float sum within the int8 error-feedback bound (the per-pod
+      residue is at most half a quantization bucket per element, summed
+      over pods, plus the carried feedback of the previous step);
+      uncompressed runs use the exact float tolerance.
+
+    The error-feedback dict is carried ACROSS rounds — exactly how the
+    trainer uses it — so a mid-round fault that forces a retransmit
+    must not double-apply or drop residue (it would break byte identity
+    or blow the accuracy bound)."""
+    feedback: Dict = {}
+
+    def one_round(world, rng, timeout):
+        arrays = [rng.randn(elems).astype(np.float32)
+                  for _ in range(n_ranks)]
+        expect = np.sum(arrays, axis=0)
+        world.hierarchical_allreduce(arrays, compress=compress,
+                                     feedback=feedback, timeout=timeout)
+        bad = 0
+        ref = arrays[0].tobytes()
+        bad += sum(1 for a in arrays[1:] if a.tobytes() != ref)
+        if compress:
+            # per element: n_pods residues of <= scale/2 each, plus the
+            # previous round's carried feedback of the same magnitude
+            scale = float(np.max(np.abs(expect))) / 127.0
+            atol = 2.0 * n_pods * max(scale, 1e-6) + 1e-4
+        else:
+            atol = 1e-4
+        bad += sum(1 for a in arrays
+                   if not np.allclose(a, expect, atol=atol))
+        return bad
+
+    return _run_rounds(
+        "hierarchical_allreduce", scenario, seed, n_ranks, max_rounds,
+        probe_interval, fast, nics_per_host + 1, 1 << 14, one_round,
+        nics_per_host=nics_per_host,
+        build_kw={"n_pods": n_pods, "dcn_loss": dcn_loss})
 
 
 def run_broadcast(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
@@ -907,6 +975,7 @@ WORKLOADS: Dict[str, Callable[..., RunResult]] = {
     "pingpong": run_pingpong,
     "allreduce": run_allreduce,
     "overlap_allreduce": run_overlap_allreduce,
+    "hierarchical_allreduce": run_hierarchical_allreduce,
     "broadcast": run_broadcast,
     "all_to_all": run_alltoall,
     "ddp": run_ddp,

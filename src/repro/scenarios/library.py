@@ -7,7 +7,11 @@ backup). Multi-rail scenarios request wider hosts via
 ``workload_hints`` (e.g. ``{"allreduce": {"channels": 4,
 "nics_per_host": 4}}``); rail selectors that match nothing on a
 narrower workload are no-ops, so every scenario stays runnable under
-every workload. Times are virtual seconds after workload start; the
+every workload. The ``dcn_*`` scenarios target the multi-pod
+heterogeneous fabric (``hierarchical_allreduce`` workload; hosts gain
+``dcn0``/``dcn1`` uplinks and the ``dcn`` selector) — on single-pod
+clusters their targets resolve to nothing, keeping them no-op under
+the flat workloads. Times are virtual seconds after workload start; the
 pingpong workload paces one message per 200us, so the 2ms-40ms window
 is dense mid-stream traffic.
 
@@ -242,6 +246,41 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
         share_bounds={0: (0.02, 0.45), 1: (0.55, 0.98)},
         tags=("rail", "multirail", "degradation"),
         workload_hints={"allreduce": {"channels": 2}},
+    ),
+    Scenario(
+        name="dcn_degrade",
+        description="Every DCN uplink drops to 1/4 bandwidth with NO "
+                    "errors (cross-pod congestion), then restores: the "
+                    "tier-aware scheduler must absorb it — cross-pod "
+                    "chunks keep flowing at the thinner share with "
+                    "smaller adapted chunks, and NO health transition "
+                    "fires (the hierarchical allreduce stays "
+                    "byte-identical across ranks throughout).",
+        actions=(A(2e-3, "bw_degrade", "dcn", 0.25),
+                 A(30e-3, "bw_restore", "dcn")),
+        min_fallbacks=0, max_fallbacks=0, expect_recovery=False,
+        tags=("dcn", "multipod", "degradation"),
+        workload_hints={"hierarchical_allreduce": {}},
+    ),
+    Scenario(
+        name="dcn_partition_transient",
+        description="Cross-pod boundary events: first a 2ms DCN link "
+                    "blip (shorter than the RC retry budget of "
+                    "retry_cnt x ack_timeout ~ 3.2ms) that the "
+                    "transport must ride out by retransmission alone — "
+                    "segments in flight are dropped on the wire and "
+                    "recovered with no fallback; then host0's dcn0 NIC "
+                    "dies for good and SHIFT must fail the cross-pod "
+                    "QPs over to the paired dcn1 uplink (tier-pinned "
+                    "backup placement), masking the loss. Exactly-once "
+                    "and cross-rank byte identity must hold through "
+                    "both.",
+        actions=(A(2e-3, "link_down", "host0/dcn0"),
+                 A(4e-3, "link_up", "host0/dcn0"),
+                 A(20e-3, "nic_down", "host0/dcn0")),
+        min_fallbacks=1, expect_recovery=False,
+        tags=("dcn", "multipod", "compound"),
+        workload_hints={"hierarchical_allreduce": {}},
     ),
     Scenario(
         name="double_rail_outage",

@@ -68,6 +68,15 @@ class TrainerConfig:
     # path — see DDPTrainer._grad_buckets.
     bucket_bytes: int = 1 << 18
     overlap: bool = True
+    # Two-tier gradient sync (DESIGN.md §11): on a multi-pod world,
+    # all-reduce each bucket hierarchically — intra-pod ring
+    # reduce-scatter, cross-pod shard exchange over the DCN uplinks,
+    # intra-pod all-gather. ``compress_dcn`` int8-compresses only the
+    # cross-pod exchange (4x fewer bytes on the ~10x-thinner tier) with
+    # per-shard error feedback carried across steps beside the
+    # optimizer state, so quantization residue is deferred, not lost.
+    hierarchical: bool = False
+    compress_dcn: bool = True
 
 
 @dataclasses.dataclass
@@ -113,6 +122,12 @@ class DDPTrainer:
         self.store = CheckpointStore(tcfg.ckpt_dir, keep=2)
         self._grad_fn = jax.jit(jax.value_and_grad(self.model.loss))
         self._err_fb = [None] * self.n  # int8 error feedback per rank
+        # DCN error feedback, one dict per gradient bucket (the
+        # hierarchical collective keys residue by (pod, bucket, shard)
+        # WITHIN one launch, so distinct gradient buckets must not
+        # share a dict). Lives beside the optimizer state for the whole
+        # run — quantization residue carries across steps.
+        self._dcn_fb: Dict[int, Dict] = {}
 
     # ------------------------------------------------------------------
     def _init_state(self):
@@ -152,20 +167,31 @@ class DDPTrainer:
         waits each bucket before issuing the next — the baseline the
         ``ddp_overlap_speedup`` benchmark gates against."""
         bounds = self._grad_buckets(world, grad_vecs[0].size)
+        if self.tcfg.hierarchical:
+            # two-tier path: one hierarchical collective per bucket,
+            # each with its own persistent DCN feedback dict
+            launch = [
+                (lambda vecs, i=i: world.hierarchical_allreduce_async(
+                    vecs, compress=self.tcfg.compress_dcn,
+                    feedback=self._dcn_fb.setdefault(i, {}),
+                    priority="bulk"))
+                for i in range(len(bounds))]
+        else:
+            launch = [
+                (lambda vecs: world.allreduce_async(vecs, priority="bulk"))
+                for _ in bounds]
         if self.tcfg.overlap:
             # gradient buckets are explicitly BULK class: they should
             # pipeline at full busbw but yield the head of the dispatch
             # queues to latency-critical serving works (DESIGN.md §10)
-            works = [world.allreduce_async([v[lo:hi] for v in grad_vecs],
-                                           priority="bulk")
-                     for lo, hi in bounds]
+            works = [go([v[lo:hi] for v in grad_vecs])
+                     for go, (lo, hi) in zip(launch, bounds)]
             run.peak_works = max(run.peak_works, len(works))
             world.wait_all(works, timeout=300.0)
         else:
             run.peak_works = max(run.peak_works, 1)
-            for lo, hi in bounds:
-                world.allreduce([v[lo:hi] for v in grad_vecs],
-                                timeout=300.0, priority="bulk")
+            for go, (lo, hi) in zip(launch, bounds):
+                go([v[lo:hi] for v in grad_vecs]).wait(300.0)
 
     # ------------------------------------------------------------------
     def train(self, world: JcclWorld,
@@ -266,12 +292,15 @@ class DDPTrainer:
 def build_smoke_trainer(cluster, libs, steps: int = 6, ckpt_dir: str =
                         "/tmp/repro-ckpt-smoke", seed: int = 0,
                         lr: float = 3e-3, bucket_bytes: Optional[int] = None,
-                        overlap: bool = True) -> DDPTrainer:
+                        overlap: bool = True, hierarchical: bool = False,
+                        compress_dcn: bool = True) -> DDPTrainer:
     """Campaign-engine / CI-smoke entry point: a DDP trainer over a tiny
     model that finishes a handful of steps in seconds. The fault-scenario
     campaign (repro.scenarios) drives this as its heaviest workload.
     ``bucket_bytes`` / ``overlap`` override the gradient-bucketing knobs
-    (None keeps the TrainerConfig default)."""
+    (None keeps the TrainerConfig default); ``hierarchical`` /
+    ``compress_dcn`` select the two-tier gradient sync on multi-pod
+    worlds."""
     from repro import configs as C
 
     model_cfg = C.smoke_config("gpt2-124m", n_layers=2, d_model=128,
@@ -279,7 +308,8 @@ def build_smoke_trainer(cluster, libs, steps: int = 6, ckpt_dir: str =
     kw = {} if bucket_bytes is None else {"bucket_bytes": bucket_bytes}
     tcfg = TrainerConfig(steps=steps, ckpt_every=max(2, steps // 2),
                          lr=lr, ckpt_dir=ckpt_dir, seed=seed,
-                         overlap=overlap, **kw)
+                         overlap=overlap, hierarchical=hierarchical,
+                         compress_dcn=compress_dcn, **kw)
     return DDPTrainer(cluster, libs, model_cfg, tcfg,
                       batch_per_rank=2, seq_len=32)
 

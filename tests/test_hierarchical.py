@@ -1,0 +1,258 @@
+"""Hierarchical cross-pod allreduce (DESIGN.md §11): int8 error-feedback
+compression contracts, multi-pod fabric construction, byte-identity of
+the two-tier pipeline, DCN fault masking, and trainer loss parity."""
+
+import shutil
+import tempfile
+
+import numpy as np
+import pytest
+
+from hyp_compat import HAVE_HYPOTHESIS, given, settings, st  # noqa: F401
+from repro.collectives import build_world
+from repro.optim.compress import int8_compress, int8_decompress
+from repro.scenarios import SCENARIOS, run_scenario
+
+
+# ---------------------------------------------------------------------------
+# int8 error-feedback compression contracts
+# ---------------------------------------------------------------------------
+
+def test_compress_roundtrip_error_bounded():
+    rng = np.random.RandomState(0)
+    x = rng.randn(512).astype(np.float32)
+    q, scale, err = int8_compress(x)
+    assert q.dtype == np.int8
+    out = int8_decompress(q, scale)
+    # decompressed + error reconstructs the input exactly, and the
+    # dropped mass is at most half a quantization bucket per element
+    np.testing.assert_allclose(out + err, x, rtol=0, atol=1e-6)
+    assert np.max(np.abs(err)) <= scale / 2 + 1e-7
+
+
+def test_compress_rejects_non_finite():
+    for bad in (np.float32("nan"), np.float32("inf")):
+        x = np.ones(8, dtype=np.float32)
+        x[3] = bad
+        with pytest.raises(ValueError):
+            int8_compress(x)
+
+
+def test_compress_all_zero_returns_zero_error_buffer():
+    x = np.zeros(16, dtype=np.float32)
+    q, scale, err = int8_compress(x)
+    assert not q.any()
+    assert err.shape == x.shape and not err.any()
+    assert scale > 0  # neutral scale, never a division hazard
+
+
+def test_decompress_restores_dtype():
+    x = np.linspace(-1, 1, 64).astype(np.float64)
+    q, scale, _ = int8_compress(x)
+    assert int8_decompress(q, scale).dtype == np.float32
+    assert int8_decompress(q, scale, dtype=np.float64).dtype == np.float64
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.lists(st.floats(min_value=-100.0, max_value=100.0,
+                                   allow_nan=False, allow_infinity=False,
+                                   width=32),
+                         min_size=4, max_size=4),
+                min_size=1, max_size=12))
+def test_error_feedback_accumulation_bounded(steps):
+    """The compress.py docstring contract, property-tested: over any
+    bounded input sequence, cumulative decompressed output equals
+    cumulative input minus the FINAL error buffer (no gradient mass
+    lost, only deferred), and the carried error never exceeds half the
+    last step's quantization bucket."""
+    xs = [np.array(s, dtype=np.float32) for s in steps]
+    err = None
+    cum_in = np.zeros(4, dtype=np.float64)
+    cum_out = np.zeros(4, dtype=np.float64)
+    for x in xs:
+        q, scale, err = int8_compress(x, err)
+        cum_in += x.astype(np.float64)
+        cum_out += int8_decompress(q, scale).astype(np.float64)
+        assert np.max(np.abs(err)) <= scale / 2 + 1e-5
+    np.testing.assert_allclose(cum_out + err.astype(np.float64), cum_in,
+                               rtol=0, atol=1e-3 * max(len(xs), 1))
+
+
+# ---------------------------------------------------------------------------
+# multi-pod fabric construction
+# ---------------------------------------------------------------------------
+
+def test_multipod_world_exposes_dcn_channels():
+    cluster, _, world = build_world(n_ranks=4, channels=3,
+                                    nics_per_host=2, n_pods=2)
+    assert world.n_pods == 2
+    assert cluster.n_pods == 2
+    # channel 2 sits on NIC index 2 = dcn0
+    assert world.dcn_channels == (2,)
+    assert world.channels[2].tier == "dcn"
+    assert world.channels[0].tier == "rail"
+    # every host carries exactly two DCN uplinks after the rails
+    for host in cluster.hosts.values():
+        tiers = [nic.tier for nic in host.nics]
+        assert tiers == ["rail", "rail", "dcn", "dcn"]
+
+
+def test_hierarchical_requires_dcn_channel():
+    # 2 pods but only the rail channels: the cross-pod stage would have
+    # nowhere to home, so the launch must fail loudly
+    _, _, world = build_world(n_ranks=4, channels=2,
+                              nics_per_host=2, n_pods=2)
+    arrays = [np.ones(8, dtype=np.float32) for _ in range(4)]
+    with pytest.raises(ValueError):
+        world.hierarchical_allreduce(arrays)
+
+
+def test_hierarchical_requires_multiple_pods():
+    _, _, world = build_world(n_ranks=2, channels=2, nics_per_host=2)
+    arrays = [np.ones(8, dtype=np.float32) for _ in range(2)]
+    with pytest.raises(ValueError):
+        world.hierarchical_allreduce(arrays)
+
+
+def test_dcn_selectors_resolve_and_noop_on_single_pod():
+    cluster, _, _ = build_world(n_ranks=4, channels=3,
+                                nics_per_host=2, n_pods=2)
+    assert len(cluster.resolve_targets("dcn")) == 8  # 4 hosts x 2 uplinks
+    assert len(cluster.resolve_targets("dcn:0")) == 4
+    single, _, _ = build_world(n_ranks=2, channels=2, nics_per_host=2)
+    # the dcn_* scenarios must stay runnable under flat workloads on
+    # single-pod clusters: their targets resolve to nothing
+    assert single.resolve_targets("dcn") == []
+    assert single.resolve_targets("host0/dcn0") == []
+
+
+# ---------------------------------------------------------------------------
+# two-tier pipeline correctness
+# ---------------------------------------------------------------------------
+
+def _hier_world(**kw):
+    return build_world(n_ranks=4, channels=3, nics_per_host=2, n_pods=2,
+                       max_chunk_bytes=1 << 12, **kw)
+
+
+def test_hierarchical_uncompressed_matches_sum_byte_identical():
+    _, _, world = _hier_world()
+    rng = np.random.RandomState(1)
+    arrays = [rng.randn(3000).astype(np.float32) for _ in range(4)]
+    expect = np.sum(arrays, axis=0)
+    world.hierarchical_allreduce(arrays, compress=False, timeout=30.0)
+    ref = arrays[0].tobytes()
+    for a in arrays[1:]:
+        assert a.tobytes() == ref  # byte-identical across ranks AND pods
+    np.testing.assert_allclose(arrays[0], expect, rtol=0, atol=1e-4)
+
+
+def test_hierarchical_compressed_close_and_feedback_carried():
+    _, _, world = _hier_world()
+    rng = np.random.RandomState(2)
+    feedback = {}
+    for _ in range(3):
+        arrays = [rng.randn(2048).astype(np.float32) for _ in range(4)]
+        expect = np.sum(arrays, axis=0)
+        world.hierarchical_allreduce(arrays, compress=True,
+                                     feedback=feedback, timeout=30.0)
+        ref = arrays[0].tobytes()
+        for a in arrays[1:]:
+            assert a.tobytes() == ref
+        # int8 over per-shard partial sums: a couple of quantization
+        # buckets of slack per pod contribution
+        scale = float(np.max(np.abs(expect))) / 127.0
+        np.testing.assert_allclose(arrays[0], expect, rtol=0,
+                                   atol=4 * scale + 1e-4)
+    assert feedback  # error residue keyed (pod, bucket, shard)
+    assert all(isinstance(k, tuple) and len(k) == 3 for k in feedback)
+
+
+def test_hierarchical_cross_pod_bytes_stay_on_dcn_and_shrink():
+    def run(compress):
+        cluster, _, world = _hier_world()
+        rng = np.random.RandomState(3)
+        arrays = [rng.randn(1 << 14).astype(np.float32) for _ in range(4)]
+        world.hierarchical_allreduce(arrays, compress=compress,
+                                     timeout=60.0)
+        return cluster.tier_bytes()["dcn"]["tx_bytes"]
+
+    raw, packed = run(False), run(True)
+    assert raw > 0 and packed > 0
+    # int8 + 4-byte scale on the cross-pod stage: ~4x fewer payload
+    # bytes, diluted below 3x here by fixed per-chunk overhead at this
+    # small scale (the perf suite gates the >= 3x at benchmark scale)
+    assert packed < raw / 2.5
+
+
+def test_hierarchical_masks_dcn_uplink_loss():
+    cluster, libs, world = _hier_world(probe_interval=1e-3)
+    rng = np.random.RandomState(4)
+    cluster.schedule_fault(cluster.sim.now + 2e-4, "nic_down",
+                           "host0/dcn0")
+    for _ in range(4):
+        arrays = [rng.randn(4096).astype(np.float32) for _ in range(4)]
+        expect = np.sum(arrays, axis=0)
+        world.hierarchical_allreduce(arrays, compress=False, timeout=60.0)
+        np.testing.assert_allclose(arrays[0], expect, rtol=0, atol=1e-4)
+        ref = arrays[0].tobytes()
+        assert all(a.tobytes() == ref for a in arrays[1:])
+    # SHIFT failed the dead uplink's QPs over to dcn1 (the tier-pinned
+    # backup) — the stream never left the DCN tier
+    assert sum(lib.stats.fallbacks for lib in libs) >= 1
+
+
+# ---------------------------------------------------------------------------
+# scenarios + campaign integration
+# ---------------------------------------------------------------------------
+
+def test_library_names_the_dcn_scenarios():
+    assert "dcn_degrade" in SCENARIOS
+    assert "dcn_partition_transient" in SCENARIOS
+    assert SCENARIOS["dcn_degrade"].max_fallbacks == 0
+
+
+@pytest.mark.parametrize("name", ["dcn_degrade", "dcn_partition_transient"])
+def test_dcn_scenarios_hierarchical_workload(name):
+    r = run_scenario(SCENARIOS[name], workload="hierarchical_allreduce",
+                     max_rounds=300)
+    assert r.ok, r.violations
+
+
+# ---------------------------------------------------------------------------
+# trainer integration: loss parity
+# ---------------------------------------------------------------------------
+
+def _train_losses(hierarchical, compress_dcn=True, steps=3):
+    from repro.train.trainer import build_smoke_trainer
+    cluster, libs, world = build_world(n_ranks=4, channels=3,
+                                       nics_per_host=2, n_pods=2,
+                                       max_chunk_bytes=1 << 14)
+    ckpt = tempfile.mkdtemp(prefix="repro-test-hier-")
+    try:
+        trainer = build_smoke_trainer(cluster, libs, steps=steps,
+                                      ckpt_dir=ckpt,
+                                      hierarchical=hierarchical,
+                                      compress_dcn=compress_dcn)
+        run = trainer.train(world)
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
+    return [l for _, _, l in run.timeline]
+
+
+def test_trainer_hierarchical_uncompressed_loss_identical():
+    flat = _train_losses(hierarchical=False)
+    hier = _train_losses(hierarchical=True, compress_dcn=False)
+    # uncompressed two-tier sync is byte-identical to the flat ring, so
+    # the loss trajectories must match EXACTLY, not just closely
+    assert flat == hier
+
+
+def test_trainer_hierarchical_compressed_loss_close():
+    flat = _train_losses(hierarchical=False)
+    hier_c = _train_losses(hierarchical=True, compress_dcn=True)
+    assert len(flat) == len(hier_c)
+    for a, b in zip(flat, hier_c):
+        # int8 error feedback defers (never loses) gradient mass: the
+        # trajectory tracks the exact one within quantization noise
+        assert abs(a - b) < 5e-2
