@@ -100,6 +100,24 @@ Benchmarks
     decomposition or the DCN compression stopped working, which is a
     correctness bug in the hierarchical path, not a perf regression.
 
+``policy_adaptive_dominance``
+    The policy-comparison campaign (DESIGN.md §12), VIRTUAL time: the
+    four discriminating fault scenarios (sender_nic_down,
+    link_flap_train, slow_rail_straggler,
+    degraded_rail_proportional_share) each run under every fixed
+    fault-policy baseline (shift_fallback / demote / checkpoint /
+    shrink) and under the adaptive engine, on the 2-channel
+    bandwidth-bound allreduce workload. Each cell scores **recovered
+    throughput** — completed rounds per virtual second of round-loop
+    time, zeroed if the cell violates any standing invariant. Gated
+    on two absolute floors plus the 20% rule: adaptive's aggregate
+    (mean of per-scenario cells normalized by the best-any-policy
+    cell) must be >= 1.0x the best fixed policy's aggregate, and
+    adaptive must never fall below 0.9x the best fixed policy in any
+    single cell — a miss means the decision table stopped dominating
+    its own one-response baselines, which is a correctness bug in the
+    policy engine, not a perf regression.
+
 ``fallback_latency``
     Max virtual-time fallback latency over the sender_nic_down scenario
     in fast mode — a determinism canary: it must not drift at all.
@@ -147,6 +165,8 @@ GATED_RATIOS = {
     "latency_slo.skew_ratio_adapted": False,
     "hierarchical_busbw.wallclock_ratio": True,
     "hierarchical_busbw.dcn_bytes_ratio": True,
+    "policy_adaptive_dominance.adaptive_aggregate_ratio": True,
+    "policy_adaptive_dominance.min_cell_ratio": True,
 }
 TOLERANCE = 0.20
 # Absolute floors (not baseline-relative), all in deterministic virtual
@@ -176,6 +196,13 @@ SLO_MIN_BULK_RETENTION = 0.9
 # by >= 2x on virtual wall clock AND move >= 3x fewer DCN bytes.
 HIER_MIN_WALLCLOCK_RATIO = 2.0
 HIER_MIN_DCN_BYTES_RATIO = 3.0
+# policy-comparison campaign (ISSUE-9 acceptance floors, deterministic
+# virtual-time ratios): the adaptive fault policy must beat or match
+# the best fixed single-response baseline on aggregate recovered
+# throughput and never fall below 0.9x of the best fixed policy in any
+# individual scenario cell.
+POLICY_MIN_AGGREGATE_RATIO = 1.0
+POLICY_MIN_CELL_RATIO = 0.9
 
 
 def bench_fig5_msg_rate(msg_size: int = 1 << 16, duration: float = 2.0):
@@ -783,6 +810,45 @@ def bench_allreduce(n_ranks: int = 2, elems: int = 1 << 16,
     }
 
 
+def bench_policy_dominance(max_rounds: int = 400):
+    """Policy-comparison campaign: the four discriminating fault
+    scenarios under every fixed policy + adaptive (DESIGN.md §12).
+
+    Uses the discriminating subset of ``POLICY_SCENARIOS`` — the two
+    clean/permanent cells are near-ties for every policy by
+    construction (on a 2-NIC topology exclusion and failover ride the
+    same surviving rail) and only add wall time; the full 6-scenario
+    matrix is published by ``run.py --policy-matrix-md``. Fully
+    deterministic: recovered throughput is rounds per virtual second
+    of round-loop time, and a cell that violates any standing
+    invariant scores zero."""
+    from repro.scenarios import policy_dominance, run_policy_matrix
+
+    scenarios = ("sender_nic_down", "link_flap_train",
+                 "slow_rail_straggler", "degraded_rail_proportional_share")
+    matrix = run_policy_matrix(scenario_names=scenarios,
+                               max_rounds=max_rounds)
+    dom = policy_dominance(matrix)
+    return {
+        "config": {"scenarios": list(scenarios), "seed": 0, "channels": 2,
+                   "max_rounds": max_rounds, "elems": 1 << 15,
+                   "note": "recovered tput = rounds per virtual second of "
+                           "round-loop time; invariant-violating cells "
+                           "score 0"},
+        "tput_rounds_per_s": {
+            p: {s: matrix[p][s]["tput"] for s in scenarios}
+            for p in matrix},
+        "all_cells_ok": all(c["ok"] for row in matrix.values()
+                            for c in row.values()),
+        "aggregate": dom["aggregate"],
+        "best_fixed": dom["best_fixed"],
+        "adaptive_aggregate_ratio": dom["adaptive_aggregate_ratio"],
+        "cell_ratios": dom["cell_ratios"],
+        "min_cell_ratio": dom["min_cell_ratio"],
+        "worst_cell": dom["worst_cell"],
+    }
+
+
 def run_suite(quick: bool = False) -> dict:
     # quick mode matches the full configuration for the gated benchmarks
     # (they only take seconds); shortening them would add noise to the
@@ -797,6 +863,7 @@ def run_suite(quick: bool = False) -> dict:
     serving = bench_serving_tp()
     latency_slo = bench_latency_slo()
     hier = bench_hierarchical_busbw()
+    policy = bench_policy_dominance()
     return {
         "schema": SCHEMA,
         "note": "before = pre-fast-path configuration (legacy per-WQE "
@@ -815,6 +882,7 @@ def run_suite(quick: bool = False) -> dict:
             "serving_tp": serving,
             "latency_slo": latency_slo,
             "hierarchical_busbw": hier,
+            "policy_adaptive_dominance": policy,
         },
     }
 
@@ -984,6 +1052,26 @@ def emit(path: str, quick: bool = False,
         print(f"# PERF HIERARCHICAL FLOOR: dcn_bytes_ratio "
               f"{hb['dcn_bytes_ratio']} < required "
               f"{HIER_MIN_DCN_BYTES_RATIO}", flush=True)
+        return 1
+    pd = b["policy_adaptive_dominance"]
+    print(f"# perf: policy dominance adaptive "
+          f"{pd['aggregate']['adaptive']:.3f} vs best fixed "
+          f"'{pd['best_fixed']}' {pd['aggregate'][pd['best_fixed']]:.3f} "
+          f"aggregate ({pd['adaptive_aggregate_ratio']:.3f}x), worst cell "
+          f"{pd['worst_cell']} at {pd['min_cell_ratio']:.3f}x", flush=True)
+    if not pd["all_cells_ok"]:
+        print("# PERF POLICY: invariant violations in the policy matrix "
+              "(violating cells scored zero)", flush=True)
+        return 1
+    if pd["adaptive_aggregate_ratio"] < POLICY_MIN_AGGREGATE_RATIO:
+        print(f"# PERF POLICY FLOOR: adaptive_aggregate_ratio "
+              f"{pd['adaptive_aggregate_ratio']} < required "
+              f"{POLICY_MIN_AGGREGATE_RATIO}", flush=True)
+        return 1
+    if pd["min_cell_ratio"] < POLICY_MIN_CELL_RATIO:
+        print(f"# PERF POLICY FLOOR: min_cell_ratio "
+              f"{pd['min_cell_ratio']} < required {POLICY_MIN_CELL_RATIO} "
+              f"(worst cell {pd['worst_cell']})", flush=True)
         return 1
     # invariant violations fail UNCONDITIONALLY — no baseline needed: a
     # fast datapath that breaks exactly-once/zero-copy/ordering is a

@@ -21,7 +21,19 @@ campaign-matrix markdown for the CI job summary.
 ``--bench-json PATH`` additionally runs the tracked perf suite
 (``benchmarks/perf_suite.py``), writes its JSON to PATH, and exits
 non-zero on a >20% regression vs the committed baseline at PATH (which
-is read before being overwritten)."""
+is read before being overwritten).
+
+``--policy-matrix-md PATH`` runs the policy-comparison campaign (every
+fixed fault policy + adaptive over the full 6-scenario policy matrix,
+DESIGN.md §12), writes the recovered-throughput markdown table plus the
+dominance summary to PATH for the CI job summary, and exits non-zero if
+any cell violates invariants or the adaptive policy misses the
+dominance floors (aggregate >= best fixed, >= 0.9x per cell).
+
+``--fuzz-heavy`` runs the randomized fault-fuzz suite
+(``tests/test_fault_fuzz.py``) at heavy example counts
+(``REPRO_FUZZ_EXAMPLES``) — the scheduled/manual deep pass; PR CI runs
+the same suite at its bounded defaults via pytest."""
 
 from __future__ import annotations
 
@@ -290,8 +302,87 @@ def matrix_markdown(fast: bool = True, max_rounds: int = 1200):
     return "\n".join(lines), n_viol
 
 
+def policy_matrix_markdown(max_rounds: int = 800):
+    """Run the FULL policy-comparison matrix (every fixed policy +
+    adaptive x the 6-scenario policy set) and render the recovered-
+    throughput table plus the dominance summary as GitHub-flavoured
+    markdown. Returns ``(markdown, failed)`` — ``failed`` is True when
+    any cell violated invariants or the adaptive policy missed a
+    dominance floor (the same floors ``perf_suite`` gates in
+    ``BENCH_core.json``, here over the full matrix)."""
+    from benchmarks.perf_suite import (POLICY_MIN_AGGREGATE_RATIO,
+                                       POLICY_MIN_CELL_RATIO)
+    from repro.policy import POLICIES
+    from repro.scenarios import (POLICY_SCENARIOS, policy_dominance,
+                                 run_policy_matrix)
+
+    matrix = run_policy_matrix(max_rounds=max_rounds)
+    dom = policy_dominance(matrix)
+    lines = [
+        "## Policy-comparison matrix "
+        f"({len(POLICY_SCENARIOS)} scenarios x {len(POLICIES)} policies, "
+        "recovered rounds/virtual-s; violating cells score 0)",
+        "",
+        "| scenario | " + " | ".join(POLICIES) + " |",
+        "|---|" + "---|" * len(POLICIES),
+    ]
+    n_viol = 0
+    for name in POLICY_SCENARIOS:
+        row = [name]
+        for p in POLICIES:
+            c = matrix[p][name]
+            if c["ok"]:
+                row.append(f"{c['tput']:.0f} (d={c['decisions']}, "
+                           f"fb={c['fallbacks']})")
+            else:
+                n_viol += len(c["violations"])
+                row.append("**VIOLATED**: "
+                           + "; ".join(v.replace("|", "/")
+                                       for v in c["violations"][:2]))
+        lines.append("| " + " | ".join(row) + " |")
+    agg = " | ".join(f"{dom['aggregate'][p]:.3f}" for p in POLICIES)
+    lines += [
+        "",
+        "| aggregate (normalized) | " + agg + " |",
+        "",
+        f"**Dominance:** adaptive aggregate "
+        f"{dom['adaptive_aggregate_ratio']:.3f}x best fixed "
+        f"(`{dom['best_fixed']}`, floor {POLICY_MIN_AGGREGATE_RATIO}), "
+        f"worst cell `{dom['worst_cell']}` at "
+        f"{dom['min_cell_ratio']:.3f}x (floor {POLICY_MIN_CELL_RATIO}), "
+        f"{n_viol} invariant violations.",
+        "",
+    ]
+    failed = bool(
+        n_viol
+        or dom["adaptive_aggregate_ratio"] < POLICY_MIN_AGGREGATE_RATIO
+        or dom["min_cell_ratio"] < POLICY_MIN_CELL_RATIO)
+    return "\n".join(lines), failed
+
+
+def fuzz_heavy(examples: int = 200) -> int:
+    """Run the fault-fuzz suite at a heavy example count (the scheduled
+    deep pass; PR CI runs the bounded default via plain pytest)."""
+    import subprocess
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ, REPRO_FUZZ_EXAMPLES=str(examples))
+    return subprocess.call(
+        [sys.executable, "-m", "pytest", "-q",
+         os.path.join(root, "tests", "test_fault_fuzz.py")], env=env)
+
+
 def main(smoke: bool = False, bench_json: str = None,
-         fast: bool = True, matrix_md: str = None) -> int:
+         fast: bool = True, matrix_md: str = None,
+         policy_matrix_md: str = None, fuzz_examples: int = None) -> int:
+    if fuzz_examples:
+        return fuzz_heavy(fuzz_examples)
+    if policy_matrix_md:
+        md, failed = policy_matrix_markdown()
+        with open(policy_matrix_md, "w") as f:
+            f.write(md)
+        print(md)
+        print(f"# policy matrix written to {policy_matrix_md}", flush=True)
+        return 1 if failed else 0
     if matrix_md:
         md, n_viol = matrix_markdown(fast=fast)
         cl_md, cl_viol = class_latency_markdown(fast=fast)
@@ -363,7 +454,21 @@ if __name__ == "__main__":
                              "and write a markdown results table to "
                              "PATH (CI job-summary publication); exits "
                              "non-zero on any invariant violation")
+    parser.add_argument("--policy-matrix-md", default=None, metavar="PATH",
+                        help="run the policy-comparison campaign (fixed "
+                             "policies + adaptive over the policy "
+                             "scenario set) and write the recovered-"
+                             "throughput markdown table to PATH; exits "
+                             "non-zero on invariant violations or a "
+                             "dominance-floor miss")
+    parser.add_argument("--fuzz-heavy", nargs="?", const=200, default=None,
+                        type=int, metavar="EXAMPLES",
+                        help="run tests/test_fault_fuzz.py at a heavy "
+                             "example count (default 200) instead of the "
+                             "benchmark sections")
     args = parser.parse_args()
     sys.exit(main(smoke=args.smoke, bench_json=args.bench_json,
                   fast=not args.legacy_datapath,
-                  matrix_md=args.matrix_md))
+                  matrix_md=args.matrix_md,
+                  policy_matrix_md=args.policy_matrix_md,
+                  fuzz_examples=args.fuzz_heavy))

@@ -47,7 +47,7 @@ import heapq
 import itertools
 from dataclasses import dataclass
 from statistics import median
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core import verbs as V
 from repro.core.shift import RecvState, SendState, ShiftQP
@@ -397,6 +397,17 @@ class ChannelScheduler:
         # introspection: last computed weights + straggler flags
         self.last_weights: List[float] = [1.0 / self.n] * self.n
         self.demoted: List[bool] = [False] * self.n
+        # policy-engine actuation state (repro.policy): forced demotion
+        # ORs into the organic straggler flag; exclusion zeroes the
+        # channel's weight outright (shrink-world continue). Both are
+        # cleared by readmit(), which re-enters through the standard
+        # recovery ramp instead of jumping back to full weight.
+        self.policy_demoted: List[bool] = [False] * self.n
+        self.excluded: List[bool] = [False] * self.n
+        # observer for demote/readmit transitions (audit trail):
+        # cb(action, channel) with action in {"demote", "readmit"}
+        self.policy_hook: Optional[Callable[[str, int], None]] = None
+        self._prev_demoted: List[bool] = [False] * self.n
         self._ramp_start: List[Optional[float]] = [None] * self.n
         # channel-level impairment latch: set whenever ANY pair observes
         # the channel off OK, cleared (starting ONE ramp) by the first
@@ -477,6 +488,54 @@ class ChannelScheduler:
             div *= 2
             frac *= 2.0
         return max(1, full // div)
+
+    # ------------------------------------------------------------------
+    # policy actuation (repro.policy.FaultPolicyEngine)
+    # ------------------------------------------------------------------
+    def force_demote(self, channel: int, on: bool = True) -> None:
+        """Policy-directed demotion: cap ``channel`` at the straggler
+        weight regardless of what the latency EWMAs say (the policy
+        engine reacts to a degradation FAULT instantly; the organic
+        straggler test needs ``straggler_min_samples`` completions).
+        Idempotent; undone by :meth:`readmit`."""
+        self.policy_demoted[channel % self.n] = bool(on)
+
+    def exclude(self, channel: int) -> bool:
+        """Shrink-world continue: remove ``channel`` from every pick.
+        Refused (returns False) when it would leave no usable channel —
+        a shrink that empties the world is an abort, not a policy.
+        Idempotent; undone by :meth:`readmit`."""
+        c = channel % self.n
+        if self.excluded[c]:
+            return True
+        if sum(1 for x in self.excluded if not x) <= 1:
+            return False
+        self.excluded[c] = True
+        return True
+
+    def readmit(self, channel: int) -> None:
+        """Clear any policy-forced demotion/exclusion of ``channel``.
+        Re-entry goes through the standard recovery ramp: the channel
+        is latched impaired so the next healthy pick starts a ramp at
+        ``ramp_floor`` instead of jumping straight to full weight."""
+        c = channel % self.n
+        if self.policy_demoted[c] or self.excluded[c]:
+            self.policy_demoted[c] = False
+            self.excluded[c] = False
+            self._impaired[c] = True
+
+    def _note_demotions(self) -> None:
+        """Fire ``policy_hook`` on demotion-flag transitions (the audit
+        trail records organic straggler demotions/readmissions exactly
+        like policy-directed ones)."""
+        if self.policy_hook is None:
+            self._prev_demoted = list(self.demoted)
+            return
+        for c in range(self.n):
+            if self.demoted[c] != self._prev_demoted[c]:
+                self.policy_hook(
+                    "demote" if self.demoted[c] else "readmit", c)
+        self._prev_demoted = list(self.demoted)
 
     # ------------------------------------------------------------------
     # weights
@@ -562,6 +621,12 @@ class ChannelScheduler:
                   for c in range(self.n)]
         weights: List[float] = []
         for c, st in enumerate(states):
+            if self.excluded[c]:
+                # shrunk out of the world by the fault policy: unusable
+                # for every pair until readmit()
+                self.demoted[c] = False
+                weights.append(0.0)
+                continue
             if cross_pod and channels[c].tier != "dcn":
                 self.demoted[c] = False
                 weights.append(0.0)
@@ -586,7 +651,8 @@ class ChannelScheduler:
                 base = link_bw[c] / mean_link_bw
             else:
                 base = 1.0
-            self.demoted[c] = self._is_straggler(c, lats, counts)
+            self.demoted[c] = (self._is_straggler(c, lats, counts)
+                               or self.policy_demoted[c])
             if self.demoted[c]:
                 base = min(base, cfg.straggler_weight)
             t0 = self._ramp_start[c]
@@ -599,6 +665,7 @@ class ChannelScheduler:
                     self._ramp_start[c] = None
             weights.append(base)
         self.last_weights = weights
+        self._note_demotions()
         return states, weights
 
     # ------------------------------------------------------------------
@@ -715,4 +782,5 @@ class ChannelScheduler:
                 "recent": [round(r, 3) for r in self.recent],
                 "weights": [round(x, 4) for x in self.last_weights],
                 "demoted": list(self.demoted),
+                "excluded": list(self.excluded),
                 "tiers": [ch.tier for ch in self.world.channels]}

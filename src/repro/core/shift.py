@@ -1306,12 +1306,22 @@ class ShiftLib:
         # lifecycle observers: cb(event, qp) with event in
         # {"fallback", "recovery", "failed"} — scenario-engine hook
         self.event_listeners: List[Callable[[str, ShiftQP], None]] = []
+        # optional fault-policy engine (repro.policy): consulted on
+        # every lifecycle event, AFTER telemetry and listeners, so the
+        # policy sees the same post-transition state observers do
+        self.policy = None
 
     def add_event_listener(self,
                            cb: Callable[[str, "ShiftQP"], None]) -> None:
         """Observe lifecycle events: cb(event, qp) with event in
         {"fallback", "recovery", "failed"}."""
         self.event_listeners.append(cb)
+
+    def attach_policy(self, engine) -> None:
+        """Attach a :class:`repro.policy.FaultPolicyEngine`: its
+        ``on_lifecycle(lib, event, qp)`` hook fires on every fallback /
+        recovery / failed transition (the §4.4 decision point)."""
+        self.policy = engine
 
     def _emit_event(self, event: str, qp: "ShiftQP") -> None:
         # feed the fabric's per-rail telemetry first: a fallback/recovery
@@ -1320,6 +1330,8 @@ class ShiftLib:
         self.cluster.telemetry.note_lifecycle(event, qp.default.ctx.nic.index)
         for cb in list(self.event_listeners):
             cb(event, qp)
+        if self.policy is not None:
+            self.policy.on_lifecycle(self, event, qp)
 
     def invariant_snapshot(self) -> Dict[str, object]:
         """Library-wide state snapshot for post-run invariant checks."""

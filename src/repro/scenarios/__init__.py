@@ -16,6 +16,7 @@ Quick start::
 
 from .spec import FaultAction, Scenario, correlated, flap_train  # noqa: F401
 from .library import SCENARIOS, get, names  # noqa: F401
-from .engine import (Campaign, RunResult, WORKLOADS,  # noqa: F401
-                     make_pair, run_scenario)
+from .engine import (Campaign, POLICY_SCENARIOS, RunResult,  # noqa: F401
+                     WORKLOADS, make_pair, policy_dominance,
+                     run_policy_matrix, run_scenario)
 from .invariants import check_invariants  # noqa: F401

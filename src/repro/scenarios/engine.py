@@ -123,6 +123,18 @@ class RunResult:
     # JcclWorld.class_latency_stats. The invariants require every class
     # to have completed work on a completed run (no starvation).
     class_latency: Optional[Dict[str, Dict[str, float]]] = None
+    # fault-policy audit trail (policy-mode runs only): the name of the
+    # policy the run executed under and every decision the engine took,
+    # as (at, trigger, response, detail, signals) tuples — folded into
+    # the fingerprint, so policy behavior rides the same determinism
+    # contract as the fabric
+    policy: Optional[str] = None
+    decision_log: List[Tuple] = field(default_factory=list)
+    # virtual seconds the round loop itself consumed (excludes the
+    # settle window sim_elapsed includes): the recovered-throughput
+    # denominator of the policy comparison — rounds/work_elapsed stays
+    # meaningful whether a run was deadline- or round-capped
+    work_elapsed: float = 0.0
 
     @property
     def ok(self) -> bool:
@@ -149,6 +161,9 @@ class RunResult:
             tuple((k, s["count"], s["p50_virtual_ms"], s["p99_virtual_ms"])
                   for k, s in sorted(self.class_latency.items()))
             if self.class_latency is not None else None,
+            self.policy,
+            tuple(self.decision_log),
+            round(self.work_elapsed, 9),
         )
 
 
@@ -428,12 +443,49 @@ def run_pingpong(scenario: Scenario, seed: int = 0, n_msgs: int = 60,
 # ---------------------------------------------------------------------------
 
 
+def _attach_policy(policy: Optional[str], cluster, libs, world,
+                   result: RunResult, with_store: bool = True):
+    """Stand up a :class:`repro.policy.FaultPolicyEngine` for a policy-
+    mode run: engine + (optionally) a throwaway CheckpointStore attached
+    to the world, so "checkpoint" decisions put real background-class
+    replication traffic on the fabric (the cost the policy comparison
+    measures). Returns ``(engine, ckpt_dir)`` — ``(None, None)`` when
+    the run is policy-less."""
+    if policy is None:
+        return None, None
+    from repro.checkpoint import CheckpointStore
+    from repro.policy import FaultPolicyEngine
+
+    ckpt_dir = None
+    store = None
+    if with_store:
+        ckpt_dir = tempfile.mkdtemp(prefix="repro-policy-ckpt-")
+        store = CheckpointStore(ckpt_dir, keep=2)
+        store.attach_world(world)
+    engine = FaultPolicyEngine(policy)
+    engine.attach(cluster, libs, world=world, store=store)
+    result.policy = policy
+    return engine, ckpt_dir
+
+
+def _harvest_policy(engine, ckpt_dir, result: RunResult) -> None:
+    """Fold the engine's decision log into the result and drop the
+    throwaway checkpoint directory."""
+    if engine is not None:
+        result.decision_log = engine.audit()
+        if engine.store is not None:
+            engine.store.drain_stream(timeout=0.0)
+    if ckpt_dir is not None:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
 def _run_rounds(workload: str, scenario: Scenario, seed: int,
                 n_ranks: int, max_rounds: int, probe_interval: float,
                 fast: bool, channels: int, max_chunk_bytes: int,
                 round_fn, nics_per_host: Optional[int] = None,
                 min_concurrency: int = 0,
-                build_kw: Optional[dict] = None) -> RunResult:
+                build_kw: Optional[dict] = None,
+                policy: Optional[str] = None) -> RunResult:
     """Shared driver for JcclWorld round workloads: build the world,
     schedule the fault timeline, run ``round_fn(world, rng, timeout) ->
     payload mismatches`` until the traffic horizon/deadline, settle, and
@@ -442,7 +494,8 @@ def _run_rounds(workload: str, scenario: Scenario, seed: int,
     could never fence (see ``_traffic_horizon``) and min_fallbacks
     expectations would be vacuous. ``build_kw`` forwards extra
     ``build_world`` parameters (the hierarchical workload's multi-pod
-    topology)."""
+    topology). ``policy`` attaches a fault-policy engine
+    (repro.policy); its decisions land in ``RunResult.decision_log``."""
     from repro.collectives import CollectiveError, build_world
 
     result = RunResult(scenario=scenario.name, workload=workload,
@@ -454,6 +507,7 @@ def _run_rounds(workload: str, scenario: Scenario, seed: int,
         nics_per_host=nics_per_host or max(2, channels),
         **(build_kw or {}))
     _observe(cluster, libs, result)
+    engine, ckpt_dir = _attach_policy(policy, cluster, libs, world, result)
     t0 = cluster.sim.now
     scenario.schedule(cluster, t0)
     deadline = t0 + scenario.duration
@@ -469,12 +523,14 @@ def _run_rounds(workload: str, scenario: Scenario, seed: int,
         result.completed = result.rounds > 0
     except CollectiveError:
         result.aborted = True
+    result.work_elapsed = cluster.sim.now - t0
     # let probes / recovery handshakes settle inside the window
     cluster.sim.run(until=deadline + 0.05)
     result.payload_mismatches = mismatched
     result.event_count = cluster.sim._executed
     result.sim_elapsed = cluster.sim.now - t0
     _from_snapshot(world.stats_snapshot(), result)
+    _harvest_policy(engine, ckpt_dir, result)
     return result
 
 
@@ -482,10 +538,13 @@ def run_allreduce(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
                   elems: int = 1 << 14, max_rounds: int = 4000,
                   probe_interval: float = 5e-3, fast: bool = True,
                   channels: int = 1,
-                  nics_per_host: Optional[int] = None) -> RunResult:
+                  nics_per_host: Optional[int] = None,
+                  policy: Optional[str] = None) -> RunResult:
     """Repeated ring all-reduces; every round's numeric result must equal
     the true sum (payload-level exactly-once: a lost or doubled
-    contribution changes it)."""
+    contribution changes it). ``policy`` runs the cell under a fault-
+    policy engine (repro.policy) — the policy-comparison campaign's
+    workload of record."""
     def one_round(world, rng, timeout):
         arrays = [rng.randn(elems).astype(np.float32)
                   for _ in range(n_ranks)]
@@ -496,7 +555,7 @@ def run_allreduce(scenario: Scenario, seed: int = 0, n_ranks: int = 2,
 
     return _run_rounds("allreduce", scenario, seed, n_ranks, max_rounds,
                        probe_interval, fast, channels, 1 << 14, one_round,
-                       nics_per_host=nics_per_host)
+                       nics_per_host=nics_per_host, policy=policy)
 
 
 def run_overlap_allreduce(scenario: Scenario, seed: int = 0,
@@ -640,12 +699,16 @@ def run_ddp(scenario: Scenario, seed: int = 0, steps: int = 6,
             max_chunk_bytes: int = 1 << 18,
             bucket_bytes: Optional[int] = None,
             min_concurrency: int = 0,
-            workload_name: str = "ddp") -> RunResult:
+            workload_name: str = "ddp",
+            policy: Optional[str] = None) -> RunResult:
     """Short DDP training run under the scenario's fault timeline.
     ``bucket_bytes`` overrides the trainer's gradient bucketing (None
     keeps the default); ``min_concurrency`` declares an overlap floor
     the invariants enforce (the ``ddp_bucketed`` workload uses both to
-    force >= 4 concurrent gradient-bucket works per step)."""
+    force >= 4 concurrent gradient-bucket works per step). ``policy``
+    attaches a fault-policy engine that drives the trainer's §4.4
+    post-fallback checkpointing (the trainer saves its REAL state when
+    the engine decides "checkpoint" — no second store)."""
     from repro.collectives import build_world
     from repro.train.trainer import RestartNeeded, build_smoke_trainer
 
@@ -656,10 +719,13 @@ def run_ddp(scenario: Scenario, seed: int = 0, steps: int = 6,
         max_chunk_bytes=max_chunk_bytes, strict_order=False, fast=fast,
         channels=channels)
     _observe(cluster, libs, result)
+    engine, _ = _attach_policy(policy, cluster, libs, world, result,
+                               with_store=False)
     ckpt_dir = tempfile.mkdtemp(prefix="repro-campaign-ckpt-")
     trainer = build_smoke_trainer(cluster, libs, steps=steps,
                                   ckpt_dir=ckpt_dir, seed=seed,
                                   bucket_bytes=bucket_bytes)
+    trainer.policy = engine
     t0 = cluster.sim.now
     scheduled = [False]
 
@@ -699,6 +765,7 @@ def run_ddp(scenario: Scenario, seed: int = 0, steps: int = 6,
     result.event_count = cluster.sim._executed
     result.sim_elapsed = cluster.sim.now - t0
     _from_snapshot(world.stats_snapshot(), result)
+    _harvest_policy(engine, None, result)
     return result
 
 
@@ -1035,3 +1102,107 @@ class Campaign:
             for v in r.violations:
                 lines.append(f"    ! {v}")
         return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# policy-comparison campaign mode
+# ---------------------------------------------------------------------------
+
+#: The scenarios the policy comparison sweeps: a control, the headline
+#: binary faults (transient + permanent + flapping), and the two pure
+#: degradations — together they cover every branch of the adaptive
+#: decision table, and each fixed policy is optimal somewhere-ish and
+#: pathological somewhere else.
+POLICY_SCENARIOS = ("baseline_clean", "sender_nic_down",
+                    "nic_down_permanent", "link_flap_train",
+                    "slow_rail_straggler",
+                    "degraded_rail_proportional_share")
+
+
+def run_policy_matrix(policies: Optional[Sequence[str]] = None,
+                      scenario_names: Sequence[str] = POLICY_SCENARIOS,
+                      seed: int = 0, channels: int = 2,
+                      max_rounds: int = 800, elems: int = 1 << 15,
+                      fast: bool = True) -> Dict[str, Dict[str, dict]]:
+    """Run the same scenario set under every policy (the four fixed
+    baselines + adaptive by default) on the 2-channel allreduce
+    workload and return ``matrix[policy][scenario]`` cells.
+
+    Each cell records the **recovered throughput** — completed rounds
+    per virtual second over the scenario window — plus the invariant
+    verdict and the decision count. A cell that VIOLATES the standing
+    invariants scores zero throughput: a policy that breaks
+    exactly-once/share/recovery contracts earns no credit for any speed
+    it got in exchange (fixed ``shrink`` breaking the proportional-
+    share contract is the canonical case). Fully deterministic: same
+    seed ⇒ byte-identical matrix including every decision log."""
+    from repro.policy import POLICIES
+
+    from .library import get
+
+    policies = list(policies) if policies is not None else list(POLICIES)
+    matrix: Dict[str, Dict[str, dict]] = {}
+    for p in policies:
+        row: Dict[str, dict] = {}
+        for name in scenario_names:
+            r = run_scenario(get(name), workload="allreduce", seed=seed,
+                             policy=p, channels=channels,
+                             max_rounds=max_rounds, elems=elems,
+                             fast=fast)
+            span = r.work_elapsed or r.sim_elapsed
+            tput = (0.0 if r.violations or not span
+                    else r.rounds / span)
+            row[name] = {
+                "tput": round(tput, 3),
+                "rounds": r.rounds,
+                "work_elapsed": round(r.work_elapsed, 9),
+                "ok": not r.violations,
+                "violations": list(r.violations),
+                "decisions": len(r.decision_log),
+                "fallbacks": r.fallbacks,
+                "fingerprint": r.fingerprint(),
+            }
+        matrix[p] = row
+    return matrix
+
+
+def policy_dominance(matrix: Dict[str, Dict[str, dict]]) -> Dict[str, object]:
+    """Score a :func:`run_policy_matrix` result for the
+    ``policy_adaptive_dominance`` gate.
+
+    Aggregate recovered throughput per policy is the mean of its
+    per-scenario cells, each normalized by the best throughput ANY
+    policy achieved on that scenario (so every scenario contributes
+    equally regardless of its absolute round rate). Returns the
+    aggregates, the best fixed policy, ``adaptive_aggregate_ratio``
+    (adaptive / best fixed — the gate requires >= 1.0) and
+    ``min_cell_ratio`` (worst per-scenario adaptive vs the best FIXED
+    policy in that cell — the gate requires >= 0.9)."""
+    from repro.policy import FIXED_POLICIES
+
+    scenarios = list(next(iter(matrix.values())).keys())
+    best_cell = {s: max(matrix[p][s]["tput"] for p in matrix)
+                 for s in scenarios}
+    agg = {p: sum((matrix[p][s]["tput"] / best_cell[s])
+                  if best_cell[s] else 1.0 for s in scenarios)
+           / max(len(scenarios), 1)
+           for p in matrix}
+    fixed = [p for p in matrix if p in FIXED_POLICIES]
+    best_fixed = max(fixed, key=lambda p: agg[p]) if fixed else None
+    out: Dict[str, object] = {"aggregate": {p: round(a, 6)
+                                            for p, a in agg.items()},
+                              "best_fixed": best_fixed}
+    if best_fixed is not None and "adaptive" in matrix:
+        out["adaptive_aggregate_ratio"] = round(
+            agg["adaptive"] / agg[best_fixed], 6) if agg[best_fixed] else 1.0
+        cell_ratios = {}
+        for s in scenarios:
+            best_fixed_cell = max(matrix[p][s]["tput"] for p in fixed)
+            cell_ratios[s] = (matrix["adaptive"][s]["tput"]
+                              / best_fixed_cell if best_fixed_cell else 1.0)
+        worst = min(cell_ratios, key=cell_ratios.get)
+        out["cell_ratios"] = {s: round(v, 6)
+                              for s, v in cell_ratios.items()}
+        out["min_cell_ratio"] = round(cell_ratios[worst], 6)
+        out["worst_cell"] = worst
+    return out

@@ -294,6 +294,14 @@ SCENARIOS: Dict[str, Scenario] = {s.name: s for s in [
     ),
 ]}
 
+# Fuzz-promoted regression scenarios land here: when the randomized
+# fault-schedule fuzzer (tests/test_fault_fuzz.py) finds an
+# invariant-violating schedule, its seed replays deterministically and
+# the schedule is added above as a named Scenario (tag it "fuzz").
+# As of the policy-engine PR a 60-example-per-workload heavy pass
+# (benchmarks/run.py --fuzz-heavy 60) surfaced no violations — there
+# is nothing to promote yet.
+
 
 def get(name: str) -> Scenario:
     return SCENARIOS[name]

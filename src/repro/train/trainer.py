@@ -96,6 +96,10 @@ class TrainRun:
     comm_time: float = 0.0
     # peak number of concurrently in-flight gradient works in any step
     peak_works: int = 0
+    # fault-policy accounting (repro.policy): policy-directed
+    # post-fallback saves and shrink-world events this run consumed
+    policy_ckpts: int = 0
+    policy_shrinks: int = 0
 
 
 class DDPTrainer:
@@ -120,6 +124,11 @@ class DDPTrainer:
                                       seed=tcfg.seed)
                      for r in range(self.n)]
         self.store = CheckpointStore(tcfg.ckpt_dir, keep=2)
+        # optional fault-policy engine (repro.policy): when attached,
+        # the §4.4 post-fallback checkpoint fires when (and only when)
+        # the policy decided "checkpoint" — the raw fallback-delta
+        # trigger below stays authoritative otherwise
+        self.policy = None
         self._grad_fn = jax.jit(jax.value_and_grad(self.model.loss))
         self._err_fb = [None] * self.n  # int8 error feedback per rank
         # DCN error feedback, one dict per gradient bucket (the
@@ -246,7 +255,21 @@ class DDPTrainer:
                 now_fallbacks = sum(l.stats.fallbacks for l in shift_libs)
                 if now_fallbacks > last_fallbacks:
                     last_fallbacks = now_fallbacks
-                    ckpt_after_fallback_pending = True
+                    if self.policy is None:
+                        ckpt_after_fallback_pending = True
+                if self.policy is not None:
+                    # policy-directed: the engine already decided (and
+                    # rate-limited) at the fallback events themselves —
+                    # the trainer saves its REAL state exactly when a
+                    # "checkpoint" decision is pending, and counts
+                    # shrink-world actuations (the engine excluded the
+                    # channels at the scheduler already)
+                    acts = self.policy.consume_trainer_actions()
+                    if acts["checkpoint"]:
+                        ckpt_after_fallback_pending = True
+                        run.policy_ckpts += 1
+                    if acts["shrink"]:
+                        run.policy_shrinks += 1
                 if step % tcfg.ckpt_every == 0 or ckpt_after_fallback_pending:
                     self.store.save(step, state,
                                     {"reason": "post-fallback"

@@ -1,0 +1,182 @@
+"""Randomized fault-schedule fuzzing of the campaign invariants.
+
+Hypothesis-style property testing over the :class:`FaultAction`
+vocabulary: random schedules (kind, target, magnitude, timing all
+drawn from the fabric's own fault surface) are thrown at the pingpong
+and channelized-allreduce workloads, and the **fuzz-safe invariant
+subset** is asserted on every run:
+
+* exactly-once — no duplicate deliveries/notifies, ever;
+* notification order — the delivery trace stays sorted across any
+  number of failovers;
+* payload integrity — zero mismatched messages/rounds;
+* zero-copy — SHIFT never buffers payload bytes;
+* tag hygiene — a COMPLETED run leaves zero in-flight entries in
+  ``JcclWorld._tags``.
+
+Scenario *expectations* (masked/recovery/latency bounds) are
+deliberately NOT asserted: a random schedule may legitimately be
+unmaskable (both rails down) or storm-slow — the engine may abort such
+a run loudly, but it must never corrupt, duplicate, reorder or leak.
+
+Every example derives from a recorded integer seed (printed in the
+failure message), so any violation replays deterministically —
+promote it as a named regression scenario in ``scenarios/library.py``
+(see ``double_rail_outage`` for the shape). Example counts are bounded
+for PR CI and scaled up by ``REPRO_FUZZ_EXAMPLES`` (the
+``benchmarks/run.py --fuzz-heavy`` deep pass). The ``hypothesis``
+variants additionally shrink failing schedules when the dev-only
+dependency is installed (``tests/hyp_compat.py`` guards its absence).
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from hyp_compat import given, settings, st
+from repro.core import fabric
+from repro.scenarios import FaultAction, Scenario, run_scenario
+
+N_EXAMPLES = int(os.environ.get("REPRO_FUZZ_EXAMPLES", "4"))
+
+#: Every concrete NIC of the standard 2-host/2-rail testbed plus the
+#: correlated rail selectors — the full target vocabulary.
+TARGETS = ("host0/mlx5_0", "host0/mlx5_1", "host1/mlx5_0", "host1/mlx5_1",
+           "rail:0", "rail:1")
+
+#: (down, up) pairs of the binary fault kinds.
+BINARY = (("nic_down", "nic_up"), ("port_down", "port_up"),
+          ("link_down", "link_up"))
+
+
+def random_schedule(rng):
+    """Draw a random fault timeline: 1-4 clustered events, each a binary
+    down (2/3 of which recover), a bandwidth degradation or a latency
+    inflation (half of which restore) on a random NIC or whole rail."""
+    acts = []
+    for _ in range(rng.randint(1, 5)):
+        t = float(rng.uniform(0.002, 0.045))
+        target = TARGETS[rng.randint(len(TARGETS))]
+        roll = rng.randint(4)
+        if roll == 0:
+            frac = round(float(rng.uniform(0.05, 0.9)), 3)
+            acts.append(FaultAction(t, "bw_degrade", target, frac))
+            if rng.randint(2):
+                acts.append(FaultAction(
+                    t + float(rng.uniform(0.004, 0.03)), "bw_restore",
+                    target))
+        elif roll == 1:
+            mult = round(float(rng.uniform(1.5, 30.0)), 2)
+            acts.append(FaultAction(t, "lat_inflate", target, mult))
+            if rng.randint(2):
+                acts.append(FaultAction(
+                    t + float(rng.uniform(0.004, 0.03)), "lat_restore",
+                    target))
+        else:
+            down, up = BINARY[rng.randint(len(BINARY))]
+            acts.append(FaultAction(t, down, target))
+            if rng.randint(3):
+                acts.append(FaultAction(
+                    t + float(rng.uniform(0.004, 0.03)), up, target))
+    return tuple(sorted(acts, key=lambda a: (a.at, a.kind, a.target)))
+
+
+def fuzz_scenario(seed: int, acts=None) -> Scenario:
+    """Wrap a schedule in a Scenario with every *expectation* disabled —
+    only the standing invariants are the property under test."""
+    if acts is None:
+        acts = random_schedule(np.random.RandomState(seed))
+    return Scenario(
+        name=f"fuzz_{seed}",
+        description="randomized fault schedule (test_fault_fuzz)",
+        actions=acts, duration=0.08, expect_masked=False,
+        latency_bound=10.0)
+
+
+def assert_fuzz_invariants(r, seed: int, scenario: Scenario) -> None:
+    """The fuzz-safe invariant subset (see module docstring)."""
+    ctx = (f"seed={seed} schedule="
+           f"{[(a.at, a.kind, a.target, a.arg) for a in scenario.actions]}")
+    assert r.payload_bytes_held == 0, \
+        f"zero-copy violated: {r.payload_bytes_held}B held ({ctx})"
+    if r.delivered is not None:
+        assert len(r.delivered) == len(set(r.delivered)), \
+            f"duplicate deliveries ({ctx})"
+        assert r.delivered == sorted(r.delivered), \
+            f"delivery order violated ({ctx})"
+    assert r.payload_mismatches == 0, \
+        f"{r.payload_mismatches} corrupted payloads ({ctx})"
+    assert r.duplicate_notifies == 0, \
+        f"{r.duplicate_notifies} duplicate notifies ({ctx})"
+    assert r.order_violations == 0, \
+        f"{r.order_violations} out-of-order notifies ({ctx})"
+    for c in (r.channel_stats or []):
+        assert not c["duplicate_notifies"] and not c["order_violations"], \
+            f"channel {c['channel']} notify invariants violated ({ctx})"
+    if r.completed and not r.aborted:
+        assert r.leaked_tags == 0, \
+            f"{r.leaked_tags} leaked _tags entries ({ctx})"
+
+
+# ---------------------------------------------------------------------------
+# deterministic seeded sweep (always runs; no optional dependency)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(N_EXAMPLES))
+def test_fuzz_pingpong(seed):
+    sc = fuzz_scenario(seed)
+    r = run_scenario(sc, workload="pingpong", seed=seed)
+    assert_fuzz_invariants(r, seed, sc)
+
+
+@pytest.mark.parametrize("seed", range(1000, 1000 + N_EXAMPLES))
+def test_fuzz_allreduce(seed):
+    sc = fuzz_scenario(seed)
+    r = run_scenario(sc, workload="allreduce", seed=seed, channels=2,
+                     max_rounds=120, elems=1 << 12)
+    assert_fuzz_invariants(r, seed, sc)
+
+
+def test_fuzz_run_is_deterministic():
+    """Same seed, same schedule => byte-identical fingerprint — a
+    violation found by the fuzzer always replays."""
+    sc = fuzz_scenario(7)
+    r1 = run_scenario(sc, workload="allreduce", seed=7, channels=2,
+                      max_rounds=60, elems=1 << 10)
+    r2 = run_scenario(sc, workload="allreduce", seed=7, channels=2,
+                      max_rounds=60, elems=1 << 10)
+    assert r1.fingerprint() == r2.fingerprint()
+
+
+def test_schedule_generator_covers_vocabulary():
+    """The generator draws from the FULL FaultAction vocabulary — every
+    kind class (binary down/up, degradations, restores) appears across
+    a modest seed sweep, so the fuzzer isn't silently testing a corner."""
+    kinds = {a.kind for s in range(64)
+             for a in random_schedule(np.random.RandomState(s))}
+    assert kinds == set(fabric.Cluster.FAULT_KINDS), \
+        f"generator never draws {set(fabric.Cluster.FAULT_KINDS) - kinds}"
+
+
+# ---------------------------------------------------------------------------
+# hypothesis variants (shrinking; skip when the dev-dep is absent)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=max(N_EXAMPLES, 4), deadline=None,
+          derandomize=True)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_fuzz_pingpong_hypothesis(seed):
+    sc = fuzz_scenario(seed)
+    r = run_scenario(sc, workload="pingpong", seed=seed % 1000)
+    assert_fuzz_invariants(r, seed, sc)
+
+
+@settings(max_examples=max(N_EXAMPLES, 4), deadline=None,
+          derandomize=True)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_fuzz_allreduce_hypothesis(seed):
+    sc = fuzz_scenario(seed)
+    r = run_scenario(sc, workload="allreduce", seed=seed % 1000,
+                     channels=2, max_rounds=80, elems=1 << 11)
+    assert_fuzz_invariants(r, seed, sc)

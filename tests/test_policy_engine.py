@@ -1,0 +1,345 @@
+"""Fault-policy engine tests (ISSUE-9 tentpole).
+
+Covers the adaptive decision table (docs/policies.md), the fixed
+baselines' memorylessness, the post-fallback checkpoint contracts
+(exactly ONE save per fallback burst; crash between decision and save
+leaves the prior checkpoint restorable), the trainer integration, and
+the policy-comparison campaign's determinism (byte-identical audit
+trails on same-seed reruns).
+"""
+
+import os
+import subprocess
+import sys
+import types
+
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import CheckpointStore
+from repro.core.fabric import build_cluster
+from repro.policy import (FIXED_POLICIES, POLICIES, FaultPolicyEngine,
+                          PolicyConfig)
+from repro.scenarios import SCENARIOS, run_policy_matrix, run_scenario
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+
+def _engine(policy="adaptive", store=None, libs=(), **cfg):
+    cluster = build_cluster()
+    eng = FaultPolicyEngine(policy, PolicyConfig(**cfg) if cfg else None)
+    eng.attach(cluster, list(libs), store=store)
+    return cluster, eng
+
+
+def _responses(eng):
+    return [d.response for d in eng.decisions]
+
+
+class _FakeQP:
+    """Just enough ShiftQP surface for lifecycle-hook tests."""
+
+    def __init__(self, cluster, gid="host0/mlx5_0"):
+        nic = cluster.nic_by_gid[gid]
+        self.default = types.SimpleNamespace(
+            ctx=types.SimpleNamespace(nic=nic))
+        self.flap_times = []
+
+
+class _FakeLib:
+    def __init__(self, cluster):
+        self.shift_qps = [_FakeQP(cluster)]
+        self.stats = types.SimpleNamespace(fallbacks=0)
+        self.policy = None
+
+    def attach_policy(self, engine):
+        self.policy = engine
+
+
+# ---------------------------------------------------------------------------
+# adaptive decision table
+# ---------------------------------------------------------------------------
+
+def test_unknown_policy_rejected():
+    with pytest.raises(ValueError):
+        FaultPolicyEngine("yolo")
+
+
+@pytest.mark.parametrize("kind,arg,expected", [
+    ("bw_degrade", 0.05, "shrink"),      # heavy: <= shrink_bw_frac
+    ("bw_degrade", 0.25, "shrink"),      # boundary is inclusive
+    ("bw_degrade", 0.5, "demote"),       # moderate
+    ("lat_inflate", 25.0, "shrink"),     # heavy: >= shrink_lat_mult
+    ("lat_inflate", 2.0, "demote"),      # moderate
+    ("nic_down", None, "shift_fallback"),
+    ("port_down", None, "shift_fallback"),
+    ("link_down", None, "shift_fallback"),
+])
+def test_adaptive_fault_responses(kind, arg, expected):
+    cluster, eng = _engine("adaptive")
+    cluster.apply_fault(kind, "host0/mlx5_0", arg)
+    assert _responses(eng) == [expected], eng.decisions
+
+
+@pytest.mark.parametrize("down,up", [
+    ("nic_down", "nic_up"), ("port_down", "port_up"),
+    ("link_down", "link_up"), ("bw_degrade", "bw_restore"),
+    ("lat_inflate", "lat_restore"),
+])
+def test_adaptive_restores_readmit(down, up):
+    cluster, eng = _engine("adaptive")
+    arg = {"bw_degrade": 0.5, "lat_inflate": 2.0}.get(down)
+    cluster.apply_fault(down, "host0/mlx5_0", arg)
+    cluster.apply_fault(up, "host0/mlx5_0")
+    assert _responses(eng)[-1] == "readmit"
+
+
+def test_rail_selector_decides_per_nic():
+    """A correlated rail fault yields one decision per affected NIC —
+    the audit trail distinguishes the two hosts' rails."""
+    cluster, eng = _engine("adaptive")
+    cluster.apply_fault("bw_degrade", "rail:0", 0.05)
+    assert _responses(eng) == ["shrink", "shrink"]
+    assert {d.signals.target for d in eng.decisions} == \
+        {"host0/mlx5_0", "host1/mlx5_0"}
+
+
+def test_decisions_record_signal_snapshots():
+    cluster, eng = _engine("adaptive")
+    cluster.apply_fault("nic_down", "host1/mlx5_1")
+    (d,) = eng.decisions
+    assert d.trigger == "fault:nic_down"
+    assert d.signals.rail == 1
+    assert d.signals.target == "host1/mlx5_1"
+    assert isinstance(d.as_tuple(), tuple)
+    assert eng.audit() == [d.as_tuple()]
+
+
+# ---------------------------------------------------------------------------
+# fixed baselines: namesake response, memoryless
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", FIXED_POLICIES)
+def test_fixed_policy_applies_namesake(policy):
+    cluster, eng = _engine(policy)
+    cluster.apply_fault("nic_down", "host0/mlx5_0")
+    cluster.apply_fault("bw_degrade", "host0/mlx5_1", 0.1)
+    assert _responses(eng) == [policy, policy]
+
+
+@pytest.mark.parametrize("policy", FIXED_POLICIES)
+def test_fixed_policy_never_readmits(policy):
+    """Fixed baselines are memoryless single-response policies: the
+    restore signal undoes nothing (undoing is what adaptive adds)."""
+    cluster, eng = _engine(policy)
+    cluster.apply_fault("nic_down", "host0/mlx5_0")
+    n = len(eng.decisions)
+    cluster.apply_fault("nic_up", "host0/mlx5_0")
+    assert len(eng.decisions) == n
+    assert "readmit" not in _responses(eng)
+
+
+# ---------------------------------------------------------------------------
+# fallback lifecycle: checkpoint rate limit + storm detection
+# ---------------------------------------------------------------------------
+
+def test_calm_fallback_checkpoints_once_per_burst():
+    """Exactly ONE post-fallback save per fallback burst: the first
+    fallback decides "checkpoint", further fallbacks inside
+    ``min_ckpt_interval`` ride in place, and the next burst (after the
+    interval) checkpoints again."""
+    cluster = build_cluster()
+    lib = _FakeLib(cluster)
+    eng = FaultPolicyEngine("adaptive", PolicyConfig(min_ckpt_interval=25e-3))
+    eng.attach(cluster, [lib])
+    qp = lib.shift_qps[0]
+    eng.on_lifecycle(lib, "fallback", qp)
+    eng.on_lifecycle(lib, "fallback", qp)     # same burst: rate-limited
+    cluster.sim.run(until=0.05)               # interval expires
+    eng.on_lifecycle(lib, "fallback", qp)     # new burst
+    assert _responses(eng) == ["checkpoint", "shift_fallback", "checkpoint"]
+    assert "ckpt rate-limited" in eng.decisions[1].detail
+
+
+def test_flap_storm_shrinks_instead_of_checkpointing():
+    cluster = build_cluster()
+    lib = _FakeLib(cluster)
+    eng = FaultPolicyEngine("adaptive",
+                            PolicyConfig(flap_window=30e-3, storm_flaps=3))
+    eng.attach(cluster, [lib])
+    qp = lib.shift_qps[0]
+    qp.flap_times = [0.001, 0.002, 0.003]     # 3 flaps in the window
+    eng.on_lifecycle(lib, "fallback", qp)
+    assert _responses(eng) == ["shrink"]
+    assert eng.decisions[0].signals.recent_flaps == 3
+
+
+def test_failed_lifecycle_shrinks():
+    cluster = build_cluster()
+    lib = _FakeLib(cluster)
+    eng = FaultPolicyEngine("adaptive")
+    eng.attach(cluster, [lib])
+    eng.on_lifecycle(lib, "failed", lib.shift_qps[0])
+    assert _responses(eng) == ["shrink"]
+    assert eng.consume_trainer_actions()["shrink"] is True
+
+
+def test_recovery_lifecycle_readmits():
+    cluster = build_cluster()
+    lib = _FakeLib(cluster)
+    eng = FaultPolicyEngine("adaptive")
+    eng.attach(cluster, [lib])
+    eng.on_lifecycle(lib, "recovery", lib.shift_qps[0])
+    assert _responses(eng) == ["readmit"]
+
+
+# ---------------------------------------------------------------------------
+# checkpoint actuation: exactly-once per burst, crash windows
+# ---------------------------------------------------------------------------
+
+def test_store_sees_one_save_per_burst(tmp_path):
+    store = CheckpointStore(str(tmp_path / "ckpt"), keep=4)
+    cluster = build_cluster()
+    lib = _FakeLib(cluster)
+    eng = FaultPolicyEngine("adaptive", PolicyConfig(min_ckpt_interval=25e-3))
+    eng.attach(cluster, [lib], store=store)
+    qp = lib.shift_qps[0]
+    for _ in range(4):                        # a flap train, one burst
+        eng.on_lifecycle(lib, "fallback", qp)
+    cluster.sim.run(until=0.01)               # deferred save event fires
+    assert eng.saves == 1
+    assert store.list_steps() == [1]
+    _, meta = store.restore({"policy_state": np.zeros(1, np.float32)})
+    assert meta["reason"] == "post-fallback"
+
+
+def test_fixed_checkpoint_baseline_save_storms(tmp_path):
+    """The fixed ``checkpoint`` baseline is deliberately NOT
+    rate-limited — it exists to price the save storm the adaptive rate
+    limit avoids."""
+    store = CheckpointStore(str(tmp_path / "ckpt"), keep=8)
+    cluster = build_cluster()
+    lib = _FakeLib(cluster)
+    eng = FaultPolicyEngine("checkpoint")
+    eng.attach(cluster, [lib], store=store)
+    qp = lib.shift_qps[0]
+    for _ in range(3):
+        eng.on_lifecycle(lib, "fallback", qp)
+    cluster.sim.run(until=0.01)
+    assert eng.saves == 3
+    assert store.list_steps() == [1, 2, 3]
+
+
+_CRASH_CHILD = """
+import os, sys
+import numpy as np
+from repro.core.fabric import build_cluster
+from repro.checkpoint.store import CheckpointStore
+from repro.policy import FaultPolicyEngine
+
+store = CheckpointStore({root!r}, keep=2, async_save={async_save})
+store.save(1, {{"w": np.full((32,), 7.0, np.float32)}}, {{"reason": "base"}})
+store.wait()
+cluster = build_cluster()
+eng = FaultPolicyEngine("adaptive")
+eng.attach(cluster, [], store=store)
+eng._act_checkpoint(cluster.sim.now)   # decision recorded, save deferred
+{extra}
+os._exit(0)                            # crash {when}
+"""
+
+
+def _run_crash_child(code, tmp_path):
+    env = dict(os.environ, PYTHONPATH=SRC)
+    subprocess.run([sys.executable, "-c", code], env=env,
+                   cwd=str(tmp_path), timeout=120)
+
+
+def test_crash_between_decision_and_save_keeps_prior_restorable(tmp_path):
+    """A crash injected BETWEEN the policy decision and the deferred
+    save must leave the prior committed checkpoint restorable — the
+    decision alone touches nothing on disk."""
+    root = str(tmp_path / "ckpt")
+    _run_crash_child(_CRASH_CHILD.format(
+        root=root, async_save=False, extra="",
+        when="before the deferred sim event runs"), tmp_path)
+    store = CheckpointStore(root, keep=2)
+    assert store.list_steps() == [1]
+    restored, meta = store.restore({"w": np.zeros(32, np.float32)})
+    assert meta["reason"] == "base"
+    np.testing.assert_array_equal(restored["w"],
+                                  np.full((32,), 7.0, np.float32))
+
+
+def test_crash_during_policy_save_keeps_prior_restorable(tmp_path):
+    """``os._exit`` while the policy's async save is in flight: the
+    marker-last commit protocol keeps every step ``list_steps`` reports
+    restorable — a torn policy save is invisible."""
+    root = str(tmp_path / "ckpt")
+    _run_crash_child(_CRASH_CHILD.format(
+        root=root, async_save=True,
+        extra="cluster.sim.run(until=0.01)   # save issued to the writer",
+        when="mid-save"), tmp_path)
+    store = CheckpointStore(root, keep=2)
+    steps = store.list_steps()
+    assert 1 in steps
+    for step in steps:
+        restored, meta = store.restore(
+            {"w": np.zeros(32, np.float32)} if step == 1
+            else {"policy_state": np.zeros(4096, np.float32)}, step=step)
+        assert meta["step"] == step
+
+
+# ---------------------------------------------------------------------------
+# trainer integration
+# ---------------------------------------------------------------------------
+
+def test_trainer_consumes_policy_checkpoint_decision():
+    """A policy-mode ddp run routes the §4.4 post-fallback save through
+    the engine: the decision lands in the audit trail and the trainer
+    saves with reason="post-fallback" (its own store, real state)."""
+    r = run_scenario(SCENARIOS["sender_nic_down"], workload="ddp",
+                     policy="adaptive")
+    assert r.policy == "adaptive"
+    responses = [d[2] for d in r.decision_log]
+    assert "checkpoint" in responses, r.decision_log
+    assert r.fallbacks >= 1
+
+
+# ---------------------------------------------------------------------------
+# campaign determinism: byte-identical audit trails
+# ---------------------------------------------------------------------------
+
+def test_policy_matrix_deterministic_including_decisions():
+    """Same seed, same matrix — byte-identical cells INCLUDING the
+    decision logs and the fingerprints they fold into."""
+    kw = dict(policies=("checkpoint", "adaptive"),
+              scenario_names=("link_flap_train",),
+              max_rounds=60, elems=1 << 10)
+    m1 = run_policy_matrix(**kw)
+    m2 = run_policy_matrix(**kw)
+    assert m1 == m2
+    cell = m1["adaptive"]["link_flap_train"]
+    assert cell["decisions"] > 0
+    assert cell["fingerprint"] == \
+        m2["adaptive"]["link_flap_train"]["fingerprint"]
+
+
+def test_policy_run_fingerprint_covers_decision_log():
+    """Two runs of the same cell under DIFFERENT policies produce
+    different fingerprints — the audit trail is part of the determinism
+    contract, not a side channel."""
+    kw = dict(workload="allreduce", seed=0, channels=2, max_rounds=60,
+              elems=1 << 10)
+    r_fixed = run_scenario(SCENARIOS["link_flap_train"],
+                           policy="shift_fallback", **kw)
+    r_adaptive = run_scenario(SCENARIOS["link_flap_train"],
+                              policy="adaptive", **kw)
+    assert r_fixed.policy != r_adaptive.policy
+    assert r_fixed.fingerprint() != r_adaptive.fingerprint()
+
+
+def test_policies_export_is_consistent():
+    assert set(FIXED_POLICIES) < set(POLICIES)
+    assert "adaptive" in POLICIES and "adaptive" not in FIXED_POLICIES

@@ -1,0 +1,213 @@
+"""Property tests for straggler handling (ISSUE-9 satellite).
+
+Two layers are covered:
+
+* :class:`repro.train.straggler.StragglerMonitor` — the trainer-side
+  comm-time watcher: it must never double-demote a rank inside its
+  cooldown window, must demand ``patience`` *consecutive* slow steps
+  before acting, and must never touch a rank at the fleet median.
+* :class:`repro.collectives.channel.ChannelScheduler` — the policy
+  actuation surface: forced demotion caps the rail at the straggler
+  floor share (never zero, never full), ``exclude`` refuses to empty
+  the world, and readmission re-enters through the standard recovery
+  ramp, whose weight climb is monotone (no knock-back to the floor
+  mid-climb).
+
+The randomized sweeps draw from seeded ``numpy.random.RandomState`` so
+every failure replays deterministically; ``hypothesis`` variants add
+shrinking when the dev-only dependency is installed.
+"""
+
+import numpy as np
+import pytest
+
+from hyp_compat import given, settings, st
+from repro.collectives import build_world
+from repro.train.straggler import StragglerConfig, StragglerMonitor
+
+
+class _RecordingMonitor(StragglerMonitor):
+    """Monitor with the SHIFT actuation stubbed out: records migration
+    attempts instead of force-failing real QPs (the detection/cooldown
+    state machine under test is identical)."""
+
+    def _migrate(self, rank):
+        self.migrations.append((self.step, rank))
+        return True
+
+
+def _drive(monitor, slow_rank, n_steps, slow_factor=10.0, base=1e-3):
+    for _ in range(n_steps):
+        times = {r: base for r in range(4)}
+        times[slow_rank] = base * slow_factor
+        monitor.observe(times)
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor properties
+# ---------------------------------------------------------------------------
+
+def test_never_double_demotes_inside_cooldown():
+    cfg = StragglerConfig(patience=3, cooldown_steps=10)
+    m = _RecordingMonitor([None] * 4, cfg)
+    _drive(m, slow_rank=2, n_steps=40)
+    steps = [s for s, r in m.migrations if r == 2]
+    assert steps, "persistent straggler never acted on"
+    gaps = np.diff(steps)
+    assert (gaps >= cfg.cooldown_steps).all(), \
+        f"double-demote inside cooldown: action steps {steps}"
+
+
+@pytest.mark.parametrize("patience", [1, 3, 6])
+def test_patience_delays_first_action(patience):
+    """The first migration needs ``patience`` consecutive slow
+    observations — it can never fire earlier, whatever the trace."""
+    cfg = StragglerConfig(patience=patience, cooldown_steps=5)
+    m = _RecordingMonitor([None] * 4, cfg)
+    _drive(m, slow_rank=1, n_steps=20)
+    assert m.migrations, "persistent straggler never acted on"
+    assert m.migrations[0][0] >= patience, \
+        f"acted at step {m.migrations[0][0]} < patience {patience}"
+
+
+def test_uniform_fleet_never_migrated():
+    """No straggler, no action — even at the most trigger-happy
+    patience/cooldown settings."""
+    m = _RecordingMonitor([None] * 4,
+                          StragglerConfig(patience=1, cooldown_steps=1))
+    for _ in range(30):
+        m.observe({r: 1e-3 for r in range(4)})
+    assert m.migrations == []
+
+
+def test_median_rank_never_migrated():
+    cfg = StragglerConfig(patience=2, cooldown_steps=2)
+    m = _RecordingMonitor([None] * 4, cfg)
+    _drive(m, slow_rank=3, n_steps=25)
+    assert all(r == 3 for _, r in m.migrations), \
+        f"non-straggler migrated: {m.migrations}"
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_cooldown_property_random_traces(seed):
+    """Random comm-time traces: whatever the trace, per-rank actions
+    are spaced >= cooldown_steps apart (seeded, replayable)."""
+    rng = np.random.RandomState(seed)
+    cfg = StragglerConfig(patience=int(rng.randint(1, 4)),
+                          cooldown_steps=int(rng.randint(2, 12)))
+    m = _RecordingMonitor([None] * 4, cfg)
+    for _ in range(60):
+        times = {r: float(rng.uniform(0.5e-3, 2e-3)) for r in range(4)}
+        if rng.randint(2):
+            times[int(rng.randint(4))] *= float(rng.uniform(3.0, 20.0))
+        m.observe(times)
+    per_rank = {}
+    for s, r in m.migrations:
+        per_rank.setdefault(r, []).append(s)
+    for r, steps in per_rank.items():
+        gaps = np.diff(steps)
+        assert (gaps >= cfg.cooldown_steps).all(), \
+            f"seed={seed} rank {r} action steps {steps} violate " \
+            f"cooldown {cfg.cooldown_steps}"
+
+
+@settings(max_examples=20, deadline=None, derandomize=True)
+@given(st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_cooldown_property_hypothesis(seed):
+    test_cooldown_property_random_traces(seed)
+
+
+# ---------------------------------------------------------------------------
+# ChannelScheduler actuation properties (the policy engine's surface)
+# ---------------------------------------------------------------------------
+
+def _weights(world):
+    _, w = world.scheduler.channel_weights(0, 1)
+    return w
+
+
+def test_forced_demotion_respects_floor_share():
+    """A force-demoted channel is capped at the straggler floor weight:
+    strictly positive (never dark) and at most ``straggler_weight`` of
+    a healthy channel (never fully loaded)."""
+    _, _, world = build_world(n_ranks=2, channels=2)
+    sched = world.scheduler
+    cfg = sched.cfg
+    sched.force_demote(0)
+    w = _weights(world)
+    assert w[0] > 0.0, "demoted channel went fully dark"
+    assert w[0] <= cfg.straggler_weight * max(w[1], 1e-12) + 1e-12, \
+        f"demoted channel above the floor cap: {w}"
+    assert sched.demoted[0] and not sched.demoted[1]
+
+
+def test_forced_demotion_is_idempotent():
+    """Demoting an already-demoted channel changes nothing — the policy
+    engine may fire on every fault of a storm."""
+    _, _, world = build_world(n_ranks=2, channels=2)
+    sched = world.scheduler
+    sched.force_demote(0)
+    w1 = _weights(world)
+    for _ in range(5):
+        sched.force_demote(0)
+    assert _weights(world) == w1
+
+
+def test_exclude_refuses_to_empty_the_world():
+    _, _, world = build_world(n_ranks=2, channels=2)
+    sched = world.scheduler
+    assert sched.exclude(0) is True
+    assert _weights(world)[0] == 0.0
+    assert sched.exclude(1) is False, \
+        "scheduler excluded its last usable channel"
+    assert _weights(world)[1] > 0.0
+
+
+def test_readmission_ramp_is_monotone():
+    """After readmit() the channel's weight climbs monotonically from
+    the ramp floor back to full — never knocked back mid-climb."""
+    _, _, world = build_world(n_ranks=2, channels=2)
+    sched = world.scheduler
+    cfg = sched.cfg
+    sim = world.sim
+    sched.force_demote(0)
+    _weights(world)
+    sched.readmit(0)
+    seen = []
+    t0 = sim.now
+    steps = 16
+    for i in range(steps + 1):
+        sim.run(until=t0 + cfg.ramp_time * (i + 1) / steps)
+        seen.append(_weights(world)[0])
+    assert seen[0] < seen[-1], f"ramp never climbed: {seen}"
+    assert all(b >= a - 1e-12 for a, b in zip(seen, seen[1:])), \
+        f"ramp not monotone: {seen}"
+    assert seen[-1] == pytest.approx(_weights(world)[1]), \
+        "readmitted channel never returned to full weight"
+    assert not sched.policy_demoted[0] and not sched.excluded[0]
+
+
+def test_readmit_after_exclude_restores_service():
+    _, _, world = build_world(n_ranks=2, channels=2)
+    sched = world.scheduler
+    sched.exclude(0)
+    assert _weights(world)[0] == 0.0
+    sched.readmit(0)
+    world.sim.run(until=world.sim.now + sched.cfg.ramp_time * 2)
+    assert _weights(world)[0] > 0.0
+
+
+def test_demotion_transitions_fire_policy_hook_once():
+    """The audit hook sees each demote/readmit TRANSITION exactly once,
+    not once per weight computation."""
+    _, _, world = build_world(n_ranks=2, channels=2)
+    sched = world.scheduler
+    events = []
+    sched.policy_hook = lambda action, ch: events.append((action, ch))
+    sched.force_demote(0)
+    for _ in range(4):
+        _weights(world)
+    sched.readmit(0)
+    for _ in range(4):
+        _weights(world)
+    assert events == [("demote", 0), ("readmit", 0)]
