@@ -66,6 +66,19 @@ Benchmarks
     overlapped is byte-identical to sequential); a mismatch fails the
     benchmark outright.
 
+``ddp_hook_overlap``
+    Issue-as-produced backward-hook overlap (DESIGN.md §13), VIRTUAL
+    time: the smoke trainer under a modeled per-segment backward cost,
+    comparing flat, post-backward overlapped and hooked gradient sync
+    end-to-end (modeled compute + exposed comm per step). Gated on
+    three absolute checks plus the 20% rule: the hooked comm/compute
+    overlap fraction must be >= 0.5, the hooked virtual step time must
+    be STRICTLY faster than the post-backward overlapped path, and
+    losses must be byte-identical across all three modes AND in the
+    ddp_hooked campaign cell under a mid-backward striped rail kill —
+    a divergence means issuing buckets early changed the reduction, a
+    correctness bug in the readiness schedule, not a perf regression.
+
 ``serving_tp``
     Continuous-batching tensor-parallel serving throughput (tokens per
     VIRTUAL second, deterministic) on a 2-rank 2-channel world: healthy
@@ -158,6 +171,8 @@ GATED_RATIOS = {
     "quad_rail_busbw.busbw_ratio_degraded": True,
     "straggler_resteer_latency.detect_virtual_ms": False,
     "ddp_overlap_speedup.speedup": True,
+    "ddp_hook_overlap.overlap_fraction": True,
+    "ddp_hook_overlap.step_speedup": True,
     "serving_tp.tokens_per_s": True,
     "serving_tp.tokens_per_s_fault": True,
     "latency_slo.p99_ratio": False,
@@ -181,6 +196,13 @@ DEGRADED_MIN_RATIO = 1.7
 # bucketed-overlapped DDP must beat the sequential-bucketed baseline by
 # this factor on virtual comm time (the ISSUE-5 acceptance floor)
 DDP_OVERLAP_MIN_RATIO = 1.2
+# issue-as-produced backward hooks (ISSUE-10 acceptance floors): with
+# modeled per-layer compute, >= half the gradient-comm window must run
+# UNDER the backward, and the end-to-end virtual step time must be
+# STRICTLY faster than the post-backward overlapped path (> 1.0 —
+# overlap that does not shorten the step is vacuous)
+HOOK_MIN_OVERLAP_FRACTION = 0.5
+HOOK_MIN_STEP_SPEEDUP = 1.0
 # latency-class SLO floors (virtual, deterministic): under mixed load
 # the critical class's p99 completion latency must stay within 2x its
 # solo p99, bulk must retain >= 0.9x of its FIFO (no-priority) goodput,
@@ -492,6 +514,94 @@ def bench_ddp_overlap(steps: int = 2, bucket_bytes: int = 1 << 16):
         "losses_identical": seq_losses == ovl_losses,
         "speedup": round(seq["comm_virtual_ms"] / ovl["comm_virtual_ms"],
                          3),
+    }
+
+
+def bench_ddp_hook_overlap(steps: int = 2, bucket_bytes: int = 1 << 16,
+                           layer_compute_s: float = 2e-4):
+    """Issue-as-produced backward-hook overlap vs the post-backward
+    paths, in VIRTUAL time (deterministic). All runs share one compute
+    model — every backward segment (head / per-layer row / embed)
+    costs ``layer_compute_s`` virtual seconds — so the end-to-end
+    virtual step time (modeled backward + exposed comm) is comparable:
+    ``flat`` charges the whole backward then one flat all-reduce,
+    ``post_backward`` charges the whole backward then overlapped
+    buckets (the old best path), ``hooked`` fires each bucket the
+    moment its last leaf lands while later segments still compute.
+    Losses must match byte-for-byte across all three (the aligned
+    bucket bounds make reordering the ISSUE time the only change), the
+    hooked overlap fraction must clear its floor, the hooked step must
+    be STRICTLY faster than post-backward, and the ``fault_cell`` — the
+    ddp_hooked campaign workload under a mid-backward striped rail
+    kill — must complete with zero payload mismatches against its
+    clean post-backward reference."""
+    import shutil
+    import tempfile
+
+    from repro.collectives import build_world
+    from repro.scenarios import SCENARIOS, run_scenario
+    from repro.train.trainer import build_smoke_trainer
+
+    def one(bb, issue_as_produced):
+        cluster, libs, world = build_world(n_ranks=2, channels=2,
+                                           max_chunk_bytes=1 << 14)
+        ckpt = tempfile.mkdtemp(prefix="repro-bench-hook-")
+        try:
+            trainer = build_smoke_trainer(
+                cluster, libs, steps=steps, ckpt_dir=ckpt,
+                bucket_bytes=bb, overlap=True,
+                issue_as_produced=issue_as_produced,
+                layer_compute_s=layer_compute_s)
+            run = trainer.train(world)
+        finally:
+            shutil.rmtree(ckpt, ignore_errors=True)
+        raw_losses = [l for _, _, l in run.timeline]
+        return {
+            "step_virtual_ms": round(
+                sum(run.step_grad_times) / max(len(run.step_grad_times), 1)
+                * 1e3, 6),
+            "overlap_fraction": round(run.overlap_fraction, 6),
+            "first_issue_ms": [round(x * 1e3, 6)
+                               for x in run.first_issue_offsets],
+            "peak_concurrent_works": run.peak_works,
+            "steps": run.final_step,
+            "losses": [round(l, 6) for l in raw_losses],
+        }, raw_losses
+
+    flat, flat_losses = one(0, False)
+    post, post_losses = one(bucket_bytes, False)
+    hooked, hooked_losses = one(bucket_bytes, True)
+    fr = run_scenario(SCENARIOS["rail_kill_striped"],
+                      workload="ddp_hooked", steps=steps,
+                      bucket_bytes=bucket_bytes,
+                      layer_compute_s=layer_compute_s)
+    return {
+        "config": {"steps": steps, "bucket_bytes": bucket_bytes,
+                   "layer_compute_s": layer_compute_s,
+                   "note": "virtual grad-phase time per step (modeled "
+                           "backward + exposed comm); hooked issues "
+                           "each bucket as its leaves are produced"},
+        "flat": flat,
+        "post_backward": post,
+        "hooked": hooked,
+        "fault_cell": {
+            "scenario": "rail_kill_striped",
+            "completed": fr.completed,
+            "invariants_ok": fr.ok,
+            "fallbacks": fr.fallbacks,
+            "payload_mismatches": fr.payload_mismatches,
+            "overlap_fraction": round(fr.overlap_fraction, 6),
+        },
+        # compared UNROUNDED: a one-ulp reduction-order divergence must
+        # fail the gate; the fault cell's byte-identity is checked by
+        # the ddp_hooked workload itself (loss trace vs its clean
+        # post-backward reference -> payload_mismatches)
+        "losses_identical": flat_losses == post_losses == hooked_losses,
+        "fault_losses_identical": (fr.completed and fr.ok
+                                   and fr.payload_mismatches == 0),
+        "overlap_fraction": hooked["overlap_fraction"],
+        "step_speedup": round(post["step_virtual_ms"]
+                              / hooked["step_virtual_ms"], 3),
     }
 
 
@@ -860,6 +970,7 @@ def run_suite(quick: bool = False) -> dict:
     quad = bench_quad_rail_busbw()
     straggler = bench_straggler_resteer()
     ddp_overlap = bench_ddp_overlap()
+    ddp_hook = bench_ddp_hook_overlap()
     serving = bench_serving_tp()
     latency_slo = bench_latency_slo()
     hier = bench_hierarchical_busbw()
@@ -879,6 +990,7 @@ def run_suite(quick: bool = False) -> dict:
             "quad_rail_busbw": quad,
             "straggler_resteer_latency": straggler,
             "ddp_overlap_speedup": ddp_overlap,
+            "ddp_hook_overlap": ddp_hook,
             "serving_tp": serving,
             "latency_slo": latency_slo,
             "hierarchical_busbw": hier,
@@ -1002,6 +1114,35 @@ def emit(path: str, quick: bool = False,
     if dd["speedup"] < DDP_OVERLAP_MIN_RATIO:
         print(f"# PERF DDP OVERLAP FLOOR: speedup {dd['speedup']} < "
               f"required {DDP_OVERLAP_MIN_RATIO}", flush=True)
+        return 1
+    dh = b["ddp_hook_overlap"]
+    print(f"# perf: ddp hook overlap step "
+          f"{dh['post_backward']['step_virtual_ms']:.3f}ms post-backward "
+          f"-> {dh['hooked']['step_virtual_ms']:.3f}ms hooked virtual "
+          f"({dh['step_speedup']:.2f}x), overlap fraction "
+          f"{dh['overlap_fraction']:.3f}, fault cell "
+          f"fb={dh['fault_cell']['fallbacks']} "
+          f"mismatches={dh['fault_cell']['payload_mismatches']}",
+          flush=True)
+    if not dh["losses_identical"]:
+        print("# PERF DDP HOOK: hooked losses diverged from the "
+              "flat/post-backward paths (byte-identity broken)",
+              flush=True)
+        return 1
+    if not dh["fault_losses_identical"]:
+        print("# PERF DDP HOOK: mid-backward rail kill broke the "
+              "ddp_hooked campaign cell (divergence or invariant "
+              "violation)", flush=True)
+        return 1
+    if dh["overlap_fraction"] < HOOK_MIN_OVERLAP_FRACTION:
+        print(f"# PERF DDP HOOK FLOOR: overlap_fraction "
+              f"{dh['overlap_fraction']} < required "
+              f"{HOOK_MIN_OVERLAP_FRACTION}", flush=True)
+        return 1
+    if dh["step_speedup"] <= HOOK_MIN_STEP_SPEEDUP:
+        print(f"# PERF DDP HOOK FLOOR: step_speedup {dh['step_speedup']} "
+              f"not strictly > {HOOK_MIN_STEP_SPEEDUP} (hooked must beat "
+              f"the post-backward overlapped path end-to-end)", flush=True)
         return 1
     sv = b["serving_tp"]
     print(f"# perf: serving TP {sv['tokens_per_s']:.0f} tokens/s virtual "

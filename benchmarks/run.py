@@ -154,6 +154,35 @@ def overlap_rows(fast: bool = True):
     return out
 
 
+def hooked_rows(fast: bool = True):
+    """Issue-as-produced DDP smoke: the ``ddp_hooked`` workload (each
+    gradient bucket's allreduce fired the moment the modeled backward
+    produces its last leaf, DESIGN.md §13) under a clean fabric, a NIC
+    death and a striped rail kill landing mid-backward. Byte-identity
+    vs the clean post-backward reference is checked inside the
+    workload (any divergence counts as a payload mismatch and fails
+    the invariants). Runs on BOTH datapaths — the workload rides
+    JcclWorld, which honours ``fast`` — with a short step count so the
+    legacy event chain stays affordable in a smoke pass."""
+    from repro.scenarios import SCENARIOS, run_scenario
+
+    names = ("baseline_clean", "sender_nic_down", "rail_kill_striped")
+    out = []
+    for name in names:
+        r = run_scenario(SCENARIOS[name], workload="ddp_hooked",
+                         steps=3, fast=fast)
+        lat_us = max(r.fallback_latencies) * 1e6 if r.fallback_latencies \
+            else float("nan")
+        status = "ok" if r.ok else _violation_status(r.violations)
+        peaks = "/".join(str(p) for p in r.step_peak_works)
+        out.append((f"hooked/{r.scenario}", lat_us,
+                    f"{status}|fb={r.fallbacks}|"
+                    f"ovl={r.overlap_fraction:.3f}|peaks={peaks}|"
+                    f"mismatch={r.payload_mismatches}|"
+                    f"events={r.event_count}"))
+    return out
+
+
 def serving_rows(fast: bool = True):
     """Fault-tolerant TP serving smoke: the continuous-batching serving
     workload (per-step logits/activation gathers + MoE all-to-alls,
@@ -254,6 +283,46 @@ def class_latency_markdown(fast: bool = True):
                 f"{s.get('p99_virtual_ms', '-')} |")
     lines += ["",
               f"**{n_viol} invariant violations in mixed-class cells.**",
+              ""]
+    return "\n".join(lines), n_viol
+
+
+def ddp_overlap_markdown(fast: bool = True):
+    """Per-step peak-in-flight gradient works table for the CI job
+    summary (published alongside the campaign matrix): the overlapped
+    DDP workloads — post-backward ``ddp_bucketed`` and
+    issue-as-produced ``ddp_hooked`` — under a clean fabric and two
+    fault scenarios, one row per cell with ``TrainRun.step_peak_works``
+    spelled out step by step, so an overlap regression (peaks
+    collapsing toward 1) is visible in the summary, not just in the
+    ``ddp_hook_overlap`` bench gate. Returns ``(markdown,
+    n_violations)``."""
+    from repro.scenarios import SCENARIOS, run_scenario
+
+    names = ("baseline_clean", "sender_nic_down", "link_flap_train")
+    lines = [
+        "## DDP overlap (peak in-flight gradient works per step)",
+        "",
+        "| scenario | workload | peak works by step | overlap fraction "
+        "| status |",
+        "|---|---|---|---|---|",
+    ]
+    n_viol = 0
+    for workload in ("ddp_bucketed", "ddp_hooked"):
+        for name in names:
+            r = run_scenario(SCENARIOS[name], workload=workload,
+                             fast=fast)
+            n_viol += len(r.violations)
+            peaks = " ".join(str(p) for p in r.step_peak_works) or "-"
+            ovl = (f"{r.overlap_fraction:.3f}"
+                   if workload == "ddp_hooked" else "-")
+            status = ("ok" if r.ok else "**VIOLATED**: "
+                      + "; ".join(v.replace("|", "/")
+                                  for v in r.violations[:2]))
+            lines.append(f"| {name} | {workload} | {peaks} | {ovl} | "
+                         f"{status} |")
+    lines += ["",
+              f"**{n_viol} invariant violations in DDP overlap cells.**",
               ""]
     return "\n".join(lines), n_viol
 
@@ -386,8 +455,9 @@ def main(smoke: bool = False, bench_json: str = None,
     if matrix_md:
         md, n_viol = matrix_markdown(fast=fast)
         cl_md, cl_viol = class_latency_markdown(fast=fast)
-        md = md + "\n" + cl_md
-        n_viol += cl_viol
+        dd_md, dd_viol = ddp_overlap_markdown(fast=fast)
+        md = md + "\n" + cl_md + "\n" + dd_md
+        n_viol += cl_viol + dd_viol
         with open(matrix_md, "w") as f:
             f.write(md)
         print(md)
@@ -401,6 +471,8 @@ def main(smoke: bool = False, bench_json: str = None,
              lambda: campaign_rows(smoke=True, fast=fast)),
             ("overlap (concurrent collectives + bucketed DDP)",
              lambda: overlap_rows(fast=fast)),
+            ("hooked (issue-as-produced DDP)",
+             lambda: hooked_rows(fast=fast)),
             ("serving (fault-tolerant TP inference)",
              lambda: serving_rows(fast=fast)),
             ("mixed (latency classes under faults)",

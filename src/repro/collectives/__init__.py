@@ -14,4 +14,4 @@ from .channel import (PRIORITY_CLASSES, Channel,        # noqa: F401
 from .endpoint import RankEndpoint                      # noqa: F401
 from .world import (DEFAULT_MAX_CHUNK_BYTES,            # noqa: F401
                     CollectiveError, JcclWorld, Work,
-                    build_world)
+                    aligned_bucket_bounds, build_world)

@@ -60,6 +60,28 @@ class CollectiveError(RuntimeError):
     """A collective could not complete (crash-stop abort or timeout)."""
 
 
+def aligned_bucket_bounds(total_elems: int, itemsize: int,
+                          target_bytes: int, *, max_chunk_bytes: int,
+                          n_ranks: int) -> List[Tuple[int, int]]:
+    """Element ranges of size-targeted buckets whose boundaries are
+    ALIGNED to the engine's allreduce bucket granularity
+    (``max_chunk_bytes * n_ranks`` worth of elements).
+
+    Standalone (no :class:`JcclWorld` needed) so the launch dry-runs can
+    compute leaf->bucket schedules for trillion-parameter pytrees from
+    shapes alone; :meth:`JcclWorld.aligned_bucket_bounds` delegates here
+    and remains the in-world entry point. ``target_bytes=0`` means one
+    flat bucket.
+    """
+    if not target_bytes:
+        return [(0, total_elems)]
+    align = max(1, max_chunk_bytes // itemsize) * n_ranks
+    target = max(1, target_bytes // itemsize)
+    step = max(align, (target // align) * align)
+    return [(i, min(i + step, total_elems))
+            for i in range(0, total_elems, step)] or [(0, 0)]
+
+
 def _describe_works(works: Sequence["Work"], limit: int = 6) -> str:
     """Attribution string for error messages: which collectives (cid,
     kind, latency class) were still pending when the batch died."""
@@ -100,6 +122,10 @@ class Work:
         #: latency class every chunk of this collective dispatches under
         self.priority: str = getattr(coll, "priority", "bulk")
         self._t_launch = world.sim.now
+        #: virtual time this work was launched (the backward-hook
+        #: overlap metrics read it to place the first bucket issue
+        #: relative to the modeled backward compute window)
+        self.issue_time: float = self._t_launch
         #: virtual seconds from launch to the first completion
         #: observation (``wait_all`` polls per event, so for waited
         #: works this is the actual completion latency)
@@ -417,16 +443,13 @@ class JcclWorld:
         sequential flat path for every dtype, floats included. This is
         the single source of truth for that alignment: the DDP trainer,
         the overlap campaign workload and the byte-identity tests all
-        derive their bucket bounds here. ``target_bytes=0`` means one
-        flat bucket.
+        derive their bucket bounds here (the launch dry-runs use the
+        module-level :func:`aligned_bucket_bounds`, which this method
+        delegates to). ``target_bytes=0`` means one flat bucket.
         """
-        if not target_bytes:
-            return [(0, total_elems)]
-        align = max(1, self.max_chunk_bytes // itemsize) * self.n_ranks
-        target = max(1, target_bytes // itemsize)
-        step = max(align, (target // align) * align)
-        return [(i, min(i + step, total_elems))
-                for i in range(0, total_elems, step)] or [(0, 0)]
+        return aligned_bucket_bounds(total_elems, itemsize, target_bytes,
+                                     max_chunk_bytes=self.max_chunk_bytes,
+                                     n_ranks=self.n_ranks)
 
     # -- async public API -----------------------------------------------
     # every launcher takes ``priority`` — the latency class

@@ -1,14 +1,18 @@
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512")
-
 """Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
 cell on 512 placeholder host devices and extract the roofline terms.
 
 MUST be run as a module: ``PYTHONPATH=src python -m repro.launch.dryrun
 --arch starcoder2-3b --shape train_4k --mesh pod``; ``--all`` sweeps every
 cell and writes JSON results for EXPERIMENTS.md.
+
+The XLA_FLAGS export below must run before ANY jax initialization —
+importing this module from an already-initialized process will not get
+the 512 placeholder devices.
 """
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
 
 import argparse      # noqa: E402
 import json          # noqa: E402
@@ -367,6 +371,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
 
 def main() -> None:
+    """CLI entry point: run one (arch x shape x mesh) cell, or ``--all``
+    to sweep the full matrix and write JSON for EXPERIMENTS.md."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None,

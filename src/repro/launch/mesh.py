@@ -12,6 +12,8 @@ import jax
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    """The assigned 256-chip pod mesh — ('data', 'model') 16x16, or
+    ('pod', 'data', 'model') 2x16x16 with ``multi_pod``."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
@@ -29,6 +31,8 @@ def dp_axes(mesh) -> tuple:
 
 
 def axis_size(mesh, name) -> int:
+    """Total extent of ``name`` — an axis name, or a tuple/list of
+    names (product of extents); absent axes count as 1."""
     if isinstance(name, (tuple, list)):
         out = 1
         for n in name:

@@ -144,6 +144,8 @@ def opt_specs(cfg: ModelConfig, opt_shape, params_spec, mesh):
 
 
 def batch_specs(cfg: ModelConfig, mesh, batch_size: int) -> Dict[str, P]:
+    """Input-batch shardings: batch dim over the DP axes (replicated
+    when ``batch_size`` does not divide), sequence dim replicated."""
     dp = dp_axes(mesh)
     dp = dp if batch_size % axis_size(mesh, dp) == 0 else ()
     specs = {"tokens": P(dp or None, None)}
@@ -210,6 +212,8 @@ def cache_specs(cfg: ModelConfig, cache_shape, mesh, batch_size: int):
 
 
 def to_named(tree_specs, mesh):
+    """Wrap a pytree of ``PartitionSpec``s into ``NamedSharding``s on
+    ``mesh`` (the form ``jax.jit``'s in_shardings/out_shardings take)."""
     return jax.tree_util.tree_map(
         lambda s: NamedSharding(mesh, s), tree_specs,
         is_leaf=lambda x: isinstance(x, P))

@@ -12,6 +12,8 @@ from repro.optim import AdamWConfig, adamw_update
 
 
 def make_train_step(model: LM, opt_cfg: AdamWConfig):
+    """One fused train step: loss + grads (``value_and_grad``) and the
+    AdamW update, returning (params, opt_state, metrics)."""
     def train_step(params, opt_state, batch):
         loss, grads = jax.value_and_grad(model.loss)(params, batch)
         new_params, new_state, metrics = adamw_update(
@@ -22,6 +24,8 @@ def make_train_step(model: LM, opt_cfg: AdamWConfig):
 
 
 def make_prefill_step(model: LM):
+    """Prefill step over a token batch (plus optional VLM image
+    embeddings); returns the model's (logits, cache)."""
     def prefill_step(params, batch):
         return model.prefill(params, batch["tokens"],
                              img_embeds=batch.get("image_embeds"))
@@ -29,6 +33,8 @@ def make_prefill_step(model: LM):
 
 
 def make_decode_step(model: LM):
+    """Single-token decode step against a live KV cache; returns the
+    model's (logits, cache)."""
     def serve_step(params, cache, tokens):
         return model.decode_step(params, cache, tokens)
     return serve_step

@@ -135,6 +135,15 @@ class RunResult:
     # denominator of the policy comparison — rounds/work_elapsed stays
     # meaningful whether a run was deadline- or round-capped
     work_elapsed: float = 0.0
+    # DDP workload extras: the unrounded per-step loss trajectory (the
+    # ddp_hooked workload compares it byte-for-byte against a clean
+    # post-backward reference), the mean comm/compute overlap fraction
+    # (issue-as-produced mode only), and the per-step peak of
+    # concurrently in-flight gradient works — surfaced in the campaign
+    # matrix markdown so overlap regressions show up in CI summaries
+    loss_trace: Optional[List[float]] = None
+    overlap_fraction: float = 0.0
+    step_peak_works: List[int] = field(default_factory=list)
 
     @property
     def ok(self) -> bool:
@@ -164,6 +173,8 @@ class RunResult:
             self.policy,
             tuple(self.decision_log),
             round(self.work_elapsed, 9),
+            round(self.overlap_fraction, 9),
+            tuple(self.step_peak_works),
         )
 
 
@@ -700,7 +711,9 @@ def run_ddp(scenario: Scenario, seed: int = 0, steps: int = 6,
             bucket_bytes: Optional[int] = None,
             min_concurrency: int = 0,
             workload_name: str = "ddp",
-            policy: Optional[str] = None) -> RunResult:
+            policy: Optional[str] = None,
+            issue_as_produced: bool = False,
+            layer_compute_s: float = 0.0) -> RunResult:
     """Short DDP training run under the scenario's fault timeline.
     ``bucket_bytes`` overrides the trainer's gradient bucketing (None
     keeps the default); ``min_concurrency`` declares an overlap floor
@@ -708,7 +721,9 @@ def run_ddp(scenario: Scenario, seed: int = 0, steps: int = 6,
     force >= 4 concurrent gradient-bucket works per step). ``policy``
     attaches a fault-policy engine that drives the trainer's §4.4
     post-fallback checkpointing (the trainer saves its REAL state when
-    the engine decides "checkpoint" — no second store)."""
+    the engine decides "checkpoint" — no second store).
+    ``issue_as_produced`` / ``layer_compute_s`` enable the
+    backward-hook overlap path (the ``ddp_hooked`` workload)."""
     from repro.collectives import build_world
     from repro.train.trainer import RestartNeeded, build_smoke_trainer
 
@@ -724,7 +739,9 @@ def run_ddp(scenario: Scenario, seed: int = 0, steps: int = 6,
     ckpt_dir = tempfile.mkdtemp(prefix="repro-campaign-ckpt-")
     trainer = build_smoke_trainer(cluster, libs, steps=steps,
                                   ckpt_dir=ckpt_dir, seed=seed,
-                                  bucket_bytes=bucket_bytes)
+                                  bucket_bytes=bucket_bytes,
+                                  issue_as_produced=issue_as_produced,
+                                  layer_compute_s=layer_compute_s)
     trainer.policy = engine
     t0 = cluster.sim.now
     scheduled = [False]
@@ -758,6 +775,9 @@ def run_ddp(scenario: Scenario, seed: int = 0, steps: int = 6,
         losses = [l for _, _, l in run.timeline]
         if not all(np.isfinite(losses)):
             result.payload_mismatches += 1
+        result.loss_trace = losses
+        result.overlap_fraction = run.overlap_fraction
+        result.step_peak_works = list(run.step_peak_works)
     except RestartNeeded:
         result.aborted = True
     finally:
@@ -1038,6 +1058,67 @@ def run_ddp_bucketed(scenario: Scenario, seed: int = 0, steps: int = 4,
                    min_concurrency=4, workload_name="ddp_bucketed")
 
 
+# Clean post-backward reference loss trajectories for the ddp_hooked
+# byte-identity check, keyed by every knob that can change the numbers
+# (same build-once pattern as _SERVING_FIXTURE: one reference run per
+# configuration, shared across campaign cells).
+_HOOKED_REFERENCE: Dict[Tuple, List[float]] = {}
+
+
+def _hooked_reference(seed: int, steps: int, n_ranks: int,
+                      bucket_bytes: int) -> List[float]:
+    """Unrounded loss trajectory of a CLEAN post-backward bucketed run
+    with the same world geometry as ``run_ddp_hooked`` — the reference
+    the hooked (and faulted) trajectories must match byte-for-byte."""
+    from repro.collectives import build_world
+    from repro.train.trainer import build_smoke_trainer
+
+    key = (seed, steps, n_ranks, bucket_bytes)
+    hit = _HOOKED_REFERENCE.get(key)
+    if hit is not None:
+        return hit
+    cluster, libs, _world = build_world(
+        n_ranks=n_ranks, probe_interval=5e-4, max_chunk_bytes=1 << 14,
+        strict_order=False, fast=True, channels=2)
+    ckpt_dir = tempfile.mkdtemp(prefix="repro-hooked-ref-")
+    try:
+        trainer = build_smoke_trainer(cluster, libs, steps=steps,
+                                      ckpt_dir=ckpt_dir, seed=seed,
+                                      bucket_bytes=bucket_bytes)
+        run = trainer.train(_world)
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+    ref = [l for _, _, l in run.timeline]
+    _HOOKED_REFERENCE[key] = ref
+    return ref
+
+
+def run_ddp_hooked(scenario: Scenario, seed: int = 0, steps: int = 4,
+                   n_ranks: int = 2, fast: bool = True,
+                   channels: int = 2, bucket_bytes: int = 1 << 16,
+                   layer_compute_s: float = 2e-4) -> RunResult:
+    """Issue-as-produced DDP (DESIGN.md §13): the smoke trainer fires
+    each gradient bucket's allreduce the moment the modeled backward
+    produces its last leaf, while later segments still compute. The
+    run's unrounded loss trajectory is compared byte-for-byte against a
+    CLEAN post-backward reference — any divergence (including under a
+    mid-backward rail kill, which must only DELAY the bucket it hit)
+    counts as a payload mismatch and fails the invariants. Defaults to
+    2 channels so single-rail scenarios stay maskable mid-backward."""
+    result = run_ddp(scenario, seed=seed, steps=steps, n_ranks=n_ranks,
+                     fast=fast, channels=channels,
+                     max_chunk_bytes=1 << 14, bucket_bytes=bucket_bytes,
+                     min_concurrency=4, workload_name="ddp_hooked",
+                     issue_as_produced=True,
+                     layer_compute_s=layer_compute_s)
+    if result.completed and result.loss_trace is not None:
+        ref = _hooked_reference(seed, steps, n_ranks, bucket_bytes)
+        if (len(result.loss_trace) != len(ref)
+                or any(a != b for a, b in zip(result.loss_trace, ref))):
+            result.payload_mismatches += 1
+    return result
+
+
 WORKLOADS: Dict[str, Callable[..., RunResult]] = {
     "pingpong": run_pingpong,
     "allreduce": run_allreduce,
@@ -1047,6 +1128,7 @@ WORKLOADS: Dict[str, Callable[..., RunResult]] = {
     "all_to_all": run_alltoall,
     "ddp": run_ddp,
     "ddp_bucketed": run_ddp_bucketed,
+    "ddp_hooked": run_ddp_hooked,
     "serving": run_serving,
     "mixed": run_mixed,
 }

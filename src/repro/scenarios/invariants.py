@@ -194,7 +194,7 @@ def check_invariants(result: RunResult, scenario: Scenario) -> List[str]:
         # time; the authored 30ms recovery gaps fall past the traffic)
         if (scenario.expect_recovery
                 and result.workload not in ("ddp", "ddp_bucketed",
-                                            "serving")
+                                            "ddp_hooked", "serving")
                 and result.recoveries < 1):
             v.append("traffic never returned to the default NIC")
     else:

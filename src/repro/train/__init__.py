@@ -2,4 +2,5 @@
 (bulk-class gradient collectives), straggler mitigation, and
 fault-injected end-to-end runs."""
 
+from .backward import BackwardScheduler                   # noqa: F401
 from .trainer import DDPTrainer, TrainerConfig, TrainRun  # noqa: F401

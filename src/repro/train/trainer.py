@@ -41,6 +41,8 @@ from repro.models import build_model
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.optim.compress import int8_compress, int8_decompress
 
+from .backward import BackwardScheduler
+
 
 @dataclasses.dataclass
 class TrainerConfig:
@@ -77,6 +79,24 @@ class TrainerConfig:
     # optimizer state, so quantization residue is deferred, not lost.
     hierarchical: bool = False
     compress_dcn: bool = True
+    # Gradient-work wait budget (virtual seconds). A bucket that is
+    # still pending past this deadline fails with a CollectiveError
+    # naming the stuck bucket indices and cids.
+    comm_timeout_s: float = 300.0
+    # Backward-hook overlap (DESIGN.md §13, docs/overlap.md): issue
+    # each gradient bucket's allreduce the moment its last leaf is
+    # produced by the (modeled) backward pass, instead of after the
+    # whole backward. ``layer_compute_s`` is the virtual cost of ONE
+    # backward segment (head / per-layer row / embed — see
+    # BackwardScheduler); the trainer pumps the simulator by that much
+    # between segments, so in-flight buckets make progress UNDER the
+    # remaining backward and the overlap is measurable in virtual
+    # seconds. With ``layer_compute_s > 0`` the non-hooked paths charge
+    # the same total backward cost up front, so end-to-end virtual step
+    # times are comparable across modes. Defaults (False / 0.0) keep
+    # every existing path and timing unchanged.
+    issue_as_produced: bool = False
+    layer_compute_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -100,6 +120,20 @@ class TrainRun:
     # post-fallback saves and shrink-world events this run consumed
     policy_ckpts: int = 0
     policy_shrinks: int = 0
+    # backward-hook overlap accounting (issue-as-produced mode): mean
+    # fraction of the gradient-comm window that ran UNDER the modeled
+    # backward compute, the per-step fraction/first-issue series, the
+    # per-step virtual grad-phase duration (modeled compute + exposed
+    # comm — what the ddp_hook_overlap benchmark compares end-to-end),
+    # and the per-step peak of concurrently in-flight gradient works
+    # (surfaced in the campaign matrix markdown)
+    overlap_fraction: float = 0.0
+    step_overlap_fractions: List[float] = dataclasses.field(
+        default_factory=list)
+    first_issue_offsets: List[float] = dataclasses.field(
+        default_factory=list)
+    step_grad_times: List[float] = dataclasses.field(default_factory=list)
+    step_peak_works: List[int] = dataclasses.field(default_factory=list)
 
 
 class DDPTrainer:
@@ -137,6 +171,11 @@ class DDPTrainer:
         # share a dict). Lives beside the optimizer state for the whole
         # run — quantization residue carries across steps.
         self._dcn_fb: Dict[int, Dict] = {}
+        # cached leaf->bucket readiness schedule (issue-as-produced /
+        # modeled-compute modes); rebuilt when the world geometry or
+        # bucketing changes (e.g. across a restart)
+        self._bw_sched: Optional[BackwardScheduler] = None
+        self._bw_key: Optional[Tuple] = None
 
     # ------------------------------------------------------------------
     def _init_state(self):
@@ -168,15 +207,57 @@ class DDPTrainer:
         return world.aligned_bucket_bounds(total_elems, 4,
                                            self.tcfg.bucket_bytes)
 
+    def _backward_schedule(self, world: JcclWorld,
+                           total_elems: int) -> BackwardScheduler:
+        """Cached leaf->aligned-bucket readiness schedule, built from
+        the parameter pytree's SHAPES (``jax.eval_shape`` — no gradient
+        materialization) and this world's aligned bucket bounds."""
+        key = (world.n_ranks, world.max_chunk_bytes,
+               self.tcfg.bucket_bytes, total_elems)
+        if self._bw_key != key:
+            sds = jax.eval_shape(lambda k: self.model.init(k),
+                                 jax.ShapeDtypeStruct((2,), jnp.uint32))
+            sched = BackwardScheduler(
+                sds, self._grad_buckets(world, total_elems))
+            if sched.total_elems != total_elems:
+                raise ValueError(
+                    f"backward schedule covers {sched.total_elems} elems "
+                    f"but the flat gradient has {total_elems}")
+            self._bw_sched, self._bw_key = sched, key
+        return self._bw_sched
+
+    def _wait_grad_works(self, world: JcclWorld, works, idxs,
+                         bounds) -> None:
+        """Wait on gradient works with the ``comm_timeout_s`` budget;
+        on failure re-raise naming the stuck buckets (index, element
+        range, cid) so a wedged bucket is attributable at a glance."""
+        try:
+            world.wait_all(works, timeout=self.tcfg.comm_timeout_s)
+        except CollectiveError as e:
+            stuck = [f"bucket {i} [{bounds[i][0]}:{bounds[i][1]}) "
+                     f"cid={w.cid}"
+                     for i, w in zip(idxs, works)
+                     if w.exception() is not None]
+            raise CollectiveError(
+                f"gradient all-reduce did not complete within "
+                f"comm_timeout_s={self.tcfg.comm_timeout_s}s: "
+                + ("; ".join(stuck) if stuck else str(e))) from e
+
     def _allreduce_grads(self, world: JcclWorld, run: TrainRun,
                          grad_vecs: List[np.ndarray]) -> None:
         """All-reduce the per-rank gradient vectors, bucketed and (by
         default) overlapped: one async work per bucket, all waited
         before the optimizer step. Sequential mode (``overlap=False``)
         waits each bucket before issuing the next — the baseline the
-        ``ddp_overlap_speedup`` benchmark gates against."""
+        ``ddp_overlap_speedup`` benchmark gates against. With
+        ``issue_as_produced`` the buckets are instead launched
+        incrementally as the modeled backward produces them (see
+        :meth:`_allreduce_grads_hooked`); with ``layer_compute_s > 0``
+        but hooks off, the same total backward cost is charged up front
+        so virtual step times stay comparable across modes."""
+        tcfg = self.tcfg
         bounds = self._grad_buckets(world, grad_vecs[0].size)
-        if self.tcfg.hierarchical:
+        if tcfg.hierarchical:
             # two-tier path: one hierarchical collective per bucket,
             # each with its own persistent DCN feedback dict
             launch = [
@@ -189,18 +270,78 @@ class DDPTrainer:
             launch = [
                 (lambda vecs: world.allreduce_async(vecs, priority="bulk"))
                 for _ in bounds]
-        if self.tcfg.overlap:
+        if tcfg.issue_as_produced and tcfg.overlap:
+            sched = self._backward_schedule(world, grad_vecs[0].size)
+            self._allreduce_grads_hooked(world, run, grad_vecs, bounds,
+                                         launch, sched)
+            return
+        if tcfg.layer_compute_s > 0:
+            # post-backward baseline under the same compute model: the
+            # WHOLE backward is charged before the first bucket issues
+            sched = self._backward_schedule(world, grad_vecs[0].size)
+            world.sim.run(until=world.sim.now
+                          + sched.n_segments * tcfg.layer_compute_s)
+        if tcfg.overlap:
             # gradient buckets are explicitly BULK class: they should
             # pipeline at full busbw but yield the head of the dispatch
             # queues to latency-critical serving works (DESIGN.md §10)
             works = [go([v[lo:hi] for v in grad_vecs])
                      for go, (lo, hi) in zip(launch, bounds)]
             run.peak_works = max(run.peak_works, len(works))
-            world.wait_all(works, timeout=300.0)
+            run.step_peak_works.append(len(works))
+            self._wait_grad_works(world, works,
+                                  list(range(len(bounds))), bounds)
         else:
             run.peak_works = max(run.peak_works, 1)
-            for go, (lo, hi) in zip(launch, bounds):
-                go([v[lo:hi] for v in grad_vecs]).wait(300.0)
+            run.step_peak_works.append(1)
+            for i, (go, (lo, hi)) in enumerate(zip(launch, bounds)):
+                self._wait_grad_works(
+                    world, [go([v[lo:hi] for v in grad_vecs])], [i],
+                    bounds)
+
+    def _allreduce_grads_hooked(self, world: JcclWorld, run: TrainRun,
+                                grad_vecs: List[np.ndarray], bounds,
+                                launch, sched: BackwardScheduler) -> None:
+        """Issue-as-produced gradient sync: walk the backward segments
+        in production order (head, layers in reverse, embed), pump the
+        simulator by ``layer_compute_s`` of modeled compute per
+        segment — in-flight buckets progress DURING that compute — and
+        fire each bucket's allreduce the moment its last leaf lands.
+        Byte-identity with the flat/post-backward paths is structural:
+        the gradients are computed once by the unchanged jitted
+        backward, the bucket bounds are the same engine-aligned bounds,
+        and hooks only change WHEN each bucket's work is issued, never
+        its chunk bounds or ring order."""
+        tcfg = self.tcfg
+        sim = world.sim
+        t0 = sim.now
+        works, idxs = [], []
+        peak = 0
+        for seg in range(sched.n_segments):
+            if tcfg.layer_compute_s > 0:
+                sim.run(until=sim.now + tcfg.layer_compute_s)
+            for i in sched.ready_after(seg):
+                lo, hi = bounds[i]
+                works.append(launch[i]([v[lo:hi] for v in grad_vecs]))
+                idxs.append(i)
+            live = sum(1 for w in works if not w.done())
+            peak = max(peak, live)
+        t_bw_end = sim.now  # the modeled backward is fully charged here
+        run.peak_works = max(run.peak_works, peak)
+        run.step_peak_works.append(peak)
+        t_first = min((w.issue_time for w in works), default=t0)
+        self._wait_grad_works(world, works, idxs, bounds)
+        t_done = sim.now
+        # overlap fraction: share of the comm window [first issue ..
+        # all buckets done] that ran under the backward. A comm window
+        # fully hidden by compute (t_done <= t_bw_end) scores 1.0.
+        denom = t_done - t_first
+        frac = 1.0 if denom <= 0 else max(
+            0.0, min(1.0, (min(t_bw_end, t_done) - t_first) / denom))
+        run.step_overlap_fractions.append(frac)
+        run.first_issue_offsets.append(t_first - t0)
+        run.overlap_fraction = float(
+            np.mean(run.step_overlap_fractions))
 
     # ------------------------------------------------------------------
     def train(self, world: JcclWorld,
@@ -241,6 +382,7 @@ class DDPTrainer:
                 self._allreduce_grads(world, run, grad_vecs)
                 comm_t = self.cluster.sim.now - sim0
                 run.comm_time += comm_t
+                run.step_grad_times.append(comm_t)
 
                 mean_grads = unflatten(grad_vecs[0] / self.n)
                 state["params"], state["opt"], _ = adamw_update(
@@ -316,23 +458,32 @@ def build_smoke_trainer(cluster, libs, steps: int = 6, ckpt_dir: str =
                         "/tmp/repro-ckpt-smoke", seed: int = 0,
                         lr: float = 3e-3, bucket_bytes: Optional[int] = None,
                         overlap: bool = True, hierarchical: bool = False,
-                        compress_dcn: bool = True) -> DDPTrainer:
+                        compress_dcn: bool = True,
+                        issue_as_produced: bool = False,
+                        layer_compute_s: float = 0.0,
+                        comm_timeout_s: Optional[float] = None) -> DDPTrainer:
     """Campaign-engine / CI-smoke entry point: a DDP trainer over a tiny
     model that finishes a handful of steps in seconds. The fault-scenario
     campaign (repro.scenarios) drives this as its heaviest workload.
     ``bucket_bytes`` / ``overlap`` override the gradient-bucketing knobs
     (None keeps the TrainerConfig default); ``hierarchical`` /
     ``compress_dcn`` select the two-tier gradient sync on multi-pod
-    worlds."""
+    worlds; ``issue_as_produced`` / ``layer_compute_s`` enable the
+    backward-hook overlap path under the modeled per-segment compute
+    cost (DESIGN.md §13)."""
     from repro import configs as C
 
     model_cfg = C.smoke_config("gpt2-124m", n_layers=2, d_model=128,
                                n_heads=4, n_kv_heads=4, d_ff=512, vocab=512)
     kw = {} if bucket_bytes is None else {"bucket_bytes": bucket_bytes}
+    if comm_timeout_s is not None:
+        kw["comm_timeout_s"] = comm_timeout_s
     tcfg = TrainerConfig(steps=steps, ckpt_every=max(2, steps // 2),
                          lr=lr, ckpt_dir=ckpt_dir, seed=seed,
                          overlap=overlap, hierarchical=hierarchical,
-                         compress_dcn=compress_dcn, **kw)
+                         compress_dcn=compress_dcn,
+                         issue_as_produced=issue_as_produced,
+                         layer_compute_s=layer_compute_s, **kw)
     return DDPTrainer(cluster, libs, model_cfg, tcfg,
                       batch_per_rank=2, seq_len=32)
 
@@ -373,6 +524,7 @@ def resume_training(trainer: DDPTrainer, world: JcclWorld, rn: RestartNeeded,
         trainer._allreduce_grads(world, run, grad_vecs)
         comm_t = trainer.cluster.sim.now - sim0
         run.comm_time += comm_t
+        run.step_grad_times.append(comm_t)
         mean_grads = unflatten(grad_vecs[0] / trainer.n)
         state["params"], state["opt"], _ = adamw_update(
             state["params"], mean_grads, state["opt"], trainer.opt_cfg)

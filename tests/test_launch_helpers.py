@@ -1,0 +1,78 @@
+"""Launch-package helper coverage: mesh utilities and step builders.
+
+These helpers were previously exercised only indirectly through the
+full sharded-train tests; this file pins their contracts down directly
+(satellite of the backward-hook overlap PR).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as C
+from repro.launch.mesh import axis_size, dp_axes, make_debug_mesh
+from repro.launch.steps import (make_decode_step, make_prefill_step,
+                                make_train_step)
+from repro.models import build_model
+from repro.optim import AdamWConfig, adamw_init
+
+
+def test_debug_mesh_axes():
+    mesh = make_debug_mesh(1, 1)
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.shape["data"] == 1 and mesh.shape["model"] == 1
+
+
+def test_dp_axes_single_pod():
+    mesh = make_debug_mesh(1, 1)
+    assert dp_axes(mesh) == ("data",)
+
+
+def test_axis_size_contract():
+    mesh = make_debug_mesh(1, 1)
+    assert axis_size(mesh, "data") == 1
+    assert axis_size(mesh, "model") == 1
+    # absent axes count as 1, tuples multiply extents
+    assert axis_size(mesh, "pod") == 1
+    assert axis_size(mesh, ("pod", "data")) == 1
+    assert axis_size(mesh, ()) == 1
+    assert axis_size(mesh, ["data", "model"]) == 1
+
+
+def _smoke_model():
+    cfg = C.smoke_config("gpt2-124m")
+    return cfg, build_model(cfg)
+
+
+def test_make_train_step_runs_and_updates():
+    cfg, model = _smoke_model()
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=1e-3)
+    opt_state = adamw_init(params, opt_cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                                cfg.vocab)
+    step = jax.jit(make_train_step(model, opt_cfg))
+    new_params, new_state, metrics = step(params, opt_state,
+                                          {"tokens": tokens})
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_state["step"]) == 1
+    # the update actually moved the weights
+    before = jax.tree_util.tree_leaves(params)[0]
+    after = jax.tree_util.tree_leaves(new_params)[0]
+    assert not np.array_equal(np.asarray(before), np.asarray(after))
+
+
+def test_make_prefill_then_decode_step():
+    cfg, model = _smoke_model()
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab)
+    prefill = make_prefill_step(model)
+    logits, cache = prefill(params, {"tokens": tokens})
+    # prefill returns the last-position logits only
+    assert logits.shape == (2, 1, cfg.vocab)
+    decode = make_decode_step(model)
+    step_logits, cache = decode(params, cache, tokens[:, -1:])
+    assert step_logits.shape[0] == 2
+    assert step_logits.shape[-1] == cfg.vocab
+    assert np.isfinite(np.asarray(step_logits)).all()

@@ -21,8 +21,8 @@ REPO = Path(__file__).resolve().parent.parent
 
 #: packages whose public API must be fully documented
 AUDITED = ("src/repro/collectives", "src/repro/core",
-           "src/repro/optim", "src/repro/policy", "src/repro/serving",
-           "src/repro/train")
+           "src/repro/launch", "src/repro/optim", "src/repro/policy",
+           "src/repro/serving", "src/repro/train")
 
 
 def _public(name: str) -> bool:
